@@ -1,0 +1,95 @@
+"""Paper Figures 1-5: comparisons, recall, edges, VMeasure, leader sweep."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (built_graph, dataset, emit,
+                               ground_truth_neighbors)
+from repro.graph import (affinity_clustering, neighbor_recall,
+                         two_hop_threshold_recall, v_measure)
+
+ALGOS = ("allpair", "lsh_nonstars", "lsh_stars", "sorting_nonstars",
+         "sorting_stars")
+DATASETS = ("mnist", "wikipedia", "amazon2m", "random1b")
+
+
+def fig1_comparisons():
+    """Fig 1: number of pairwise similarity comparisons per algorithm."""
+    for ds in DATASETS:
+        for algo in ALGOS:
+            g, dt = built_graph(algo, ds)
+            comps = g.stats["comparisons"]
+            us = dt * 1e6 / max(comps, 1)
+            emit(f"fig1/{ds}/{algo}/comparisons", us, comps)
+
+
+def fig2_recall():
+    """Fig 2: near(est)-neighbour coverage.
+
+    LSH variants: fraction of sim>=0.5 neighbours found (1 hop non-Stars,
+    2 hops Stars, with the 0.495 'relaxed' edge threshold variant).
+    SortingLSH variants: fraction of exact 100-NN found (1/2 hops) plus the
+    1.01-approximate relaxation.
+    """
+    for ds in ("mnist", "amazon2m"):
+        queries, knn, sims = ground_truth_neighbors(ds, k=100)
+        thr_truth = [np.flatnonzero(sims[q] >= 0.5) for q in queries]
+
+        for algo, hops in (("lsh_nonstars", 1), ("lsh_stars", 2)):
+            g, dt = built_graph(algo, ds, r1=0.495, r=25)  # paper's R=25 min
+            for min_w, tag in ((0.5, "strict"), (0.495, "relaxed")):
+                if hops == 1:
+                    rec = neighbor_recall(g.threshold(min_w), queries,
+                                          thr_truth, hops=1)
+                else:
+                    rec = two_hop_threshold_recall(g, queries, thr_truth,
+                                                   min_edge_w=min_w)
+                emit(f"fig2/{ds}/{algo}/sim0.5_{tag}",
+                     dt * 1e6 / max(g.stats["comparisons"], 1),
+                     round(rec, 4))
+
+        approx = [np.flatnonzero(sims[q] >= 0.99 * sims[q][knn[i][-1]])
+                  for i, q in enumerate(queries)]
+        for algo, hops in (("sorting_nonstars", 1), ("sorting_stars", 2)):
+            g, dt = built_graph(algo, ds)
+            rec = neighbor_recall(g, queries, knn, hops=hops, k_cap=100)
+            rec_a = neighbor_recall(g, queries, approx, hops=hops, k_cap=100)
+            us = dt * 1e6 / max(g.stats["comparisons"], 1)
+            emit(f"fig2/{ds}/{algo}/100nn_exact", us, round(rec, 4))
+            emit(f"fig2/{ds}/{algo}/100nn_1.01approx", us, round(rec_a, 4))
+
+
+def fig3_edges():
+    """Fig 3: edges with similarity >= 0.5 (0.495 relaxed) per LSH algo."""
+    for ds in ("mnist", "amazon2m"):
+        for algo in ("lsh_nonstars", "lsh_stars"):
+            g, dt = built_graph(algo, ds, r1=0.495)
+            emit(f"fig3/{ds}/{algo}/edges_ge0.5", 0.0,
+                 int(g.threshold(0.5).num_edges))
+            emit(f"fig3/{ds}/{algo}/edges_ge0.495", 0.0, int(g.num_edges))
+
+
+def fig4_vmeasure():
+    """Fig 4: VMeasure of average-Affinity clustering per graph builder."""
+    for ds, k in (("mnist", 10), ("amazon2m", 47)):
+        _, labels = dataset(ds)
+        for algo in ALGOS:
+            g, dt = built_graph(algo, ds)
+            pred = affinity_clustering(g.degree_cap(10), target_clusters=k)
+            v = v_measure(labels, pred)["v"]
+            emit(f"fig4/{ds}/{algo}/vmeasure", dt * 1e6, round(v, 4))
+
+
+def fig5_leader_sweep():
+    """Appendix D.4: effect of the number of leaders s (1/5/10/25)."""
+    ds = "mnist"
+    queries, knn, _ = ground_truth_neighbors(ds, k=100)
+    for s in (1, 5, 10, 25):
+        g, dt = built_graph("sorting_stars", ds, leaders=s)
+        rec = neighbor_recall(g, queries, knn, hops=2, k_cap=100)
+        emit(f"fig5/{ds}/sorting_stars_s{s}/comparisons",
+             dt * 1e6 / max(g.stats["comparisons"], 1),
+             g.stats["comparisons"])
+        emit(f"fig5/{ds}/sorting_stars_s{s}/100nn_recall", 0.0,
+             round(rec, 4))

@@ -1,0 +1,51 @@
+"""Roofline summary rows from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and emits one
+row per (arch x shape) single-pod cell: the three roofline terms, the
+dominant one, and the MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun")
+
+
+def load_cells(mesh="pod16x16"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_table():
+    cells = load_cells()
+    if not cells:
+        emit("roofline/missing_artifacts", 0.0,
+             "run python -m repro.launch.dryrun --all first")
+        return
+    for rec in cells:
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        if rec["status"] == "SKIP":
+            emit(name + "/status", 0.0, "SKIP(full-attention@500k)")
+            continue
+        if rec["status"] != "OK" or "roofline" not in rec:
+            emit(name + "/status", 0.0, rec["status"])
+            continue
+        r = rec["roofline"]
+        dom = rec["dominant"]
+        step_s = max(r.values())
+        emit(name + "/compute_s", 0.0, f"{r['compute_s']:.3e}")
+        emit(name + "/memory_s", 0.0, f"{r['memory_s']:.3e}")
+        emit(name + "/collective_s", 0.0, f"{r['collective_s']:.3e}")
+        emit(name + "/dominant", step_s * 1e6, dom)
+        if rec.get("model_flops_ratio"):
+            emit(name + "/model_flops_ratio", 0.0,
+                 round(rec["model_flops_ratio"], 4))

@@ -1,0 +1,28 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  See benchmarks/common.py for
+the container-scale dataset mapping and benchmarks/tables.py for the
+calibrated tera-scale model.
+"""
+
+import time
+
+
+def main() -> None:
+    from benchmarks import figures, roofline, tables
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    figures.fig1_comparisons()
+    figures.fig2_recall()
+    figures.fig3_edges()
+    figures.fig4_vmeasure()
+    figures.fig5_leader_sweep()
+    tables.table12_runtime()
+    tables.table3_scaling()
+    roofline.roofline_table()
+    print(f"# total benchmark wall time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Train the Grale-style two-tower similarity model (Appendix C.2/D.3)
+and use it as the Stars similarity measure.
+
+Pipeline (the paper's Amazon2m learned-similarity setting):
+  1. generate an Amazon2m-like corpus (dense embedding + co-purchase sets),
+  2. draw training pairs from LSH candidate buckets (as in the paper:
+     "trained on all pairs which fall into an LSH bucket"),
+  3. train the shared-tower + Hadamard-product + pairwise-feature model,
+  4. build the graph with measure='learned' and compare edge purity vs the
+     mixture measure.
+
+  PYTHONPATH=src python examples/train_embedder.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HashFamilyConfig, StarsConfig, build_graph
+from repro.data import products_like_points
+from repro.similarity.learned import LearnedSimilarity, TwoTowerConfig
+
+
+def lsh_candidate_pairs(feats, labels, n_pairs=4000, seed=0):
+    """Sample training pairs from SimHash buckets + random negatives."""
+    from repro.core import lsh as lsh_lib
+    from repro.core.hashing import fold_words
+    rs = np.random.RandomState(seed)
+    words = lsh_lib.sketch(feats, lsh_lib.HashFamilyConfig("simhash", m=8),
+                           rep_seed=1)
+    key = np.asarray(lsh_lib.bucket_key(words,
+                                        lsh_lib.HashFamilyConfig("simhash")))
+    order = np.argsort(key)
+    i_list, j_list = [], []
+    for a, b in zip(order[:-1], order[1:]):
+        if key[a] == key[b]:
+            i_list.append(a); j_list.append(b)
+    i = np.array(i_list)[:n_pairs // 2]
+    j = np.array(j_list)[:n_pairs // 2]
+    # balance with sampled same-category positives + random negatives
+    # (the paper's training task is same-category prediction; candidate
+    # buckets alone are positive-starved at this reduced scale)
+    k = n_pairs - i.size
+    by_class = {c: np.flatnonzero(labels == c) for c in np.unique(labels)}
+    i_extra = rs.randint(0, feats.n, k)
+    j_rand = rs.randint(0, feats.n, k)
+    j_pos = np.array([rs.choice(by_class[labels[ii]]) for ii in i_extra])
+    j_extra = np.where(rs.rand(k) < 0.5, j_pos, j_rand)
+    i = np.concatenate([i, i_extra])
+    j = np.concatenate([j, j_extra])
+    y = (labels[i] == labels[j]).astype(np.float32)
+    return i, j, y
+
+
+def main():
+    feats, labels = products_like_points(n=2000, d=32, classes=10, nnz=12,
+                                         dup_frac=0.2, seed=7)
+    model = LearnedSimilarity(TwoTowerConfig(in_dim=32, tower_hidden=64,
+                                             embed_dim=32, head_hidden=64))
+    params = model.init(jax.random.key(0))
+    i_all, j_all, y_all = lsh_candidate_pairs(feats, labels)
+    print(f"training pairs: {i_all.size} ({y_all.mean():.0%} positive)")
+
+    @jax.jit
+    def step(params, i, j, y):
+        def loss(p):
+            return model.loss(p, feats.take(i), feats.take(j), y)
+        l, g = jax.value_and_grad(loss)(params)
+        return jax.tree.map(lambda p_, g_: p_ - 0.05 * g_, params, g), l
+
+    rs = np.random.RandomState(1)
+    for epoch in range(16):
+        perm = rs.permutation(i_all.size)
+        for a in range(0, i_all.size, 256):
+            sel = perm[a:a + 256]
+            params, l = step(params, jnp.asarray(i_all[sel]),
+                             jnp.asarray(j_all[sel]),
+                             jnp.asarray(y_all[sel]))
+        print(f"epoch {epoch}: loss {float(l):.4f}")
+
+    apply_fn = lambda fa, fb: model.pairwise(params, fa, fb)
+    base = StarsConfig(mode="sorting", scoring="stars",
+                       family=HashFamilyConfig("mixture", m=16),
+                       measure="mixture", r=10, window=64, leaders=10,
+                       degree_cap=20, seed=3, score_chunk=2)
+    g_mix = build_graph(feats, base)
+    # keep all scored candidates and rely on the degree cap: the learned
+    # logits rank pairs; top-k per node keeps the most confident edges.
+    g_lrn = build_graph(feats,
+                        dataclasses.replace(base, measure="learned"),
+                        learned_apply=apply_fn)
+    for name, g in (("mixture", g_mix), ("learned", g_lrn)):
+        intra = float(np.mean(labels[g.src] == labels[g.dst])) \
+            if g.num_edges else 0.0
+        print(f"{name:8s}: edges={g.num_edges:,} "
+              f"comparisons={g.stats['comparisons']:,} "
+              f"intra-class edge fraction={intra:.3f}")
+    print("note: on this synthetic corpus the hand-tuned mixture measure is "
+          "already near-optimal, so the learned measure does not beat it — "
+          "the paper's gains appear when raw measures are weak (Fig 4); the "
+          "example demonstrates the full train->score->build workflow.")
+
+
+if __name__ == "__main__":
+    main()

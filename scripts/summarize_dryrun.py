@@ -1,0 +1,92 @@
+"""Summarize artifacts/dryrun into the EXPERIMENTS.md tables."""
+
+import glob
+import json
+import os
+import sys
+
+ART = "artifacts/dryrun"
+
+
+def load(mesh):
+    cells = {}
+    for p in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        r = json.load(open(p))
+        cells[(r["arch"], r["shape"])] = r
+    return cells
+
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["phi4-mini-3.8b", "qwen3-8b", "tinyllama-1.1b", "gemma3-1b",
+         "olmoe-1b-7b", "deepseek-v3-671b", "llama-3.2-vision-90b",
+         "seamless-m4t-large-v2", "rwkv6-3b", "jamba-1.5-large-398b"]
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table():
+    cells = load("pod16x16")
+    print("| arch | shape | compute s | memory s | collective s | dominant |"
+          " frac-of-peak | MODEL/HLO flops |")
+    print("|---|---|---|---|---|---|---|---|")
+    rows = []
+    for a in ARCHS:
+        for s in SHAPE_ORDER:
+            r = cells.get((a, s))
+            if r is None:
+                continue
+            if r["status"] == "SKIP":
+                print(f"| {a} | {s} | — | — | — | SKIP (full-attn @500k) | — | — |")
+                continue
+            if "roofline" not in r:
+                print(f"| {a} | {s} | ? | ? | ? | {r['status']} | | |")
+                continue
+            t = r["roofline"]
+            dom = r["dominant"]
+            step = max(t.values())
+            frac = t["compute_s"] / step if step > 0 else 0
+            ratio = r.get("model_flops_ratio", 0)
+            rows.append((a, s, t, dom, frac, ratio, r))
+            print(f"| {a} | {s} | {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+                  f"| {t['collective_s']:.3e} | {dom} | {frac:.3f} "
+                  f"| {ratio:.3f} |")
+    return rows
+
+
+def memory_table(mesh):
+    cells = load(mesh)
+    print(f"\n### {mesh} per-device memory (GiB)\n")
+    print("| arch | shape | args | temps | output | compile s |")
+    print("|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPE_ORDER:
+            r = cells.get((a, s))
+            if r is None or r["status"] == "SKIP":
+                continue
+            print(f"| {a} | {s} | {fmt_bytes(r.get('argument_size_in_bytes'))}"
+                  f" | {fmt_bytes(r.get('temp_size_in_bytes'))}"
+                  f" | {fmt_bytes(r.get('output_size_in_bytes'))}"
+                  f" | {r.get('compile_s', '-')} |")
+
+
+def pick_hillclimb(rows):
+    print("\n### hillclimb candidates")
+    worst = min(rows, key=lambda r: r[4])
+    coll = max(rows, key=lambda r: r[2]["collective_s"]
+               / max(r[2]["compute_s"], 1e-12))
+    print(f"worst compute fraction: {worst[0]} x {worst[1]} "
+          f"(frac {worst[4]:.4f}, dom {worst[3]})")
+    print(f"most collective-bound: {coll[0]} x {coll[1]} "
+          f"(coll/compute = "
+          f"{coll[2]['collective_s']/max(coll[2]['compute_s'],1e-12):.1f})")
+
+
+if __name__ == "__main__":
+    rows = roofline_table()
+    memory_table("pod16x16")
+    memory_table("pod2x16x16")
+    pick_hillclimb(rows)

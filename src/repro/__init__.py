@@ -1,0 +1,3 @@
+"""repro: Stars tera-scale graph building + multi-pod JAX LM substrate."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,70 @@
+"""Architecture registry: the 10 assigned configs + the paper's own presets.
+
+Each module exposes:
+  CONFIG   — the exact assigned full-scale ModelConfig
+  REDUCED  — a same-family reduced config for CPU smoke tests
+  ARCH     — ArchSpec metadata (supported shapes, optimizer dtype, notes)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+ARCH_NAMES = [
+    "phi4-mini-3.8b",
+    "qwen3-8b",
+    "tinyllama-1.1b",
+    "gemma3-1b",
+    "olmoe-1b-7b",
+    "deepseek-v3-671b",
+    "llama-3.2-vision-90b",
+    "seamless-m4t-large-v2",
+    "rwkv6-3b",
+    "jamba-1.5-large-398b",
+]
+
+SHAPES = {
+    # name: (seq_len, global_batch, step kind)
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    supports_long: bool           # sub-quadratic attention for long_500k
+    moment_dtype: str = "float32" # bf16 for the >90B configs (memory budget)
+    notes: str = ""
+
+
+def _module(name: str):
+    return importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def get_reduced(name: str):
+    return _module(name).REDUCED
+
+
+def get_arch(name: str) -> ArchSpec:
+    return _module(name).ARCH
+
+
+def cells():
+    """All (arch, shape) dry-run cells, with skip markers per the shape sheet."""
+    for arch in ARCH_NAMES:
+        spec = get_arch(arch)
+        for shape in SHAPES:
+            skip = None
+            if shape == "long_500k" and not spec.supports_long:
+                skip = "pure full-attention arch: long_500k needs sub-quadratic attention"
+            yield arch, shape, skip

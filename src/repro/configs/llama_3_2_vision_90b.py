@@ -1,0 +1,30 @@
+"""llama-3.2-vision-90b [vlm] — hf:meta-llama/Llama-3.2-11B-Vision family
+(unverified tier).
+
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256; every 5th layer is
+a cross-attention image layer (80 self-attn + 20 cross-attn = 100).  The
+vision frontend is a STUB per the shape sheet: input_specs() provides
+precomputed patch embeddings (modality_tokens x d_model).
+"""
+
+from repro.configs import ArchSpec
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b", kind="vlm",
+    n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab=128256, head_dim=128,
+    rope_theta=500_000.0, cross_attn_every=5, modality_tokens=1600,
+    cache_shard="seq",
+)
+
+REDUCED = ModelConfig(
+    name="llama-vision-smoke", kind="vlm",
+    n_layers=5, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=160, vocab=512, head_dim=16,
+    cross_attn_every=5, modality_tokens=16, remat=False, cache_shard="seq",
+)
+
+ARCH = ArchSpec(name=CONFIG.name, supports_long=False,
+                moment_dtype="bfloat16",
+                notes="backbone only; vision tower stubbed per shape sheet")

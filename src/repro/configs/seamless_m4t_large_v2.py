@@ -1,0 +1,30 @@
+"""seamless-m4t-large-v2 [audio] — arXiv:2308.11596 (hf).
+
+Enc-dec backbone: 24 encoder + 24 decoder layers, d_model=1024 16H (kv=16)
+d_ff=8192 vocab=256206.  The speech/text modality frontend is a STUB per the
+shape sheet: input_specs() provides precomputed frame embeddings
+(B, S, d_model) consumed by the bidirectional encoder; the decoder
+cross-attends the encoder memory.
+"""
+
+from repro.configs import ArchSpec
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", kind="audio",
+    n_layers=24, encoder_layers=24,
+    d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab=256206, head_dim=64,
+    modality_tokens=0,  # encoder length follows the shape's seq_len
+)
+
+REDUCED = ModelConfig(
+    name="seamless-smoke", kind="audio",
+    n_layers=2, encoder_layers=2,
+    d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=160, vocab=512, head_dim=16, remat=False,
+)
+
+ARCH = ArchSpec(name=CONFIG.name, supports_long=False,
+                notes="enc-dec; decode shapes lower the decoder serve step "
+                      "with precomputed encoder memory")

@@ -1,0 +1,13 @@
+"""Stars core: the paper's contribution as a composable JAX module."""
+
+from repro.core.lsh import HashFamilyConfig
+from repro.core.spanner import Graph
+from repro.core.stars import StarsConfig, allpairs_graph, build_graph
+
+__all__ = [
+    "HashFamilyConfig",
+    "Graph",
+    "StarsConfig",
+    "allpairs_graph",
+    "build_graph",
+]

@@ -1,0 +1,67 @@
+"""Counter-based integer hashing primitives.
+
+The paper's implementation draws i.i.d. hash functions from classic LSH
+families (SimHash / MinHash).  On TPU we want *counter-based*, stateless
+hashing so that (a) every repetition r and hash slot m is reproducible from a
+single root seed, and (b) restarts / elastic re-sharding re-derive identical
+sketches without any stored RNG state.
+
+All functions operate on ``uint32`` and rely on JAX's wrapping modular
+arithmetic for unsigned integer types.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# murmur3 / splitmix-style 32-bit finalizer constants.
+_C1 = jnp.uint32(0x85EBCA6B)
+_C2 = jnp.uint32(0xC2B2AE35)
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def mix32(x: jax.Array) -> jax.Array:
+    """murmur3 fmix32: a high-quality 32-bit bijective mixer."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 13)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_u32(x: jax.Array, seed: jax.Array | int) -> jax.Array:
+    """Hash ``x`` (any integer array) with a ``uint32`` seed."""
+    x = jnp.asarray(x, jnp.uint32)
+    seed = jnp.asarray(seed, jnp.uint32)
+    return mix32(x ^ (seed * _GOLDEN))
+
+
+def hash_combine(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Order-dependent combination of two uint32 hash words."""
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    return mix32(a ^ (b + _GOLDEN + (a << 6) + (a >> 2)))
+
+
+def fold_words(words: jax.Array) -> jax.Array:
+    """Fold a trailing axis of uint32 words into a single uint32 digest.
+
+    Used to derive a *global sort key* from a multi-word sketch: equal
+    sketches always fold to equal digests, so LSH buckets stay contiguous
+    after a single-word sort (see DESIGN.md §3).
+    """
+    words = jnp.asarray(words, jnp.uint32)
+    out = jnp.full(words.shape[:-1], jnp.uint32(0x811C9DC5))
+    for i in range(words.shape[-1]):
+        out = hash_combine(out, words[..., i])
+    return out
+
+
+def uniform01_from_u32(bits: jax.Array) -> jax.Array:
+    """Map uint32 bits to floats in the open interval (0, 1)."""
+    bits = jnp.asarray(bits, jnp.uint32)
+    # 2**-32 scaling; offset by 0.5ulp to stay strictly inside (0,1).
+    return (bits.astype(jnp.float32) + 0.5) * jnp.float32(2.0**-32)

@@ -1,0 +1,171 @@
+"""Locality-sensitive hash families (paper §2, §3, Appendix B/D.2).
+
+Families implemented:
+  * **SimHash** [13] for cosine/angular similarity: h(x) = sign(<x, z>),
+    z ~ N(0, I).  Pr[h(x) = h(y)] = 1 - theta_{x,y}/pi.
+  * **MinHash** [12] for Jaccard similarity over sets:
+    h(A) = argmin_{u in A} r_u.  Pr[h(A) = h(B)] = |A n B| / |A u B|.
+  * **Weighted MinHash** via maximally-consistent (exponential-race) sampling
+    [33, Moulton-Jiang], the variant the paper prescribes for non-integer
+    weights: h(x) = argmin_u  -log(r_u) / w_u.
+  * **Mixture** of SimHash and MinHash positions (paper D.2, Amazon2m): each
+    of the M hash slots is randomly assigned to one of the two base families.
+
+Counter-based determinism: hash slot (rep, m) derives its randomness from
+``hash_u32(slot_id, seed)`` so that sketches are reproducible across restarts
+and shards without communicating RNG state (DESIGN.md §3).
+
+Sketch representation: every family emits an ``(n, M) uint32`` matrix — one
+word per hash slot.  SimHash additionally exposes a packed form (bits packed
+into ceil(M/32) words) used by the Pallas kernel and by the Hamming
+prefilter optimization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.similarity.measures import PointFeatures
+
+
+@dataclasses.dataclass(frozen=True)
+class HashFamilyConfig:
+    """Configuration of the sketching family.
+
+    Attributes:
+      kind: 'simhash' | 'minhash' | 'wminhash' | 'mixture'.
+      m: sketch dimension M — number of hash slots per repetition
+         (paper D.2: M=12..16 SimHash, M=3 weighted MinHash, M=30 SortingLSH).
+      mixture_sim_prob: for kind='mixture', probability a slot is SimHash.
+    """
+
+    kind: str = "simhash"
+    m: int = 16
+    mixture_sim_prob: float = 0.5
+
+
+def _simhash_projection(key: jax.Array, d: int, m: int,
+                        dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, (d, m), dtype)
+
+
+def simhash_bits(x: jax.Array, proj: jax.Array) -> jax.Array:
+    """(n, d) x (d, m) -> (n, m) bool sign bits."""
+    return (x @ proj) > 0
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack (n, m) bool -> (n, ceil(m/32)) uint32 words (little-endian bits)."""
+    n, m = bits.shape
+    n_words = (m + 31) // 32
+    pad = n_words * 32 - m
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    b = bits.reshape(n, n_words, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1).astype(jnp.uint32)
+
+
+def hamming_pairwise(packed_a: jax.Array, packed_b: jax.Array) -> jax.Array:
+    """Pairwise Hamming distance between packed sketches.
+
+    packed_a: (..., A, w) uint32;  packed_b: (..., B, w) -> (..., A, B) int32.
+    Used by the beyond-paper Hamming prefilter (EXPERIMENTS.md §Perf).
+    """
+    x = packed_a[..., :, None, :] ^ packed_b[..., None, :, :]
+    # popcount via bit tricks on uint32.
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    x = (x * jnp.uint32(0x01010101)) >> 24
+    return jnp.sum(x, axis=-1).astype(jnp.int32)
+
+
+def minhash_words(set_idx: jax.Array, set_mask: jax.Array,
+                  seeds: jax.Array) -> jax.Array:
+    """Unweighted MinHash: (n, nnz) sets x (m,) seeds -> (n, m) uint32.
+
+    h_s(A) = min_{u in A} mix32(u ^ seed_s); empty sets hash to 0xFFFFFFFF.
+    """
+    vals = hashing.hash_u32(set_idx[:, :, None],
+                            seeds[None, None, :])          # (n, nnz, m)
+    vals = jnp.where(set_mask[:, :, None], vals, jnp.uint32(0xFFFFFFFF))
+    return jnp.min(vals, axis=1)
+
+
+def weighted_minhash_words(set_idx: jax.Array, set_w: jax.Array,
+                           set_mask: jax.Array, seeds: jax.Array) -> jax.Array:
+    """Moulton-Jiang exponential-race weighted MinHash [33].
+
+    key_u = -log(r_u) / w_u with r_u consistent across points; the winning
+    *element id* is the hash word.  Collision probability equals the
+    probability-Jaccard similarity, the measure the paper adopts for
+    real-valued weights.
+    """
+    r = hashing.uniform01_from_u32(
+        hashing.hash_u32(set_idx[:, :, None], seeds[None, None, :]))
+    w = jnp.maximum(set_w[:, :, None], 1e-12)
+    race = -jnp.log(r) / w                                   # (n, nnz, m)
+    race = jnp.where(set_mask[:, :, None], race, jnp.inf)
+    win = jnp.argmin(race, axis=1)                           # (n, m)
+    won_ids = jnp.take_along_axis(set_idx, win, axis=1).astype(jnp.uint32)
+    any_valid = jnp.any(set_mask, axis=1)[:, None]
+    return jnp.where(any_valid, won_ids, jnp.uint32(0xFFFFFFFF))
+
+
+def sketch(features: PointFeatures, cfg: HashFamilyConfig, *,
+           rep_seed: jax.Array | int, d: Optional[int] = None) -> jax.Array:
+    """Compute one repetition's sketch: (n, M) uint32 hash words.
+
+    ``rep_seed`` distinguishes repetitions (paper: R independent draws of h).
+    """
+    rep_seed = jnp.asarray(rep_seed, jnp.uint32)
+    m = cfg.m
+    if cfg.kind == "simhash":
+        key = jax.random.key(0)
+        key = jax.random.fold_in(key, rep_seed.astype(jnp.int32))
+        proj = _simhash_projection(key, features.dense.shape[-1], m,
+                                   features.dense.dtype)
+        return simhash_bits(features.dense, proj).astype(jnp.uint32)
+    if cfg.kind == "minhash":
+        seeds = hashing.hash_u32(jnp.arange(m, dtype=jnp.uint32), rep_seed)
+        return minhash_words(features.set_idx, features.set_mask, seeds)
+    if cfg.kind == "wminhash":
+        seeds = hashing.hash_u32(jnp.arange(m, dtype=jnp.uint32), rep_seed)
+        return weighted_minhash_words(
+            features.set_idx, features.set_w, features.set_mask, seeds)
+    if cfg.kind == "mixture":
+        # Slot s is SimHash with prob mixture_sim_prob, else MinHash (D.2).
+        key = jax.random.key(1)
+        key = jax.random.fold_in(key, rep_seed.astype(jnp.int32))
+        kc, kp = jax.random.split(key)
+        coin = jax.random.uniform(kc, (m,)) < cfg.mixture_sim_prob
+        proj = _simhash_projection(kp, features.dense.shape[-1], m,
+                                   features.dense.dtype)
+        sim = simhash_bits(features.dense, proj).astype(jnp.uint32)
+        seeds = hashing.hash_u32(jnp.arange(m, dtype=jnp.uint32), rep_seed)
+        mh = minhash_words(features.set_idx, features.set_mask, seeds)
+        # Reduce MinHash words to 1 bit for a fair bit-mixture (paper mixes
+        # *bits* of the two hashes).
+        mh_bit = mh & jnp.uint32(1)
+        sim_bit = sim & jnp.uint32(1)
+        return jnp.where(coin[None, :], sim_bit, mh_bit)
+    raise ValueError(f"unknown hash family kind: {cfg.kind!r}")
+
+
+def bucket_key(words: jax.Array, cfg: HashFamilyConfig) -> jax.Array:
+    """Fold a sketch into a single uint32 *bucket id* (LSH mode, Stars 1).
+
+    Equal sketches -> equal ids; distinct sketches collide w.p. ~2^-32,
+    and any such collision is caught later by the same-bucket mask.
+    """
+    if cfg.kind in ("simhash", "mixture"):
+        # Bit-valued words: pack for a denser key, then fold.
+        packed = pack_bits(words.astype(bool))
+        return hashing.fold_words(packed)
+    return hashing.fold_words(words)

@@ -1,0 +1,401 @@
+"""The Stars graph-building algorithms (paper §3, listings *Stars 1* / *Stars 2*).
+
+Four algorithm variants, matching the paper's experimental grid (§5):
+
+  mode="lsh",     scoring="stars"    -> LSH + Stars        (Stars 1)
+  mode="lsh",     scoring="allpairs" -> LSH + non-Stars    (baseline)
+  mode="sorting", scoring="stars"    -> SortingLSH + Stars (Stars 2)
+  mode="sorting", scoring="allpairs" -> SortingLSH + non-Stars (baseline)
+
+plus the brute-force ``allpairs_graph`` (the paper's *AllPair*).
+
+Each repetition r of R:
+  1. sketch the points with a fresh draw from the hash family,
+  2. sort + window (core/windows.py) — LSH buckets or SortingLSH blocks,
+  3. sample ``s`` random leaders per window (Stars) or take all pairs
+     (non-Stars),
+  4. score leader x member similarity tiles on the MXU (Pallas
+     ``leader_score`` kernel on TPU; fused jnp path on CPU), masked by
+     validity / self / same-bucket, and emit edges.
+
+The *number of similarity comparisons* — the paper's headline efficiency
+metric (Fig. 1) — is counted exactly as the number of unmasked scored pairs.
+
+Beyond-paper optimization (EXPERIMENTS.md §Perf): an optional *Hamming
+prefilter* reuses packed SimHash bits to discard pairs whose estimated angle
+is far above the threshold BEFORE the expensive measure (learned / Jaccard /
+mixture) is evaluated, cutting full comparisons further at equal recall.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lsh as lsh_lib
+from repro.core import windows as win_lib
+from repro.core.spanner import Graph
+from repro.kernels import ops as kernel_ops
+from repro.similarity.measures import PointFeatures, pairwise_similarity
+
+
+@dataclasses.dataclass(frozen=True)
+class StarsConfig:
+    """Configuration for one graph build.
+
+    Attributes mirror the paper's notation:
+      mode:      'lsh' (Stars 1) or 'sorting' (Stars 2 / SortingLSH).
+      scoring:   'stars' (s random leaders) or 'allpairs' (non-Stars baseline).
+      family:    hash family config (kind + sketch dimension M).
+      measure:   similarity measure name (similarity/measures.py).
+      r:         number of repetitions / sketches R (paper: 25/100/400).
+      window:    W — SortingLSH window size, or the LSH bucket-size cap.
+      leaders:   s — leaders per window (paper: 1/5/10/25).
+      r1:        edge threshold (threshold spanners); None emits all scored.
+      degree_cap:keep only the k heaviest edges per node (paper: 250).
+      hamming_prefilter_bits / max_dist: beyond-paper prefilter (see module
+                 docstring); disabled when bits == 0.
+      score_chunk: windows scored per lax.map step (memory knob).
+      max_edges_per_rep: device->host compaction bound per repetition.
+      seed:      root seed; every repetition folds its index into it.
+    """
+
+    mode: str = "sorting"
+    scoring: str = "stars"
+    family: lsh_lib.HashFamilyConfig = lsh_lib.HashFamilyConfig()
+    measure: str = "cosine"
+    r: int = 25
+    window: int = 250
+    leaders: int = 25
+    r1: Optional[float] = None
+    degree_cap: Optional[int] = 250
+    hamming_prefilter_bits: int = 0
+    hamming_prefilter_max: int = 0
+    mixture_alpha: float = 0.5
+    score_chunk: int = 8
+    max_edges_per_rep: int = 4_000_000
+    merge_every: int = 8
+    seed: int = 0
+
+
+# --------------------------------------------------------------------------- #
+# Per-repetition device program
+# --------------------------------------------------------------------------- #
+
+
+def _prefilter_sketch(features: PointFeatures, bits: int) -> jax.Array:
+    """Packed SimHash bits shared by all repetitions (prefilter only)."""
+    key = jax.random.key(0xBEEF)
+    proj = jax.random.normal(key, (features.dense.shape[-1], bits),
+                             features.dense.dtype)
+    return lsh_lib.pack_bits(lsh_lib.simhash_bits(features.dense, proj))
+
+
+def _score_tile(measure_fn, features: PointFeatures,
+                a_gid: jax.Array, b_gid: jax.Array,
+                measure_name: str = "") -> jax.Array:
+    """Similarity tile between gathered id tiles a_gid (..., A), b_gid (..., B)."""
+    fa = features.take(jnp.maximum(a_gid, 0))
+    fb = features.take(jnp.maximum(b_gid, 0))
+    if measure_name in ("cosine", "dot") and fa.dense is not None:
+        # Route through the fused leader_score kernel (Pallas on TPU,
+        # jnp reference on CPU): normalize+matmul+mask in one VMEM pass.
+        ok_a = jnp.ones(fa.dense.shape[:-1], bool)
+        ok_b = jnp.ones(fb.dense.shape[:-1], bool)
+        return kernel_ops.leader_score(
+            fa.dense, fb.dense, ok_a, ok_b,
+            normalized=measure_name == "cosine")
+    return measure_fn(fa, fb)
+
+
+def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
+                   prefilter, win):
+    """Stars 1 scoring: every member compares to its bucket's leader only.
+
+    O(n) comparisons per repetition — the paper's quadratic->linear win.
+    """
+    nw, w_sz = win.gid.shape
+    use_pref = cfg.hamming_prefilter_bits > 0
+
+    chunk = max(1, min(cfg.score_chunk * 8, nw))
+    nw_pad = ((nw + chunk - 1) // chunk) * chunk
+    pad = nw_pad - nw
+    pad_w = lambda x: jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    gid = pad_w(win.gid)
+    valid = pad_w(win.valid)
+    bucket = pad_w(win.bucket)
+    resh = lambda x: x.reshape((nw_pad // chunk, chunk) + x.shape[1:])
+
+    def score_chunk(args):
+        gid_c, valid_c, bucket_c = args                   # (chunk, W)
+        prev = jnp.concatenate(
+            [jnp.zeros_like(bucket_c[:, :1]) ^ jnp.uint32(0xA5A5A5A5),
+             bucket_c[:, :-1]], axis=1)
+        is_head = (bucket_c != prev)
+        is_head = is_head.at[:, 0].set(True)
+        slot_ids = jnp.arange(w_sz, dtype=jnp.int32)[None, :]
+        head_slot = jax.lax.cummax(
+            jnp.where(is_head, slot_ids, 0), axis=1)      # (chunk, W)
+        head_gid = jnp.take_along_axis(gid_c, head_slot, axis=1)
+
+        mask = valid_c & (head_slot != slot_ids)          # leaders skip self
+        pref_ops = jnp.zeros((), jnp.int32)
+        if use_pref:
+            pref_ops = jnp.sum(mask).astype(jnp.int32)
+            ham = lsh_lib.hamming_pairwise(
+                prefilter[jnp.maximum(head_gid, 0)][..., None, :],
+                prefilter[jnp.maximum(gid_c, 0)][..., None, :])[..., 0, 0]
+            mask &= ham <= cfg.hamming_prefilter_max
+        # row-wise member-vs-own-leader similarity: (chunk*W, 1, 1) tiles
+        a = head_gid.reshape(-1, 1)
+        b = gid_c.reshape(-1, 1)
+        sims = _score_tile(measure_fn, features, a, b,
+                           measure_name=cfg.measure)[:, 0, 0]
+        sims = sims.reshape(gid_c.shape).astype(jnp.float32)
+        comparisons = jnp.sum(mask).astype(jnp.int32)
+        emit = mask
+        if cfg.r1 is not None:
+            emit &= sims > cfg.r1
+        return (head_gid.reshape(-1), gid_c.reshape(-1),
+                sims.reshape(-1), emit.reshape(-1), comparisons, pref_ops)
+
+    outs = jax.lax.map(score_chunk, (resh(gid), resh(valid), resh(bucket)))
+    src, dst, wts, emit, comp_chunks, pref_chunks = outs
+    src, dst, wts, emit = (x.reshape(-1) for x in (src, dst, wts, emit))
+    total = src.shape[0]
+    max_e = min(cfg.max_edges_per_rep, total)
+    (sel,) = jnp.nonzero(emit, size=max_e, fill_value=0)
+    count = jnp.minimum(jnp.sum(emit), max_e)
+    out_valid = jnp.arange(max_e) < count
+    return dict(src=src[sel], dst=dst[sel], w=wts[sel], valid=out_valid,
+                count=count, emitted=jnp.sum(emit),
+                comparisons=comp_chunks, prefilter_ops=pref_chunks)
+
+
+def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
+                    measure_fn, prefilter, rep_index: jax.Array):
+    """One repetition: sketch, window, score; returns compacted candidates.
+
+    Returns dict with 'src','dst','w' of shape (max_edges,), 'count' valid
+    prefix length, 'comparisons' scalar, 'prefilter_ops' scalar.
+    """
+    rep_seed = jnp.asarray(rep_index, jnp.uint32) ^ jnp.uint32(cfg.seed)
+    key = jax.random.fold_in(jax.random.key(cfg.seed), rep_index)
+    k_tie, k_shift, k_lead = jax.random.split(key, 3)
+
+    words = lsh_lib.sketch(features, cfg.family, rep_seed=rep_seed)
+    n = words.shape[0]
+    tiebreak = jax.random.bits(k_tie, (n,), jnp.uint32)
+
+    if cfg.mode == "lsh":
+        bucket = lsh_lib.bucket_key(words, cfg.family)
+        win = win_lib.lsh_windows(bucket, window=cfg.window, tiebreak=tiebreak)
+    elif cfg.mode == "sorting":
+        win = win_lib.sorting_lsh_windows(
+            words, window=cfg.window, shift_key=k_shift, tiebreak=tiebreak)
+    else:
+        raise ValueError(f"unknown mode {cfg.mode!r}")
+
+    nw, w_sz = win.gid.shape
+    if cfg.mode == "lsh" and cfg.scoring == "stars":
+        # Paper Stars 1: ONE uniformly random leader per (sub-)bucket per
+        # repetition.  The sort tiebreak is a fresh random priority, so
+        # within-bucket order is uniform — the FIRST slot of every bucket
+        # run IS a uniform random leader.  Window-initial slots start a new
+        # run (= the paper's random sub-bucket split at the size cap).
+        return _rep_lsh_stars(cfg, features, measure_fn, prefilter, win)
+    if cfg.scoring == "stars":
+        leader_slot, leader_ok = win_lib.sample_leaders(
+            win, s=cfg.leaders, key=k_lead)
+    elif cfg.scoring == "allpairs":
+        leader_slot = jnp.broadcast_to(jnp.arange(w_sz, dtype=jnp.int32),
+                                       (nw, w_sz))
+        leader_ok = win.valid
+    else:
+        raise ValueError(f"unknown scoring {cfg.scoring!r}")
+    s = leader_slot.shape[1]
+
+    # Pad the window axis to a multiple of the scoring chunk.
+    chunk = max(1, min(cfg.score_chunk, nw))
+    nw_pad = ((nw + chunk - 1) // chunk) * chunk
+    pad = nw_pad - nw
+    pad_w = lambda x: jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    gid = pad_w(win.gid)
+    valid = pad_w(win.valid)
+    bucket_w = pad_w(win.bucket)
+    leader_slot = pad_w(leader_slot)
+    leader_ok = pad_w(leader_ok)
+
+    resh = lambda x: x.reshape((nw_pad // chunk, chunk) + x.shape[1:])
+    same_bucket_mode = cfg.mode == "lsh"
+    allpairs = cfg.scoring == "allpairs"
+    use_pref = cfg.hamming_prefilter_bits > 0
+
+    def score_chunk(args):
+        gid_c, valid_c, bucket_c, lslot_c, lok_c = args
+        lead_gid = jnp.take_along_axis(gid_c, lslot_c, axis=1)
+        lead_bucket = jnp.take_along_axis(bucket_c, lslot_c, axis=1)
+        mask = (lok_c[:, :, None] & valid_c[:, None, :])
+        # exclude self-comparison (slot identity, robust to duplicate gids)
+        mask &= lslot_c[:, :, None] != jnp.arange(w_sz, dtype=jnp.int32)[None, None, :]
+        if allpairs:
+            # count each unordered pair once: upper triangle
+            mask &= (lslot_c[:, :, None]
+                     < jnp.arange(w_sz, dtype=jnp.int32)[None, None, :])
+        if same_bucket_mode:
+            mask &= lead_bucket[:, :, None] == bucket_c[:, None, :]
+        pref_ops = jnp.zeros((), jnp.int32)
+        if use_pref:
+            pref_ops = jnp.sum(mask).astype(jnp.int32)
+            ham = lsh_lib.hamming_pairwise(
+                prefilter[jnp.maximum(lead_gid, 0)],
+                prefilter[jnp.maximum(gid_c, 0)])
+            mask &= ham <= cfg.hamming_prefilter_max
+        sims = _score_tile(measure_fn, features, lead_gid, gid_c,
+                           measure_name=cfg.measure)
+        # Per-chunk int32 counts; summed on host as Python ints so tera-scale
+        # comparison counts never overflow a device integer.
+        comparisons = jnp.sum(mask).astype(jnp.int32)
+        emit = mask
+        if cfg.r1 is not None:
+            emit &= sims > cfg.r1
+        src = jnp.broadcast_to(lead_gid[:, :, None], sims.shape)
+        dst = jnp.broadcast_to(gid_c[:, None, :], sims.shape)
+        return (src.reshape(-1), dst.reshape(-1),
+                sims.reshape(-1).astype(jnp.float32), emit.reshape(-1),
+                comparisons, pref_ops)
+
+    outs = jax.lax.map(score_chunk,
+                       (resh(gid), resh(valid), resh(bucket_w),
+                        resh(leader_slot), resh(leader_ok)))
+    src, dst, wts, emit, comp_chunks, pref_chunks = outs
+
+    src, dst, wts, emit = (x.reshape(-1) for x in (src, dst, wts, emit))
+    total = src.shape[0]
+    max_e = min(cfg.max_edges_per_rep, total)
+    (sel,) = jnp.nonzero(emit, size=max_e, fill_value=0)
+    count = jnp.minimum(jnp.sum(emit), max_e)
+    out_valid = jnp.arange(max_e) < count
+    return dict(src=src[sel], dst=dst[sel], w=wts[sel], valid=out_valid,
+                count=count, emitted=jnp.sum(emit),
+                comparisons=comp_chunks, prefilter_ops=pref_chunks)
+
+
+# --------------------------------------------------------------------------- #
+# Public builders
+# --------------------------------------------------------------------------- #
+
+
+def build_graph(features: PointFeatures, cfg: StarsConfig, *,
+                learned_apply: Optional[Callable] = None,
+                progress: Optional[Callable[[int], None]] = None) -> Graph:
+    """Run R repetitions of Stars/non-Stars and return the merged graph."""
+    measure_fn = pairwise_similarity(
+        cfg.measure, alpha=cfg.mixture_alpha, learned_apply=learned_apply)
+    prefilter = (_prefilter_sketch(features, cfg.hamming_prefilter_bits)
+                 if cfg.hamming_prefilter_bits > 0 else None)
+
+    rep_fn = jax.jit(functools.partial(
+        _rep_candidates, cfg, features, measure_fn, prefilter))
+
+    merged = Graph(features.n, np.empty(0, np.int64), np.empty(0, np.int64),
+                   np.empty(0, np.float32),
+                   {"comparisons": 0, "emitted": 0, "prefilter_ops": 0,
+                    "overflow_reps": 0})
+    pend_src, pend_dst, pend_w = [], [], []
+
+    def flush():
+        nonlocal merged, pend_src, pend_dst, pend_w
+        if not pend_src:
+            return
+        g = Graph.from_candidates(
+            features.n, np.concatenate(pend_src), np.concatenate(pend_dst),
+            np.concatenate(pend_w), np.ones(sum(len(x) for x in pend_src), bool))
+        merged = merged.merged_with(g)
+        if cfg.degree_cap is not None:
+            # Incremental capping is exact: an edge outside either endpoint's
+            # running top-k can never re-enter as the union only grows.
+            merged = merged.degree_cap(cfg.degree_cap)
+        pend_src, pend_dst, pend_w = [], [], []
+
+    stats = merged.stats
+    for rep in range(cfg.r):
+        out = jax.device_get(rep_fn(jnp.int32(rep)))
+        c = int(out["count"])
+        stats["comparisons"] += int(np.sum(np.asarray(out["comparisons"],
+                                                      np.int64)))
+        stats["emitted"] += int(out["emitted"])
+        stats["prefilter_ops"] += int(np.sum(np.asarray(out["prefilter_ops"],
+                                                        np.int64)))
+        if int(out["emitted"]) > c:
+            stats["overflow_reps"] += 1
+        pend_src.append(out["src"][:c])
+        pend_dst.append(out["dst"][:c])
+        pend_w.append(out["w"][:c])
+        if (rep + 1) % cfg.merge_every == 0:
+            flush()
+        if progress is not None:
+            progress(rep)
+    flush()
+    merged.stats.update(stats)
+    merged.stats["reps"] = cfg.r
+    return merged
+
+
+def allpairs_graph(features: PointFeatures, measure: str = "cosine", *,
+                   r1: Optional[float] = None,
+                   degree_cap: Optional[int] = None,
+                   block: int = 2048, mixture_alpha: float = 0.5,
+                   learned_apply: Optional[Callable] = None) -> Graph:
+    """Brute-force *AllPair* baseline: exact n^2/2 comparisons, blocked."""
+    measure_fn = pairwise_similarity(
+        measure, alpha=mixture_alpha, learned_apply=learned_apply)
+    n = features.n
+
+    @jax.jit
+    def block_sims(ia, ib):
+        fa = features.take(ia)
+        fb = features.take(ib)
+        return measure_fn(fa, fb)
+
+    g = Graph(n, np.empty(0, np.int64), np.empty(0, np.int64),
+              np.empty(0, np.float32), {"comparisons": n * (n - 1) // 2})
+    ids = np.arange(n)
+    pend = []
+    for a0 in range(0, n, block):
+        ia = jnp.arange(a0, min(a0 + block, n))
+        for b0 in range(a0, n, block):
+            ib = jnp.arange(b0, min(b0 + block, n))
+            sims = np.asarray(block_sims(ia, ib))
+            aa, bb = np.meshgrid(ids[a0:a0 + ia.shape[0]],
+                                 ids[b0:b0 + ib.shape[0]], indexing="ij")
+            keep = aa < bb
+            if r1 is not None:
+                keep &= sims > r1
+            pend.append((aa[keep], bb[keep], sims[keep]))
+        if len(pend) >= 64:
+            add = Graph.from_candidates(
+                n, np.concatenate([p[0] for p in pend]),
+                np.concatenate([p[1] for p in pend]),
+                np.concatenate([p[2] for p in pend]),
+                np.ones(sum(p[0].size for p in pend), bool))
+            g = g.merged_with(add)
+            if degree_cap is not None:
+                g = g.degree_cap(degree_cap)
+            pend = []
+    if pend:
+        add = Graph.from_candidates(
+            n, np.concatenate([p[0] for p in pend]),
+            np.concatenate([p[1] for p in pend]),
+            np.concatenate([p[2] for p in pend]),
+            np.ones(sum(p[0].size for p in pend), bool))
+        g = g.merged_with(add)
+    if degree_cap is not None:
+        g = g.degree_cap(degree_cap)
+    g.stats["comparisons"] = n * (n - 1) // 2
+    return g

@@ -1,0 +1,129 @@
+"""Sort-and-window machinery: TPU-native bucketing (DESIGN.md §3).
+
+The paper's CPU implementation buckets points in hash maps.  On TPU we make
+bucketing a *sort* followed by a reshape into fixed-size windows:
+
+  * **LSH mode (Stars 1)**: points sort by a folded bucket id with a random
+    tiebreak.  Buckets become contiguous runs; the reshape into windows of
+    size W implements the paper's "randomly partition large buckets into
+    size-constrained sub-buckets" verbatim (the random tiebreak IS the random
+    partition).  A same-bucket mask restores exact bucket semantics inside
+    each window.
+
+  * **SortingLSH mode (Stars 2)**: points sort lexicographically by their
+    (h_1, ..., h_M) hash words (exact, via lax.sort with num_keys=M), then a
+    random shift r ~ [W/2, W] offsets the window boundaries, exactly as in
+    the Stars 2 listing.
+
+Everything is fixed-shape: windows are (n_windows, W) slot grids with a
+validity mask, so the same jitted program serves every repetition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+INVALID = jnp.int32(-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Windows:
+    """Fixed-shape windowed view of one repetition's sorted order.
+
+    Attributes:
+      gid:    (n_windows, W) int32 original point ids; -1 on padding slots.
+      valid:  (n_windows, W) bool.
+      bucket: (n_windows, W) uint32 folded bucket id (LSH mode) or zeros
+              (sorting mode, where the window itself is the bucket).
+    """
+
+    gid: jax.Array
+    valid: jax.Array
+    bucket: jax.Array
+
+    @property
+    def n_windows(self) -> int:
+        return self.gid.shape[0]
+
+    @property
+    def window(self) -> int:
+        return self.gid.shape[1]
+
+
+def _scatter_to_slots(perm_gid: jax.Array, perm_bucket: jax.Array,
+                      offset: jax.Array, n_slots: int, w: int) -> Windows:
+    """Place the sorted sequence into padded slots starting at ``offset``."""
+    n = perm_gid.shape[0]
+    slots_gid = jnp.full((n_slots,), INVALID)
+    slots_bucket = jnp.zeros((n_slots,), jnp.uint32)
+    pos = offset + jnp.arange(n, dtype=jnp.int32)
+    slots_gid = slots_gid.at[pos].set(perm_gid)
+    slots_bucket = slots_bucket.at[pos].set(perm_bucket)
+    gid = slots_gid.reshape(-1, w)
+    return Windows(gid=gid, valid=gid >= 0, bucket=slots_bucket.reshape(-1, w))
+
+
+def lsh_windows(bucket_id: jax.Array, *, window: int,
+                tiebreak: jax.Array) -> Windows:
+    """Stars 1 bucketing: sort by (bucket_id, random tiebreak), window, mask.
+
+    Args:
+      bucket_id: (n,) uint32 folded sketch (lsh.bucket_key output).
+      window:    max bucket size W (the paper's bucket-size cap).
+      tiebreak:  (n,) uint32 random priorities (fresh per repetition) — makes
+                 the sub-bucket partition of oversized buckets uniformly random.
+    """
+    n = bucket_id.shape[0]
+    gids = jnp.arange(n, dtype=jnp.int32)
+    _, _, perm_gid = jax.lax.sort((bucket_id, tiebreak, gids), num_keys=2)
+    perm_bucket = bucket_id[perm_gid]
+    n_slots = ((n + window - 1) // window) * window
+    return _scatter_to_slots(perm_gid, perm_bucket, jnp.int32(0),
+                             n_slots, window)
+
+
+def sorting_lsh_windows(words: jax.Array, *, window: int,
+                        shift_key: jax.Array,
+                        tiebreak: jax.Array) -> Windows:
+    """Stars 2 windowing: exact lexicographic sort + random-shift blocks.
+
+    Args:
+      words:     (n, M) uint32 hash words (h_1..h_M per point).
+      window:    W (paper: W = 16k for k-ANN; W = 250 in experiments).
+      shift_key: PRNG key for the random shift r ~ [W/2, W].
+      tiebreak:  (n,) uint32 random priorities for tie-breaking equal keys.
+    """
+    n, m = words.shape
+    gids = jnp.arange(n, dtype=jnp.int32)
+    operands = tuple(words[:, i] for i in range(m)) + (tiebreak, gids)
+    out = jax.lax.sort(operands, num_keys=m + 1)
+    perm_gid = out[-1]
+    # Random first-block size r in [W/2, W] -> slot offset (W - r) in [0, W/2].
+    r = jax.random.randint(shift_key, (), window // 2, window + 1)
+    offset = (jnp.int32(window) - r).astype(jnp.int32)
+    n_slots = ((n + window - 1) // window + 1) * window
+    return _scatter_to_slots(perm_gid, jnp.zeros((n,), jnp.uint32),
+                             offset, n_slots, window)
+
+
+def sample_leaders(windows: Windows, *, s: int,
+                   key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Sample up to ``s`` uniformly random leaders per window.
+
+    Returns:
+      leader_slot: (n_windows, s) int32 slot index within the window.
+      leader_ok:   (n_windows, s) bool — False where a window had fewer than
+                   s valid points (excess leader slots are disabled).
+    """
+    nw, w = windows.gid.shape
+    pri = jax.random.uniform(key, (nw, w))
+    pri = jnp.where(windows.valid, pri, -1.0)
+    vals, slots = jax.lax.top_k(pri, s)
+    return slots.astype(jnp.int32), vals > 0.0

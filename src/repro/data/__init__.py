@@ -1,0 +1,13 @@
+from repro.data.synthetic import (
+    gaussian_mixture_points,
+    mnist_like_points,
+    products_like_points,
+    token_stream_batch,
+)
+
+__all__ = [
+    "gaussian_mixture_points",
+    "mnist_like_points",
+    "products_like_points",
+    "token_stream_batch",
+]

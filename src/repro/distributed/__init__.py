@@ -1,0 +1,7 @@
+from repro.distributed.activation_sharding import (
+    activation_sharding,
+    constrain,
+    set_activation_sharding,
+)
+
+__all__ = ["activation_sharding", "constrain", "set_activation_sharding"]

@@ -1,0 +1,21 @@
+from repro.graph.components import (
+    connected_components_jax,
+    connected_components_np,
+)
+from repro.graph.affinity import affinity_clustering
+from repro.graph.single_linkage import single_linkage_from_spanners
+from repro.graph.metrics import (
+    neighbor_recall,
+    two_hop_threshold_recall,
+    v_measure,
+)
+
+__all__ = [
+    "connected_components_jax",
+    "connected_components_np",
+    "affinity_clustering",
+    "single_linkage_from_spanners",
+    "neighbor_recall",
+    "two_hop_threshold_recall",
+    "v_measure",
+]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  simhash        — fused SimHash projection + sign + 32x bit-pack
+  leader_score   — fused Stars leader x window similarity + masking
+  flash_attention— blocked causal/GQA/sliding-window attention (LM substrate)
+
+Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
+(ref.py); tests sweep shapes/dtypes and assert allclose vs the oracle with
+interpret=True on CPU.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,62 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels lower natively; on CPU
+(this container) they run under ``interpret=True`` for correctness tests,
+while the *default* CPU path uses the pure-jnp reference so large CPU jobs
+(benchmarks, smoke tests) stay fast.  ``use_pallas`` overrides the choice.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import leader_score as _ls
+from repro.kernels import ref as _ref
+from repro.kernels import simhash as _sh
+
+
+def _pick(use_pallas: Optional[bool]) -> tuple[bool, bool]:
+    """Returns (use_pallas, interpret)."""
+    backend = jax.default_backend()
+    if use_pallas is None:
+        use_pallas = backend == "tpu"
+    interpret = backend != "tpu"
+    return use_pallas, interpret
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def simhash_packed(x: jax.Array, proj: jax.Array, *,
+                   use_pallas: Optional[bool] = None) -> jax.Array:
+    use, interp = _pick(use_pallas)
+    if use:
+        return _sh.simhash_packed(x, proj, interpret=interp)
+    return _ref.simhash_packed_ref(x, proj)
+
+
+@functools.partial(jax.jit, static_argnames=("normalized", "use_pallas"))
+def leader_score(leaders, members, leader_ok, member_ok, *,
+                 normalized: bool = True,
+                 use_pallas: Optional[bool] = None) -> jax.Array:
+    use, interp = _pick(use_pallas)
+    if use:
+        return _ls.leader_score(leaders, members, leader_ok, member_ok,
+                                normalized=normalized, interpret=interp)
+    return _ref.leader_score_ref(leaders, members, leader_ok, member_ok,
+                                 normalized=normalized)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "use_pallas"))
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None, scale: Optional[float] = None,
+              use_pallas: Optional[bool] = None) -> jax.Array:
+    use, interp = _pick(use_pallas)
+    if use:
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale, interpret=interp)
+    return _ref.mha_ref(q, k, v, causal=causal, window=window, scale=scale)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the functions here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.activation_sharding import constrain
+
+
+def simhash_packed_ref(x: jax.Array, proj: jax.Array) -> jax.Array:
+    """sign(x @ proj) bits packed little-endian into uint32 words.
+
+    x: (n, d) float; proj: (d, m) float, m % 32 == 0 -> (n, m//32) uint32.
+    """
+    bits = (x @ proj) > 0
+    n, m = bits.shape
+    b = bits.reshape(n, m // 32, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1).astype(jnp.uint32)
+
+
+def leader_score_ref(leaders: jax.Array, members: jax.Array,
+                     leader_ok: jax.Array, member_ok: jax.Array, *,
+                     normalized: bool = True) -> jax.Array:
+    """Masked leader x member similarity tiles.
+
+    leaders: (nw, s, d); members: (nw, w, d); masks (nw, s) / (nw, w).
+    Returns (nw, s, w) float32; masked entries are -inf.
+    Cosine when normalized=True (inputs l2-normalized inside), else dot.
+    """
+    if normalized:
+        nrm = lambda t: t / jnp.sqrt(
+            jnp.sum(t.astype(jnp.float32) ** 2, -1, keepdims=True) + 1e-12)
+        la, mb = nrm(leaders), nrm(members)
+    else:
+        la, mb = leaders.astype(jnp.float32), members.astype(jnp.float32)
+    sims = jnp.einsum("nsd,nwd->nsw", la, mb)
+    mask = leader_ok[:, :, None] & member_ok[:, None, :]
+    return jnp.where(mask, sims, -jnp.inf).astype(jnp.float32)
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True, window: int | None = None,
+            scale: float | None = None) -> jax.Array:
+    """Grouped-query attention oracle.
+
+    q: (b, hq, sq, d); k, v: (b, hkv, sk, d); hq % hkv == 0.
+    window=w keeps key j for query i iff i - w < j (sliding window).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    # Expand KV heads to the full query-head count.  GQA-shaped einsums force
+    # GSPMD to split the head axis into (hkv, g) sub-dims that rarely divide
+    # the TP axis (kv=4, g=8 vs 16): the measured result is head-replicated
+    # S^2 score tensors.  Repeating KV keeps one 16-way-shardable head axis;
+    # the O(hq*S*d) activation copy is noise next to the O(S^2) scores it
+    # de-replicates.  (The Pallas kernel on TPU needs no repeat — its index
+    # map reuses KV tiles per group.)
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    s = constrain(s, "dp", "tp", None, None)
+    sk = kf.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)   # right-aligned positions
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    o = constrain(o, "dp", "tp", None, None)
+    return o.astype(q.dtype)

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused SimHash projection + sign + bit-pack.
+
+The sketching phase of Stars evaluates h(x) = sign(<x, z>) for M projections
+per repetition — at tera-scale that is R * M * n * d MACs feeding a 1-bit
+result.  A naive XLA lowering materializes the (n, M) float product in HBM
+before comparing to zero; this kernel keeps the product tile in VMEM,
+applies the sign, packs 32 bits per uint32 word in-register, and writes only
+n * M / 32 words — a 32x cut in sketch-write bandwidth.
+
+Tiling: grid over rows (block_n) x hash words (block_m projections, a
+multiple of 32).  The (d,)-contraction runs on the MXU; block_n x block_m is
+MXU-aligned (128 x 128 by default).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _simhash_kernel(x_ref, proj_ref, out_ref, *, block_m: int):
+    x = x_ref[...].astype(jnp.float32)          # (bn, d)
+    p = proj_ref[...].astype(jnp.float32)       # (d, bm)
+    prod = jnp.dot(x, p, preferred_element_type=jnp.float32)  # MXU
+    bits = (prod > 0).astype(jnp.uint32)        # (bn, bm)
+    bn = bits.shape[0]
+    words = bits.reshape(bn, block_m // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    out_ref[...] = jnp.sum(words << shifts, axis=-1).astype(jnp.uint32)
+
+
+def simhash_packed(x: jax.Array, proj: jax.Array, *,
+                   block_n: int = 128, block_m: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    """sign(x @ proj) packed to uint32 words. proj.shape[1] % 32 == 0."""
+    n, d = x.shape
+    d2, m = proj.shape
+    assert d == d2 and m % 32 == 0, (x.shape, proj.shape)
+    block_m = min(block_m, m)
+    assert block_m % 32 == 0
+    block_n = min(block_n, n)
+    grid = (pl.cdiv(n, block_n), pl.cdiv(m, block_m))
+    return pl.pallas_call(
+        functools.partial(_simhash_kernel, block_m=block_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_m), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_m // 32), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m // 32), jnp.uint32),
+        interpret=interpret,
+    )(x, proj)

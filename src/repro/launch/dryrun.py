@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the appropriate step (train_step / prefill forward / decode
+     serve_step) with the full sharding plan and ShapeDtypeStruct inputs,
+  3. compiles it — success proves the distribution config is coherent —
+  4. records memory_analysis / cost_analysis / per-kind collective bytes and
+     the three roofline terms into artifacts/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --arch ... --shape ... --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_NAMES, SHAPES, cells, get_arch
+from repro.distributed import activation_sharding
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (batch_specs, cache_specs, named,
+                                   plan_param_specs)
+from repro.launch.specs import at_depth, input_specs, model_flops, probe_depths, sds
+from repro.models.stack import decode_step, forward
+from repro.train.train_step import TrainState, make_train_step
+
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool,
+               unroll: bool = False, depth=None):
+    """Lower + compile one cell.
+
+    unroll=True replaces layer scans with python unrolls so that XLA's
+    HloCostAnalysis (which counts a while body once, not x trip-count)
+    reports exact FLOPs and the HLO text contains every collective
+    instance; `depth` truncates the stack for the two cost probes
+    (cost is affine in depth for a periodic plan, so two probes + linear
+    extrapolation recover the full-depth cost exactly).
+    """
+    cell = input_specs(arch, shape, unroll=unroll, depth=depth)
+    cfg = cell.cfg
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pspecs = plan_param_specs(cfg, cell.axes, mesh, cell.params,
+                              serving=cell.step_kind == "decode")
+    p_sh = named(mesh, pspecs)
+
+    with mesh, activation_sharding(mesh):
+        if cell.step_kind == "train":
+            state_sh = TrainState(
+                params=p_sh,
+                opt_state={"m": p_sh, "v": p_sh,
+                           "step": NamedSharding(mesh, P())},
+                error_state=None,
+                step=NamedSharding(mesh, P()))
+            b_sh = named(mesh, batch_specs(cfg, cell.batch, mesh))
+            step = make_train_step(cfg, cell.opt_cfg)
+            jitted = jax.jit(step, in_shardings=(state_sh, b_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(cell.state, cell.batch)
+        elif cell.step_kind == "prefill":
+            b_sh = named(mesh, batch_specs(cfg, cell.batch, mesh))
+
+            def prefill(params, batch):
+                return forward(cfg, params, batch)[0]
+
+            jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(cell.params, cell.batch)
+        else:  # decode
+            c_sh = named(mesh, cache_specs(cfg, cell.cache, mesh,
+                                           cell.global_batch))
+            t_sh = named(mesh, batch_specs(
+                cfg, {"tokens": cell.token}, mesh))["tokens"]
+
+            def serve_step(params, token, cache, pos):
+                return decode_step(cfg, params, token, cache, pos)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(p_sh, t_sh, c_sh, NamedSharding(mesh, P())),
+                donate_argnums=(2,))
+            lowered = jitted.lower(cell.params, cell.token, cell.cache,
+                                   sds((), jnp.int32))
+        compiled = lowered.compile()
+    return lowered, compiled, cell, mesh
+
+
+def analyze(compiled, mesh) -> dict:
+    n_chips = mesh.devices.size
+    out = {"n_chips": int(n_chips)}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+        out["memory_analysis_str"] = str(ma)
+    except Exception as e:  # pragma: no cover
+        out["memory_analysis_error"] = repr(e)
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        out["flops"] = float(ca.get("flops", 0.0))
+        out["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        out["cost_keys"] = sorted(ca.keys())[:40]
+    except Exception as e:  # pragma: no cover
+        out["cost_analysis_error"] = repr(e)
+    try:
+        text = compiled.as_text()
+        out["collectives"] = hlo_stats.collective_bytes(text)
+        out["hlo_chars"] = len(text)
+    except Exception as e:  # pragma: no cover
+        out["collectives_error"] = repr(e)
+    if "flops" in out and "collectives" in out:
+        terms = hlo_stats.roofline_terms(
+            out["flops"], out.get("bytes_accessed", 0.0),
+            out["collectives"]["total_bytes"], n_chips)
+        out["roofline"] = terms
+        out["dominant"] = hlo_stats.dominant_term(terms)
+    return out
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, outdir: str,
+             probes: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    spec = get_arch(arch)
+    if shape == "long_500k" and not spec.supports_long:
+        record["status"] = "SKIP"
+        record["reason"] = ("pure full-attention arch: long_500k requires "
+                            "sub-quadratic attention (DESIGN.md "
+                            "S'Arch-applicability')")
+    else:
+        t0 = time.time()
+        try:
+            # ---- 1) full-depth scanned compile: THE dry-run deliverable —
+            # proves the sharding plan compiles and gives deployment memory.
+            lowered, compiled, cell, mesh = lower_cell(
+                arch, shape, multi_pod=multi_pod, unroll=False)
+            record.update(analyze(compiled, mesh))
+            record["status"] = "OK"
+            record["step_kind"] = cell.step_kind
+            record["compile_s"] = round(time.time() - t0, 1)
+            del lowered, compiled
+
+            # ---- 2) two shallow UNROLLED probes -> exact affine cost in
+            # depth; extrapolate flops / bytes / collective bytes to the
+            # full layer count (§Roofline methodology).
+            if probes:
+                full_l = cell.cfg.n_layers
+                la, lb = probe_depths(cell.cfg)
+                pts = []
+                for d_ in (la, lb):
+                    _, comp_p, cell_p, mesh_p = lower_cell(
+                        arch, shape, multi_pod=multi_pod, unroll=True,
+                        depth=d_)
+                    a = analyze(comp_p, mesh_p)
+                    pts.append((d_, a))
+                    del comp_p
+
+                def extrap(get):
+                    (l1, a1), (l2, a2) = pts
+                    y1, y2 = get(a1), get(a2)
+                    slope = (y2 - y1) / (l2 - l1)
+                    return y1 + slope * (full_l - l1)
+
+                record["probe_depths"] = [la, lb]
+                record["flops"] = extrap(lambda a: a.get("flops", 0.0))
+                record["bytes_accessed"] = extrap(
+                    lambda a: a.get("bytes_accessed", 0.0))
+                coll = extrap(lambda a: float(
+                    a.get("collectives", {}).get("total_bytes", 0)))
+                record["collective_bytes_extrap"] = coll
+                record["collectives_by_kind_probe"] = pts[1][1].get(
+                    "collectives", {}).get("bytes_by_kind")
+                terms = hlo_stats.roofline_terms(
+                    record["flops"], record["bytes_accessed"], coll,
+                    record["n_chips"])
+                record["roofline"] = terms
+                record["dominant"] = hlo_stats.dominant_term(terms)
+
+            tokens = (cell.global_batch * cell.seq_len
+                      if cell.step_kind in ("train", "prefill")
+                      else cell.global_batch)
+            mf = model_flops(cell.cfg, cell.step_kind, tokens)
+            record["model_flops"] = mf
+            if record.get("flops"):
+                record["model_flops_ratio"] = mf / (
+                    record["flops"] * record["n_chips"])
+            record["total_s"] = round(time.time() - t0, 1)
+        except Exception as e:
+            record["status"] = "FAIL"
+            record["error"] = repr(e)
+            record["traceback"] = traceback.format_exc()[-4000:]
+    os.makedirs(outdir, exist_ok=True)
+    fname = f"{arch}__{shape}__{mesh_name}.json"
+    with open(os.path.join(outdir, fname), "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the unrolled cost probes (multi-pod sweep "
+                         "only needs compile success + memory)")
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        todo = [(a, s) for a, s, _ in cells()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    for arch, shape in todo:
+        rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                       outdir=args.out, probes=not args.no_probes)
+        status = rec["status"]
+        extra = ""
+        if status == "OK":
+            r = rec.get("roofline", {})
+            extra = (f" compute={r.get('compute_s', 0):.3e}s"
+                     f" mem={r.get('memory_s', 0):.3e}s"
+                     f" coll={r.get('collective_s', 0):.3e}s"
+                     f" dom={rec.get('dominant')}"
+                     f" compile={rec.get('compile_s')}s")
+        elif status == "FAIL":
+            extra = " " + rec.get("error", "")[:200]
+        print(f"[{status}] {arch} x {shape} x {rec['mesh']}{extra}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Roofline-term extraction from compiled artifacts.
+
+``cost_analysis`` supplies HLO_FLOPs and HLO bytes-accessed; collective
+bytes are NOT in cost_analysis, so ``collective_bytes`` parses the optimized
+HLO text and sums the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16; 819 GB/s HBM;
+~50 GB/s/link ICI (per the assignment sheet).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[256,4096,7168]{2,1,0}   or  f32[]
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum result-shape bytes per collective kind over the whole module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for ck in _COLLECTIVES:
+            if re.search(rf"\b{ck}(?:-start|-done)?\(", rhs):
+                kind = ck
+                break
+        if kind is None:
+            continue
+        if re.search(rf"\b{kind}-done\(", rhs):
+            continue                      # avoid double-counting async pairs
+        # result type = everything before the op name
+        head = rhs.split(f"{kind}", 1)[0]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        out[kind] += nbytes
+        counts[kind] += 1
+    out_total = sum(out.values())
+    return {"bytes_by_kind": out, "counts": counts, "total_bytes": out_total}
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_total_bytes: float, n_chips: int) -> Dict[str, float]:
+    """The three §Roofline terms, in seconds.
+
+    flops / bytes are whole-program totals as reported by cost_analysis on
+    the SPMD-partitioned module (i.e. per-chip program); collective bytes
+    are per-chip traffic over ICI.
+    """
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": coll_total_bytes / ICI_BW,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k]).replace("_s", "")

@@ -1,0 +1,91 @@
+"""Serving driver: batched prefill + token-by-token decode.
+
+``generate`` runs the production serve path: one prefill forward to
+initialize the KV/latent/recurrent caches, then jit'd single-token decode
+steps.  ``embed_corpus`` is the graph-building entry point: it mean-pools
+the final hidden states into per-document embeddings — the "learned
+similarity model" producer that feeds Stars at tera-scale (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.models.common import ModelConfig
+from repro.models.stack import layer_plan, rms_norm, _run_stack
+
+
+def prefill_into_cache(cfg: ModelConfig, params, tokens: jax.Array,
+                       cache) -> Tuple[jax.Array, dict]:
+    """Sequential prefill via the decode path (cache-exact by construction).
+
+    A production TPU deployment fuses this into a chunked prefill kernel;
+    for the container-scale examples a scan over decode steps is enough and
+    reuses the single verified cache-update implementation.
+    """
+    b, s = tokens.shape
+
+    def body(carry, t):
+        cache = carry
+        logits, cache = decode_step(cfg, params, jax.lax.dynamic_slice(
+            tokens, (0, t), (b, 1)), cache, t)
+        return cache, logits
+
+    cache, logits = jax.lax.scan(body, cache, jnp.arange(s, dtype=jnp.int32))
+    return logits[-1], cache
+
+
+def generate(cfg: ModelConfig, params, prompt: jax.Array, *,
+             max_new: int = 32, max_len: int = 256,
+             temperature: float = 0.0, seed: int = 0
+             ) -> Tuple[jax.Array, Dict[str, float]]:
+    """Greedy/temperature sampling. prompt: (B, S0) -> (B, S0 + max_new)."""
+    b, s0 = prompt.shape
+    cache = init_cache(cfg, b, max_len)
+    t0 = time.time()
+    last_logits, cache = jax.jit(
+        lambda p, t, c: prefill_into_cache(cfg, p, t, c))(params, prompt,
+                                                          cache)
+    prefill_s = time.time() - t0
+
+    decode = jax.jit(lambda p, tok, c, pos: decode_step(cfg, p, tok, c, pos))
+    key = jax.random.key(seed)
+    toks = prompt
+    logits = last_logits
+    t0 = time.time()
+    for i in range(max_new):
+        if temperature > 0:
+            key, k = jax.random.split(key)
+            nxt = jax.random.categorical(k, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = nxt.reshape(b, 1).astype(jnp.int32)
+        toks = jnp.concatenate([toks, nxt], axis=1)
+        logits, cache = decode(params, nxt, cache, jnp.int32(s0 + i))
+    decode_s = time.time() - t0
+    stats = {"prefill_s": prefill_s, "decode_s": decode_s,
+             "tok_per_s": max_new * b / max(decode_s, 1e-9)}
+    return toks, stats
+
+
+def embed_corpus(cfg: ModelConfig, params, tokens: jax.Array,
+                 block: int = 64) -> jax.Array:
+    """Mean-pooled final hidden states as document embeddings (B, d)."""
+
+    @jax.jit
+    def embed_block(tok):
+        x = params["embed"][tok].astype(cfg.dtype)
+        ctx = {"positions": jnp.arange(tok.shape[1]), "memory": None}
+        h, _ = _run_stack(layer_plan(cfg), cfg, params, x, ctx, "g")
+        h = rms_norm(h, params["norm_f"], cfg.norm_eps)
+        return jnp.mean(h.astype(jnp.float32), axis=1)
+
+    outs = []
+    for a in range(0, tokens.shape[0], block):
+        outs.append(embed_block(tokens[a:a + block]))
+    return jnp.concatenate(outs, axis=0)

@@ -1,0 +1,150 @@
+"""Sharding plans: logical parameter axes -> mesh axes.
+
+Every parameter carries logical axes from models/* (e.g. ("embed", "heads")).
+``plan_param_specs`` maps them onto the mesh:
+
+  vocab / heads / kv / mlp / experts -> "model"        (TP / EP)
+  embed                              -> dp axes        (FSDP, if cfg.fsdp)
+  everything else                    -> replicated
+
+with the rule that each mesh axis is used at most once per tensor (first
+logical dim wins), so e.g. expert weights (experts, embed, mlp) become
+P("model", ("pod","data"), None) — experts EP-sharded, d_model FSDP-sharded.
+
+Optimizer moments reuse the parameter specs (ZeRO: fully sharded state).
+Activations: batch over dp axes; decode caches shard heads or sequence per
+cfg.cache_shard (kv-head counts < 16 force "seq").
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+from repro.models.common import ModelConfig
+
+_MODEL_AXES = ("vocab", "heads", "kv", "mlp", "experts")
+_FSDP_AXES = ("embed",)
+
+
+def _spec_for(axes: Tuple[str, ...], shape: Tuple[int, ...],
+              cfg: ModelConfig, dp, dp_size: int, model_size: int,
+              serving: bool) -> P:
+    """Map logical axes to mesh axes; skip non-divisible dims (jit's
+    explicit in_shardings, unlike internal GSPMD, refuses padding).
+
+    "experts" shards over the widest divisible (dp + model) combination —
+    true expert parallelism (deepseek: 256 experts over 256 chips).
+    serving=True disables FSDP: decode must not re-gather the weights
+    every token (§Perf iteration 1), so inference plans are TP/EP-only.
+    """
+    used_model = False
+    used_dp = False
+    parts = []
+    for ax, dim in zip(axes, shape):
+        if ax == "experts" and not used_model:
+            if not used_dp and dim % (dp_size * model_size) == 0:
+                parts.append((*dp, "model"))
+                used_dp = used_model = True
+            elif dim % model_size == 0:
+                parts.append("model")
+                used_model = True
+            else:
+                parts.append(None)
+        elif ax in _MODEL_AXES and not used_model and dim % model_size == 0:
+            parts.append("model")
+            used_model = True
+        elif (ax in _FSDP_AXES and cfg.fsdp and not serving and not used_dp
+              and dim % dp_size == 0):
+            parts.append(dp if len(dp) > 1 else dp[0])
+            used_dp = True
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def plan_param_specs(cfg: ModelConfig, axes_tree: Any, mesh: Mesh,
+                     shapes_tree: Any, *, serving: bool = False) -> Any:
+    """Pytree of PartitionSpec parallel to the parameter tree."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    model_size = mesh.shape.get("model", 1)
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, str) or e is None for e in x)
+    return jax.tree.map(
+        lambda axes, sh: _spec_for(tuple(axes), tuple(sh.shape), cfg, dp,
+                                   dp_size, model_size, serving),
+        axes_tree, shapes_tree, is_leaf=is_axes)
+
+
+def batch_specs(cfg: ModelConfig, batch_shapes: Dict[str, Any],
+                mesh: Mesh) -> Dict[str, P]:
+    """Input batch: leading batch dim over the dp axes, rest replicated.
+
+    Batches that don't divide the dp axes (e.g. long_500k's batch=1) stay
+    replicated — the model axis still shards the cache/params."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    dp_spec = dp if len(dp) > 1 else dp[0]
+
+    def spec(v):
+        lead = dp_spec if v.shape[0] % dp_size == 0 else None
+        return P(lead, *([None] * (len(v.shape) - 1)))
+
+    return {k: spec(v) for k, v in batch_shapes.items()}
+
+
+def cache_specs(cfg: ModelConfig, cache_tree: Any, mesh: Mesh,
+                batch: int) -> Any:
+    """Decode-cache sharding.
+
+    Leaves are stacked (ro, ri, B, ...).  Batch shards over dp axes when it
+    divides; the cache body shards over 'model' on the kv-head axis
+    ("heads" mode) or the sequence axis ("seq" mode — required when
+    n_kv_heads < |model| and for MLA latent / long-context caches).
+    """
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    batch_part = dp_spec if batch % n_dp == 0 else None
+
+    model_size = mesh.shape.get("model", 1)
+
+    def leaf_spec(x):
+        nd = x.ndim
+        # (ro, ri, B, ...) — axes 0,1 are stacking, 2 is batch.
+        parts = [None, None,
+                 batch_part if x.shape[2] % n_dp == 0 else None]
+        parts += [None] * (nd - 3)
+        if (cfg.cache_shard == "heads" and nd >= 6
+                and x.shape[3] % model_size == 0):
+            parts[3] = "model"          # (ro, ri, B, KV, S, hd)
+        elif cfg.cache_shard == "seq" and nd >= 4:
+            # shard the longest divisible trailing axis over model
+            order = sorted(range(3, nd), key=lambda i: -x.shape[i])
+            for i in order:
+                if x.shape[i] % model_size == 0 and x.shape[i] >= model_size:
+                    parts[i] = "model"
+                    break
+        return P(*parts)
+
+    return jax.tree.map(leaf_spec, cache_tree)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_specs(cfg: ModelConfig, param_specs: Any) -> Dict[str, Any]:
+    """TrainState sharding: moments mirror params; scalars replicated."""
+    return {
+        "params": param_specs,
+        "opt_state": {"m": param_specs, "v": param_specs, "step": P()},
+        "error_state": None,
+        "step": P(),
+    }

@@ -1,0 +1,149 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+The same pattern shannon/kernels uses: weak-type-correct, shardable
+stand-ins, no device allocation.  ``input_specs`` returns everything the
+dry-run needs to lower one cell: the step kind, abstract params/state,
+abstract batch (or token+cache), and the parameter logical-axes tree for the
+sharding plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_arch, get_config
+from repro.models import init_cache, init_params
+from repro.models.common import ModelConfig
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainState
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    step_kind: str                      # train | prefill | decode
+    cfg: ModelConfig
+    opt_cfg: AdamWConfig
+    params: Any                         # ShapeDtypeStruct pytree
+    axes: Any                           # logical axes pytree
+    state: Optional[Any] = None         # train: TrainState shapes
+    batch: Optional[Dict[str, Any]] = None
+    token: Optional[Any] = None         # decode
+    cache: Optional[Any] = None         # decode
+    seq_len: int = 0
+    global_batch: int = 0
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Activated parameter count (MoE: only top_k routed experts count)."""
+    from repro.models import count_params
+    if cfg.moe is None:
+        return count_params(cfg)
+    thin = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, num_experts=cfg.moe.top_k))
+    return count_params(thin)
+
+
+def model_flops(cfg: ModelConfig, step_kind: str, tokens: int) -> float:
+    """MODEL_FLOPS: 6*N_active*D for train, 2*N_active*D for inference."""
+    n = active_params(cfg)
+    return (6.0 if step_kind == "train" else 2.0) * n * tokens
+
+
+def abstract_params(cfg: ModelConfig) -> Tuple[Any, Any]:
+    axes_out: Dict[str, Any] = {}
+
+    def f(k):
+        v, a = init_params(cfg, k)
+        axes_out.update(a)
+        return v
+
+    shapes = jax.eval_shape(f, jax.random.key(0))
+    return shapes, axes_out
+
+
+def _batch_specs(cfg: ModelConfig, b: int, s: int, *,
+                 with_labels: bool) -> Dict[str, Any]:
+    batch: Dict[str, Any] = {"tokens": sds((b, s), jnp.int32)}
+    if with_labels:
+        batch["labels"] = sds((b, s), jnp.int32)
+    if cfg.encoder_layers:
+        batch["enc_frames"] = sds((b, s, cfg.d_model), cfg.dtype)
+    if cfg.cross_attn_every and not cfg.encoder_layers:
+        batch["img_embed"] = sds((b, cfg.modality_tokens, cfg.d_model),
+                                 cfg.dtype)
+    return batch
+
+
+def probe_depths(cfg: ModelConfig) -> Tuple[int, int]:
+    """Two shallow depths whose layer-plan pattern matches the full config.
+
+    Used for linear cost extrapolation: HLO cost is affine in depth for a
+    periodic plan, so two unrolled probe compiles recover the exact slope.
+    """
+    if cfg.global_every:                       # gemma: blocks of 6 + tail 2
+        ge = cfg.global_every
+        rem = cfg.n_layers % ge
+        return ge + rem, 2 * ge + rem
+    if cfg.attn_period:                        # jamba: periods of 8
+        return cfg.attn_period, 2 * cfg.attn_period
+    if cfg.cross_attn_every and not cfg.encoder_layers:   # llama-vision
+        return 2 * cfg.cross_attn_every, 3 * cfg.cross_attn_every
+    if cfg.mla and cfg.dense_prefix:           # deepseek: prefix + k moe
+        return cfg.dense_prefix + 2, cfg.dense_prefix + 4
+    return 2, 4
+
+
+def at_depth(cfg: ModelConfig, n_layers: int, *,
+             unroll: bool) -> ModelConfig:
+    kw = dict(n_layers=n_layers, scan_layers=not unroll)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = n_layers
+    return dataclasses.replace(cfg, **kw)
+
+
+def input_specs(arch: str, shape: str, *, unroll: bool = False,
+                depth: Optional[int] = None) -> CellSpec:
+    cfg = get_config(arch)
+    if depth is not None:
+        cfg = at_depth(cfg, depth, unroll=unroll)
+    elif unroll:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    spec = get_arch(arch)
+    seq_len, global_batch, kind = SHAPES[shape]
+    opt_cfg = AdamWConfig(
+        moment_dtype=jnp.bfloat16 if spec.moment_dtype == "bfloat16"
+        else jnp.float32)
+    params, axes = abstract_params(cfg)
+    cell = CellSpec(arch=arch, shape=shape, step_kind=kind, cfg=cfg,
+                    opt_cfg=opt_cfg, params=params, axes=axes,
+                    seq_len=seq_len, global_batch=global_batch)
+
+    if kind == "train":
+        def mk_state(p):
+            return TrainState.create(opt_cfg, p)
+        cell.state = jax.eval_shape(mk_state, params)
+        cell.batch = _batch_specs(cfg, global_batch, seq_len,
+                                  with_labels=True)
+    elif kind == "prefill":
+        cell.batch = _batch_specs(cfg, global_batch, seq_len,
+                                  with_labels=False)
+    else:  # decode
+        mem_len = 0
+        if cfg.encoder_layers:
+            mem_len = seq_len          # encoder memory spans the audio input
+        elif cfg.cross_attn_every:
+            mem_len = cfg.modality_tokens
+        cell.cache = jax.eval_shape(
+            lambda: init_cache(cfg, global_batch, seq_len, mem_len=mem_len))
+        cell.token = sds((global_batch, 1), jnp.int32)
+    return cell

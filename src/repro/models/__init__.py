@@ -1,0 +1,21 @@
+from repro.models.common import MambaConfig, MoEConfig, ModelConfig
+from repro.models.stack import (
+    count_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    layer_plan,
+)
+
+__all__ = [
+    "MambaConfig",
+    "MoEConfig",
+    "ModelConfig",
+    "count_params",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "layer_plan",
+]

@@ -1,0 +1,182 @@
+"""GQA self-attention and cross-attention: full-sequence + cached decode.
+
+Full-sequence (train / prefill) attention routes through the Pallas flash
+kernel (kernels/ops.attention); decode attends a (B, kv, S, hd) cache with
+plain einsum — decode is HBM-bandwidth-bound, so the win there is cache
+*sharding* (heads or sequence; launch/sharding.py), not kernel fusion.
+
+Sliding-window layers (Gemma-3 locals) keep a ring-buffer cache of exactly
+``window`` slots: slot = pos % window, with RoPE applied at write time using
+absolute positions, making long_500k decode O(window) per local layer.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.activation_sharding import constrain
+from repro.kernels import ops as kernel_ops
+from repro.models.common import (ModelConfig, ParamCollector, apply_rope,
+                                 rms_norm, rope_freqs)
+
+
+# --------------------------------------------------------------------------- #
+# Params
+# --------------------------------------------------------------------------- #
+
+
+def init_attn(col: ParamCollector, cfg: ModelConfig, *,
+              prefix: str = "attn", cross: bool = False):
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    col.dense(f"{prefix}_wq", (d, h * hd), ("embed", "heads"))
+    col.dense(f"{prefix}_wk", (d, k * hd), ("embed", "kv"))
+    col.dense(f"{prefix}_wv", (d, k * hd), ("embed", "kv"))
+    col.dense(f"{prefix}_wo", (h * hd, d), ("heads", "embed"))
+    if cfg.qk_norm and not cross:
+        col.zeros(f"{prefix}_qnorm", (hd,), ("head_dim",))
+        col.zeros(f"{prefix}_knorm", (hd,), ("head_dim",))
+
+
+def _project_qkv(p, cfg: ModelConfig, x: jax.Array,
+                 kv_x: Optional[jax.Array], prefix: str,
+                 qk_norm: bool) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv_x is None else kv_x
+    sk = src.shape[1]
+    q = (x @ p[f"{prefix}_wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    key = (src @ p[f"{prefix}_wk"]).reshape(b, sk, k, hd).transpose(0, 2, 1, 3)
+    val = (src @ p[f"{prefix}_wv"]).reshape(b, sk, k, hd).transpose(0, 2, 1, 3)
+    if s > 1:
+        # Full-sequence path only.  In decode (s == 1) a padded-head
+        # constraint on the single-token k/v conflicts with the
+        # sequence-sharded cache and makes GSPMD reshard the whole cache
+        # every token (measured: phi4 decode collective 0.02 -> 0.35 s).
+        q = constrain(q, "dp", "tp", None, None)
+        key = constrain(key, "dp", "tp", None, None)
+        val = constrain(val, "dp", "tp", None, None)
+    if qk_norm:
+        q = rms_norm(q, p[f"{prefix}_qnorm"], cfg.norm_eps)
+        key = rms_norm(key, p[f"{prefix}_knorm"], cfg.norm_eps)
+    return q, key, val
+
+
+# --------------------------------------------------------------------------- #
+# Full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------- #
+
+
+def attn_fwd(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array, *,
+             positions: jax.Array, causal: bool = True,
+             window: Optional[int] = None,
+             rope_theta: Optional[float] = None,
+             kv_x: Optional[jax.Array] = None,
+             prefix: str = "attn") -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).  kv_x set => cross-attention (no RoPE)."""
+    cross = kv_x is not None
+    q, k, v = _project_qkv(p, cfg, x, kv_x, prefix,
+                           cfg.qk_norm and not cross)
+    if not cross:
+        theta = rope_theta if rope_theta is not None else cfg.rope_theta
+        cos, sin = rope_freqs(positions, cfg.hd, theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    out = kernel_ops.attention(q, k, v, causal=causal and not cross,
+                               window=window)
+    out = constrain(out, "dp", "tp", None, None)
+    b, s = x.shape[:2]
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
+    return constrain(out @ p[f"{prefix}_wo"], "dp", None, None)
+
+
+# --------------------------------------------------------------------------- #
+# Cached decode
+# --------------------------------------------------------------------------- #
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                  window: Optional[int] = None,
+                  dtype=None) -> Dict[str, jax.Array]:
+    dtype = dtype or cfg.dtype
+    slots = min(window, max_len) if window is not None else max_len
+    shape = (batch, cfg.n_kv_heads, slots, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                cache: Dict[str, jax.Array], pos: jax.Array, *,
+                window: Optional[int] = None,
+                rope_theta: Optional[float] = None,
+                prefix: str = "attn"
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B, 1, d); pos: scalar int32 current position."""
+    b = x.shape[0]
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kh
+    q, k_new, v_new = _project_qkv(p, cfg, x, None, prefix, cfg.qk_norm)
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    cos, sin = rope_freqs(pos[None], cfg.hd, theta)
+    q = apply_rope(q, cos, sin)                      # (B, H, 1, hd)
+    k_new = apply_rope(k_new, cos, sin)              # (B, K, 1, hd)
+
+    slots = cache["k"].shape[2]
+    slot = pos % slots if window is not None else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=2)
+
+    idx = jnp.arange(slots)
+    if window is not None:
+        # absolute position stored in ring slot j
+        abs_pos = pos - ((pos - idx) % slots)
+        valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - window)
+    else:
+        valid = idx <= pos
+
+    qg = q.reshape(b, kh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg,
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgs,bksd->bkgd", w, v.astype(jnp.float32))
+    out = ctx.reshape(b, 1, h * hd).astype(x.dtype) @ p[f"{prefix}_wo"]
+    return out, {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------------- #
+# Cross-attention decode (static memory: encoder output / image embeddings)
+# --------------------------------------------------------------------------- #
+
+
+def init_cross_cache(cfg: ModelConfig, batch: int, mem_len: int,
+                     dtype=None) -> Dict[str, jax.Array]:
+    dtype = dtype or cfg.dtype
+    shape = (batch, cfg.n_kv_heads, mem_len, cfg.hd)
+    return {"ck": jnp.zeros(shape, dtype), "cv": jnp.zeros(shape, dtype)}
+
+
+def cross_prefill_cache(p, cfg: ModelConfig, memory: jax.Array,
+                        prefix: str = "xattn") -> Dict[str, jax.Array]:
+    """Project encoder memory once; reused every decode step."""
+    b, sm, _ = memory.shape
+    kh, hd = cfg.n_kv_heads, cfg.hd
+    ck = (memory @ p[f"{prefix}_wk"]).reshape(b, sm, kh, hd).transpose(0, 2, 1, 3)
+    cv = (memory @ p[f"{prefix}_wv"]).reshape(b, sm, kh, hd).transpose(0, 2, 1, 3)
+    return {"ck": ck, "cv": cv}
+
+
+def cross_attn_decode(p, cfg: ModelConfig, x: jax.Array,
+                      cache: Dict[str, jax.Array],
+                      prefix: str = "xattn") -> jax.Array:
+    b = x.shape[0]
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kh
+    q = (x @ p[f"{prefix}_wq"]).reshape(b, 1, h, hd).transpose(0, 2, 1, 3)
+    qg = q.reshape(b, kh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg,
+                        cache["ck"].astype(jnp.float32)) / (hd ** 0.5)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgs,bksd->bkgd", w, cache["cv"].astype(jnp.float32))
+    return ctx.reshape(b, 1, h * hd).astype(x.dtype) @ p[f"{prefix}_wo"]

@@ -1,0 +1,211 @@
+"""Shared model components: config, norms, RoPE, dense FFN, embeddings.
+
+Conventions used across the model zoo:
+  * parameters are plain dict pytrees; initializers take an explicit key;
+  * every weight is created through ``param(...)`` which records its
+    *logical axes* (e.g. ("vocab", "embed")) in a parallel tree, so the
+    launch layer can map logical axes -> mesh axes per sharding plan;
+  * compute dtype is bf16 by default with fp32 for norms/softmax/rope;
+  * layer stacks are scanned (models/stack.py), so block params carry
+    leading stacking axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.activation_sharding import constrain
+
+# --------------------------------------------------------------------------- #
+# Config
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    capacity_factor: float = 1.25
+    router_dtype: Any = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One architecture. See configs/<arch>.py for the 10 assigned instances."""
+
+    name: str
+    kind: str                      # dense | moe | vlm | audio | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+
+    # attention flavour
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None   # window for "local" layers
+    global_every: Optional[int] = None     # gemma3: layer i is global iff
+                                           # (i+1) % global_every == 0
+    rope_theta_global: Optional[float] = None
+
+    # MLA (DeepSeek-V3)
+    mla: bool = False
+    mla_q_lora: int = 1536
+    mla_kv_lora: int = 512
+    mla_rope_dim: int = 64
+    mla_nope_dim: int = 128
+    mla_v_dim: int = 128
+
+    # MoE
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1                     # apply MoE FFN every k-th layer
+    dense_prefix: int = 0                  # leading layers with dense FFN
+    dense_prefix_d_ff: Optional[int] = None
+
+    # hybrid (Jamba): one attention layer per `attn_period` layers
+    attn_period: Optional[int] = None
+    attn_offset: int = 0
+    mamba: Optional[MambaConfig] = None
+
+    # RWKV-6
+    rwkv: bool = False
+    rwkv_head_dim: int = 64
+
+    # encoder-decoder (Seamless) / cross-attention (Llama-3.2-V)
+    encoder_layers: int = 0
+    cross_attn_every: Optional[int] = None  # decoder-side cross-attn cadence
+    modality_tokens: int = 0                # stub frontend sequence length
+
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # scan_layers=True keeps HLO depth-independent (fast compiles).  The
+    # dry-run sets False: XLA's HloCostAnalysis counts a while-loop body
+    # ONCE regardless of trip count, so unrolling is required for exact
+    # FLOP/collective accounting (EXPERIMENTS.md §Roofline, methodology).
+    scan_layers: bool = True
+    # sharding plan knobs (launch/sharding.py)
+    fsdp: bool = True
+    cache_shard: str = "heads"             # "heads" | "seq" for decode caches
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS and reporting)."""
+        from repro.models.stack import count_params  # cycle-free at call time
+        return count_params(self)
+
+
+# --------------------------------------------------------------------------- #
+# Parameter bookkeeping: values + logical axes
+# --------------------------------------------------------------------------- #
+
+
+class ParamCollector:
+    """Collects (value, logical_axes) pairs into parallel pytrees."""
+
+    def __init__(self, key: jax.Array, param_dtype):
+        self._key = key
+        self.dtype = param_dtype
+        self.values: Dict[str, Any] = {}
+        self.axes: Dict[str, Any] = {}
+
+    def next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def dense(self, name: str, shape: Sequence[int], axes: Sequence[str],
+              scale: Optional[float] = None):
+        fan_in = shape[0]
+        scale = scale if scale is not None else (1.0 / fan_in) ** 0.5
+        self.values[name] = (jax.random.normal(self.next_key(), tuple(shape),
+                                               jnp.float32) * scale
+                             ).astype(self.dtype)
+        self.axes[name] = tuple(axes)
+
+    def zeros(self, name: str, shape: Sequence[int], axes: Sequence[str]):
+        self.values[name] = jnp.zeros(tuple(shape), self.dtype)
+        self.axes[name] = tuple(axes)
+
+    def ones(self, name: str, shape: Sequence[int], axes: Sequence[str]):
+        self.values[name] = jnp.ones(tuple(shape), self.dtype)
+        self.axes[name] = tuple(axes)
+
+    def const(self, name: str, value, axes: Sequence[str]):
+        self.values[name] = jnp.asarray(value, self.dtype)
+        self.axes[name] = tuple(axes)
+
+
+# --------------------------------------------------------------------------- #
+# Primitives
+# --------------------------------------------------------------------------- #
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * scale) * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_freqs(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables: positions (...,) -> (..., dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, dim) rotated pairwise; cos/sin: (seq, dim/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    shape = (1,) * (x.ndim - 2) + cos.shape
+    c = cos.reshape(shape)
+    s = sin.reshape(shape)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = x @ w_gate
+    u = x @ w_up
+    spec = ("dp",) + (None,) * (x.ndim - 2) + ("tp",)
+    g = constrain(g, *spec)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = h @ w_down
+    return constrain(out, *(("dp",) + (None,) * (x.ndim - 1)))
+
+
+def init_dense_ffn(col: ParamCollector, cfg: ModelConfig, d_ff: int,
+                   prefix: str = "ffn"):
+    d = cfg.d_model
+    col.dense(f"{prefix}_gate", (d, d_ff), ("embed", "mlp"))
+    col.dense(f"{prefix}_up", (d, d_ff), ("embed", "mlp"))
+    col.dense(f"{prefix}_down", (d_ff, d), ("mlp", "embed"))
+
+
+def apply_dense_ffn(p: Dict[str, jax.Array], x: jax.Array,
+                    prefix: str = "ffn") -> jax.Array:
+    return swiglu(x, p[f"{prefix}_gate"], p[f"{prefix}_up"],
+                  p[f"{prefix}_down"])

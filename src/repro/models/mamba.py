@@ -1,0 +1,121 @@
+"""Mamba (S6) mixer block — the SSM layers of Jamba (arXiv:2403.19887).
+
+Selective state space: per-channel input-dependent (dt, B, C); diagonal A.
+Full-sequence form runs a lax.scan over time (state (B, d_inner, d_state) is
+the carry); decode carries the same state plus a (d_conv-1)-deep causal-conv
+window, giving O(1) per-token cost — which is why Jamba runs the long_500k
+shape that full-attention models cannot.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import MambaConfig, ModelConfig, ParamCollector
+
+
+def _dims(cfg: ModelConfig):
+    mc = cfg.mamba or MambaConfig()
+    d_in = mc.expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return mc, d_in, dt_rank
+
+
+def init_mamba(col: ParamCollector, cfg: ModelConfig, prefix: str = "mamba"):
+    mc, d_in, dt_rank = _dims(cfg)
+    d = cfg.d_model
+    col.dense(f"{prefix}_in", (d, 2 * d_in), ("embed", "mlp"))
+    col.dense(f"{prefix}_conv_w", (mc.d_conv, d_in), ("conv", "mlp"),
+              scale=1.0 / mc.d_conv)
+    col.zeros(f"{prefix}_conv_b", (d_in,), ("mlp",))
+    col.dense(f"{prefix}_xproj", (d_in, dt_rank + 2 * mc.d_state),
+              ("mlp", "ssm"))
+    col.dense(f"{prefix}_dt_w", (dt_rank, d_in), ("ssm", "mlp"))
+    col.const(f"{prefix}_dt_b",
+              jnp.log(jnp.expm1(jnp.full((d_in,), 0.01))), ("mlp",))
+    col.const(f"{prefix}_a_log",
+              jnp.log(jnp.broadcast_to(
+                  jnp.arange(1, mc.d_state + 1, dtype=jnp.float32),
+                  (d_in, mc.d_state))), ("mlp", "ssm"))
+    col.ones(f"{prefix}_dskip", (d_in,), ("mlp",))
+    col.dense(f"{prefix}_out", (d_in, d), ("mlp", "embed"))
+
+
+def _ssm_inputs(p, cfg, u, prefix):
+    """u: (B, S, d_in) post-conv activations -> dt, B_t, C_t (fp32)."""
+    mc, d_in, dt_rank = _dims(cfg)
+    xp = (u @ p[f"{prefix}_xproj"]).astype(jnp.float32)
+    dt, b_t, c_t = jnp.split(xp, [dt_rank, dt_rank + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p[f"{prefix}_dt_w"].astype(jnp.float32)
+                         + p[f"{prefix}_dt_b"].astype(jnp.float32))
+    return dt, b_t, c_t                          # (B,S,d_in) (B,S,n) (B,S,n)
+
+
+def mamba_fwd(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array, *,
+              prefix: str = "mamba") -> jax.Array:
+    """x: (B, S, d) -> (B, S, d); scan over time."""
+    mc, d_in, _ = _dims(cfg)
+    b, s, d = x.shape
+    xz = x @ p[f"{prefix}_in"]
+    u, z = jnp.split(xz, 2, axis=-1)             # (B, S, d_in) each
+    # depthwise causal conv along time
+    pad = jnp.pad(u, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + s] * p[f"{prefix}_conv_w"][i]
+               for i in range(mc.d_conv))
+    u = jax.nn.silu((conv + p[f"{prefix}_conv_b"]).astype(jnp.float32))
+    dt, b_t, c_t = _ssm_inputs(p, cfg, u.astype(x.dtype), prefix)
+    a = -jnp.exp(p[f"{prefix}_a_log"].astype(jnp.float32))   # (d_in, n)
+
+    def step(state, inp):
+        u_t, dt_t, bt, ct = inp                  # (B,d_in) (B,d_in) (B,n) (B,n)
+        da = jnp.exp(dt_t[..., None] * a)        # (B, d_in, n)
+        dbu = dt_t[..., None] * bt[:, None, :] * u_t[..., None]
+        state = state * da + dbu
+        y = jnp.einsum("bdn,bn->bd", state, ct)
+        return state, y
+
+    state0 = jnp.zeros((b, d_in, mc.d_state), jnp.float32)
+    xs = (u.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          b_t.transpose(1, 0, 2), c_t.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2)                    # (B, S, d_in)
+    y = y + u * p[f"{prefix}_dskip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p[f"{prefix}_out"]
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int,
+                     dtype=None) -> Dict[str, jax.Array]:
+    mc, d_in, _ = _dims(cfg)
+    dtype = dtype or cfg.dtype
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, mc.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array], *, prefix: str = "mamba"
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token step. x: (B, 1, d)."""
+    mc, d_in, _ = _dims(cfg)
+    b = x.shape[0]
+    xz = x[:, 0] @ p[f"{prefix}_in"]
+    u, z = jnp.split(xz, 2, axis=-1)             # (B, d_in)
+    hist = jnp.concatenate([cache["conv"], u[:, None]], axis=1)
+    conv = jnp.einsum("bcd,cd->bd", hist, p[f"{prefix}_conv_w"])
+    u_c = jax.nn.silu((conv + p[f"{prefix}_conv_b"]).astype(jnp.float32))
+    dt, b_t, c_t = _ssm_inputs(p, cfg, u_c[:, None].astype(x.dtype), prefix)
+    dt, b_t, c_t = dt[:, 0], b_t[:, 0], c_t[:, 0]
+    a = -jnp.exp(p[f"{prefix}_a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[..., None] * a)
+    state = cache["ssm"] * da + dt[..., None] * b_t[:, None, :] * u_c[..., None]
+    y = jnp.einsum("bdn,bn->bd", state, c_t)
+    y = y + u_c * p[f"{prefix}_dskip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ p[f"{prefix}_out"])[:, None]
+    return out, {"conv": hist[:, 1:], "ssm": state}

@@ -1,0 +1,131 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Train/prefill uses the *expanded* form (latent up-projected to per-head K/V,
+flash-style attention).  Decode uses the *absorbed* form: only the
+(kv_lora + rope_dim)-wide latent is cached — W_uk is absorbed into the query
+and W_uv into the output — which is MLA's serving trick and what makes the
+decode_32k / long-cache shapes fit: cache bytes per token drop from
+H*(nope+rope+v)*2 = 112 KB to (512+64)*2 = 1.2 KB per layer.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.activation_sharding import constrain
+from repro.models.common import (ModelConfig, ParamCollector, apply_rope,
+                                 rms_norm, rope_freqs)
+
+
+def init_mla(col: ParamCollector, cfg: ModelConfig, prefix: str = "mla"):
+    d, h = cfg.d_model, cfg.n_heads
+    ql, kvl = cfg.mla_q_lora, cfg.mla_kv_lora
+    rd, nd, vd = cfg.mla_rope_dim, cfg.mla_nope_dim, cfg.mla_v_dim
+    col.dense(f"{prefix}_wq_a", (d, ql), ("embed", "q_lora"))
+    col.zeros(f"{prefix}_q_norm", (ql,), ("q_lora",))
+    col.dense(f"{prefix}_wq_b", (ql, h * (nd + rd)), ("q_lora", "heads"))
+    col.dense(f"{prefix}_wkv_a", (d, kvl + rd), ("embed", "kv_lora"))
+    col.zeros(f"{prefix}_kv_norm", (kvl,), ("kv_lora",))
+    col.dense(f"{prefix}_wk_b", (kvl, h * nd), ("kv_lora", "heads"))
+    col.dense(f"{prefix}_wv_b", (kvl, h * vd), ("kv_lora", "heads"))
+    col.dense(f"{prefix}_wo", (h * vd, d), ("heads", "embed"))
+
+
+def _latents(p, cfg, x, positions, prefix):
+    """Shared by prefill/decode: normalized latent + roped shared key."""
+    rd, kvl = cfg.mla_rope_dim, cfg.mla_kv_lora
+    kv = x @ p[f"{prefix}_wkv_a"]                       # (B, S, kvl + rd)
+    ckv = rms_norm(kv[..., :kvl], p[f"{prefix}_kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., kvl:]                              # (B, S, rd)
+    cos, sin = rope_freqs(positions, rd, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, None], cos, sin)[:, 0]  # (B, S, rd)
+    return ckv, k_rope
+
+
+def _queries(p, cfg, x, positions, prefix):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    rd, nd = cfg.mla_rope_dim, cfg.mla_nope_dim
+    q = rms_norm(x @ p[f"{prefix}_wq_a"], p[f"{prefix}_q_norm"], cfg.norm_eps)
+    q = (q @ p[f"{prefix}_wq_b"]).reshape(b, s, h, nd + rd)
+    q = q.transpose(0, 2, 1, 3)                         # (B, H, S, nd+rd)
+    q = constrain(q, "dp", "tp", None, None)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    cos, sin = rope_freqs(positions, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_fwd(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array, *,
+            positions: jax.Array, prefix: str = "mla") -> jax.Array:
+    """Expanded-form causal MLA for train/prefill. x: (B, S, d)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    rd, nd, vd, kvl = (cfg.mla_rope_dim, cfg.mla_nope_dim, cfg.mla_v_dim,
+                       cfg.mla_kv_lora)
+    q_nope, q_rope = _queries(p, cfg, x, positions, prefix)
+    ckv, k_rope = _latents(p, cfg, x, positions, prefix)
+    k_nope = (ckv @ p[f"{prefix}_wk_b"]).reshape(b, s, h, nd).transpose(0, 2, 1, 3)
+    v = (ckv @ p[f"{prefix}_wv_b"]).reshape(b, s, h, vd).transpose(0, 2, 1, 3)
+    k_nope = constrain(k_nope, "dp", "tp", None, None)
+    v = constrain(v, "dp", "tp", None, None)
+
+    scale = 1.0 / ((nd + rd) ** 0.5)
+    sc = (jnp.einsum("bhqd,bhkd->bhqk", q_nope.astype(jnp.float32),
+                     k_nope.astype(jnp.float32))
+          + jnp.einsum("bhqd,bkd->bhqk", q_rope.astype(jnp.float32),
+                       k_rope.astype(jnp.float32))) * scale
+    sc = constrain(sc, "dp", "tp", None, None)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    sc = jnp.where((kpos <= qpos)[None, None], sc, -jnp.inf)
+    w = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * vd).astype(x.dtype)
+    return constrain(o @ p[f"{prefix}_wo"], "dp", None, None)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=None) -> Dict[str, jax.Array]:
+    dtype = dtype or cfg.dtype
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.mla_kv_lora), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.mla_rope_dim), dtype),
+    }
+
+
+def mla_decode(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array,
+               cache: Dict[str, jax.Array], pos: jax.Array, *,
+               prefix: str = "mla"
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed-form decode: attends the latent cache directly. x: (B,1,d)."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    rd, nd, vd, kvl = (cfg.mla_rope_dim, cfg.mla_nope_dim, cfg.mla_v_dim,
+                       cfg.mla_kv_lora)
+    q_nope, q_rope = _queries(p, cfg, x, pos[None], prefix)   # (B,H,1,*)
+    ckv_new, krope_new = _latents(p, cfg, x, pos[None], prefix)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope_new,
+                                                pos, axis=1)
+
+    # Absorb W_uk into the query:  q_eff[b,h,c] = sum_d q_nope[b,h,d] W_uk[c,h,d]
+    wk_b = p[f"{prefix}_wk_b"].reshape(kvl, h, nd)
+    q_eff = jnp.einsum("bhqd,chd->bhqc", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))              # (B,H,1,kvl)
+    scale = 1.0 / ((nd + rd) ** 0.5)
+    sc = (jnp.einsum("bhqc,bsc->bhqs", q_eff, ckv.astype(jnp.float32))
+          + jnp.einsum("bhqd,bsd->bhqs", q_rope.astype(jnp.float32),
+                       krope.astype(jnp.float32))) * scale
+    valid = jnp.arange(ckv.shape[1]) <= pos
+    sc = jnp.where(valid[None, None, None], sc, -jnp.inf)
+    w = jax.nn.softmax(sc, axis=-1)
+    ctx = jnp.einsum("bhqs,bsc->bhqc", w, ckv.astype(jnp.float32))
+    # Absorb W_uv into the output.
+    wv_b = p[f"{prefix}_wv_b"].reshape(kvl, h, vd)
+    o = jnp.einsum("bhqc,chd->bhqd", ctx, wv_b.astype(jnp.float32))
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * vd).astype(x.dtype)
+    return o @ p[f"{prefix}_wo"], {"ckv": ckv, "krope": krope}

@@ -1,0 +1,460 @@
+"""Model assembly: layer plans, scanned stacks, forward and cached decode.
+
+A model is described by a *layer plan*: a list of groups
+``(repeat_outer, [(repeat_inner, BlockDef), ...])``.  The stack applies an
+outer ``lax.scan`` over ``repeat_outer`` super-blocks, and inner scans over
+``repeat_inner`` runs of identical blocks, so the traced HLO contains each
+distinct block body exactly once regardless of depth — compile time and
+program size are depth-independent (61-layer DeepSeek traces 2 block bodies).
+
+Examples:
+  tinyllama   [(1, [(22, dense)])]
+  gemma3-1b   [(4, [(5, local), (1, global)]), (1, [(2, local)])]
+  deepseek-v3 [(1, [(3, mla_dense)]), (1, [(58, mla_moe)])]
+  jamba       [(9, [attn_dense, mamba_moe, mamba_dense, ... (8 defs)])]
+  llama3.2-V  [(20, [(4, dense), (1, cross_dense)])]
+
+Block flavors:
+  dense / moe                GQA attention + SwiGLU / MoE FFN
+  mla_dense / mla_moe        DeepSeek MLA attention + FFN
+  mamba_dense / mamba_moe    Mamba mixer + FFN
+  rwkv                       RWKV-6 time-mix + channel-mix
+  enc_dense                  bidirectional attention + FFN (encoder)
+  cross_dense                cross-attention + FFN (Llama-3.2-V image layers)
+  self_cross_dense           self + cross + FFN (Seamless decoder)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.activation_sharding import constrain
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models.common import (ModelConfig, ParamCollector, apply_dense_ffn,
+                                 init_dense_ffn, rms_norm)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDef:
+    flavor: str
+    window: Optional[int] = None
+    rope_theta: Optional[float] = None
+    d_ff: Optional[int] = None          # dense-FFN width override
+
+
+Group = Tuple[int, List[Tuple[int, BlockDef]]]   # (repeat_outer, subs)
+
+
+# --------------------------------------------------------------------------- #
+# Plans
+# --------------------------------------------------------------------------- #
+
+
+def layer_plan(cfg: ModelConfig) -> List[Group]:
+    """Decoder-stack plan for each architecture family."""
+    if cfg.rwkv:
+        return [(1, [(cfg.n_layers, BlockDef("rwkv"))])]
+
+    if cfg.attn_period:                                   # jamba hybrid
+        period = cfg.attn_period
+        assert cfg.n_layers % period == 0
+        subs: List[Tuple[int, BlockDef]] = []
+        for i in range(period):
+            mixer = "dense" if i == cfg.attn_offset else "mamba_dense"
+            if cfg.moe is not None and i % 2 == 1:        # MoE every 2nd layer
+                mixer = mixer.replace("dense", "moe") if "mamba" in mixer \
+                    else "moe"
+            subs.append((1, BlockDef(mixer)))
+        return [(cfg.n_layers // period, subs)]
+
+    if cfg.mla:                                           # deepseek-v3
+        plan: List[Group] = []
+        if cfg.dense_prefix:
+            plan.append((1, [(cfg.dense_prefix,
+                              BlockDef("mla_dense",
+                                       d_ff=cfg.dense_prefix_d_ff))]))
+        plan.append((1, [(cfg.n_layers - cfg.dense_prefix,
+                          BlockDef("mla_moe"))]))
+        return plan
+
+    if cfg.global_every:                                  # gemma3 local:global
+        ge = cfg.global_every
+        local = BlockDef("dense", window=cfg.sliding_window)
+        glob = BlockDef("dense",
+                        rope_theta=cfg.rope_theta_global or cfg.rope_theta)
+        nfull, rem = divmod(cfg.n_layers, ge)
+        plan = [(nfull, [(ge - 1, local), (1, glob)])]
+        if rem:
+            plan.append((1, [(rem, local)]))
+        return plan
+
+    if cfg.cross_attn_every and cfg.encoder_layers == 0:  # llama-3.2-vision
+        ce = cfg.cross_attn_every
+        assert cfg.n_layers % ce == 0
+        return [(cfg.n_layers // ce,
+                 [(ce - 1, BlockDef("dense")), (1, BlockDef("cross_dense"))])]
+
+    if cfg.encoder_layers:                                # seamless decoder
+        return [(1, [(cfg.n_layers, BlockDef("self_cross_dense"))])]
+
+    flavor = "moe" if cfg.moe is not None else "dense"
+    return [(1, [(cfg.n_layers, BlockDef(flavor,
+                                         window=cfg.sliding_window))])]
+
+
+def encoder_plan(cfg: ModelConfig) -> List[Group]:
+    if not cfg.encoder_layers:
+        return []
+    return [(1, [(cfg.encoder_layers, BlockDef("enc_dense"))])]
+
+
+# --------------------------------------------------------------------------- #
+# Block init / apply / cache / decode
+# --------------------------------------------------------------------------- #
+
+
+def _init_block(bd: BlockDef, cfg: ModelConfig, key: jax.Array
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    col = ParamCollector(key, cfg.param_dtype)
+    f = bd.flavor
+    col.zeros("norm1", (cfg.d_model,), ("embed",))
+    col.zeros("norm2", (cfg.d_model,), ("embed",))
+    if f in ("dense", "moe", "enc_dense", "self_cross_dense"):
+        attn_lib.init_attn(col, cfg, prefix="attn")
+    if f in ("mla_dense", "mla_moe"):
+        mla_lib.init_mla(col, cfg, prefix="mla")
+    if f in ("mamba_dense", "mamba_moe"):
+        mamba_lib.init_mamba(col, cfg, prefix="mamba")
+    if f in ("cross_dense", "self_cross_dense"):
+        attn_lib.init_attn(col, cfg, prefix="xattn", cross=True)
+        col.zeros("norm_x", (cfg.d_model,), ("embed",))
+    if f == "rwkv":
+        rwkv_lib.init_rwkv_time(col, cfg, prefix="tmix")
+        rwkv_lib.init_rwkv_channel(col, cfg, prefix="cmix")
+    elif f.endswith("moe"):
+        moe_lib.init_moe(col, cfg, prefix="moe")
+    else:
+        init_dense_ffn(col, cfg, bd.d_ff or cfg.d_ff, prefix="ffn")
+    return col.values, col.axes
+
+
+def _apply_block(bd: BlockDef, cfg: ModelConfig, p: Dict[str, Any],
+                 x: jax.Array, ctx: Dict[str, Any]
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward; returns (x, moe_aux)."""
+    f = bd.flavor
+    aux = jnp.zeros((), jnp.float32)
+    pos = ctx["positions"]
+
+    if f == "rwkv":
+        x = x + rwkv_lib.rwkv_time_fwd(p, cfg, rms_norm(x, p["norm1"],
+                                                        cfg.norm_eps))
+        x = x + rwkv_lib.rwkv_channel_fwd(p, cfg, rms_norm(x, p["norm2"],
+                                                           cfg.norm_eps))
+        return x, aux
+
+    # ---- mixer ----
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if f in ("dense", "moe", "enc_dense", "self_cross_dense"):
+        causal = f != "enc_dense"
+        x = x + attn_lib.attn_fwd(p, cfg, h, positions=pos, causal=causal,
+                                  window=bd.window,
+                                  rope_theta=bd.rope_theta, prefix="attn")
+    elif f in ("mla_dense", "mla_moe"):
+        x = x + mla_lib.mla_fwd(p, cfg, h, positions=pos, prefix="mla")
+    elif f in ("mamba_dense", "mamba_moe"):
+        x = x + mamba_lib.mamba_fwd(p, cfg, h, prefix="mamba")
+    elif f == "cross_dense":
+        pass                                   # no self-mixing on this layer
+    else:
+        raise ValueError(f)
+
+    # ---- cross attention ----
+    if f in ("cross_dense", "self_cross_dense"):
+        hx = rms_norm(x, p["norm_x"], cfg.norm_eps)
+        x = x + attn_lib.attn_fwd(p, cfg, hx, positions=pos,
+                                  kv_x=ctx["memory"], prefix="xattn")
+
+    # ---- FFN ----
+    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if f.endswith("moe"):
+        out, aux = moe_lib.moe_ffn(p, cfg, h2, prefix="moe")
+        x = x + out
+    else:
+        x = x + apply_dense_ffn(p, h2, prefix="ffn")
+    return x, aux
+
+
+def _init_block_cache(bd: BlockDef, cfg: ModelConfig, batch: int,
+                      max_len: int, mem_len: int) -> Dict[str, Any]:
+    f = bd.flavor
+    cache: Dict[str, Any] = {}
+    if f in ("dense", "moe", "self_cross_dense"):
+        cache.update(attn_lib.init_kv_cache(cfg, batch, max_len,
+                                            window=bd.window))
+    if f in ("mla_dense", "mla_moe"):
+        cache.update(mla_lib.init_mla_cache(cfg, batch, max_len))
+    if f in ("mamba_dense", "mamba_moe"):
+        cache.update(mamba_lib.init_mamba_cache(cfg, batch))
+    if f in ("cross_dense", "self_cross_dense"):
+        cache.update(attn_lib.init_cross_cache(cfg, batch, mem_len))
+    if f == "rwkv":
+        cache.update(rwkv_lib.init_rwkv_cache(cfg, batch))
+    return cache
+
+
+def _decode_block(bd: BlockDef, cfg: ModelConfig, p: Dict[str, Any],
+                  x: jax.Array, cache: Dict[str, Any], pos: jax.Array
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+    f = bd.flavor
+    new_cache = dict(cache)
+
+    if f == "rwkv":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        out, new_cache = rwkv_lib.rwkv_time_decode(p, cfg, h, new_cache)
+        x = x + out
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        out, new_cache = rwkv_lib.rwkv_channel_decode(p, cfg, h, new_cache)
+        return x + out, new_cache
+
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if f in ("dense", "moe", "self_cross_dense"):
+        out, kv = attn_lib.attn_decode(p, cfg, h,
+                                       {"k": cache["k"], "v": cache["v"]},
+                                       pos, window=bd.window,
+                                       rope_theta=bd.rope_theta)
+        new_cache.update(kv)
+        x = x + out
+    elif f in ("mla_dense", "mla_moe"):
+        out, kv = mla_lib.mla_decode(
+            p, cfg, h, {"ckv": cache["ckv"], "krope": cache["krope"]}, pos)
+        new_cache.update(kv)
+        x = x + out
+    elif f in ("mamba_dense", "mamba_moe"):
+        out, kv = mamba_lib.mamba_decode(
+            p, cfg, h, {"conv": cache["conv"], "ssm": cache["ssm"]})
+        new_cache.update(kv)
+        x = x + out
+    elif f == "cross_dense":
+        pass
+
+    if f in ("cross_dense", "self_cross_dense"):
+        hx = rms_norm(x, p["norm_x"], cfg.norm_eps)
+        x = x + attn_lib.cross_attn_decode(
+            p, cfg, hx, {"ck": cache["ck"], "cv": cache["cv"]})
+
+    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if f.endswith("moe"):
+        out, _ = moe_lib.moe_ffn(p, cfg, h2, prefix="moe")
+        x = x + out
+    else:
+        x = x + apply_dense_ffn(p, h2, prefix="ffn")
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Whole-model init / forward / decode
+# --------------------------------------------------------------------------- #
+
+
+def _init_stack(plan: List[Group], cfg: ModelConfig, key: jax.Array,
+                name: str) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    values: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    for gi, (ro, subs) in enumerate(plan):
+        gv: Dict[str, Any] = {}
+        ga: Dict[str, Any] = {}
+        for si, (ri, bd) in enumerate(subs):
+            key, k = jax.random.split(key)
+            keys = jax.random.split(k, ro * ri).reshape(ro, ri)
+            axes_capture: Dict[str, Any] = {}
+
+            def one(kk, bd=bd, cap=axes_capture):
+                v, a = _init_block(bd, cfg, kk)
+                cap.update(a)
+                return v
+
+            gv[f"s{si}"] = jax.vmap(jax.vmap(one))(keys)
+            ga[f"s{si}"] = {nm: ("layers", "layers") + tuple(a)
+                            for nm, a in axes_capture.items()}
+        values[f"{name}{gi}"] = gv
+        axes[f"{name}{gi}"] = ga
+    return values, axes
+
+
+def init_params(cfg: ModelConfig, key: jax.Array
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (params, logical_axes) — parallel pytrees."""
+    key, ke, ku, kf = jax.random.split(key, 4)
+    values: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    col = ParamCollector(ke, cfg.param_dtype)
+    col.dense("embed", (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+              scale=0.02)
+    col.zeros("norm_f", (cfg.d_model,), ("embed",))
+    if not cfg.tie_embeddings:
+        col.dense("unembed", (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                  scale=0.02)
+    if cfg.encoder_layers:
+        col.zeros("enc_norm_f", (cfg.d_model,), ("embed",))
+    values.update(col.values)
+    axes.update(col.axes)
+
+    v, a = _init_stack(layer_plan(cfg), cfg, ku, "g")
+    values.update(v); axes.update(a)
+    if cfg.encoder_layers:
+        v, a = _init_stack(encoder_plan(cfg), cfg, kf, "enc_g")
+        values.update(v); axes.update(a)
+    return values, axes
+
+
+def _scan_or_unroll(body, carry, xs, length: int, scan: bool):
+    """lax.scan when ``scan`` else a python unroll (exact HLO accounting)."""
+    if scan:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        carry, y = body(carry, jax.tree.map(lambda t: t[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _run_stack(plan: List[Group], cfg: ModelConfig, params: Dict[str, Any],
+               x: jax.Array, ctx: Dict[str, Any], name: str
+               ) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    for gi, (ro, subs) in enumerate(plan):
+        stacked = params[f"{name}{gi}"]
+
+        def outer_body(carry, layer_p, subs=subs):
+            x_c, aux_c = carry
+            for si, (ri, bd) in enumerate(subs):
+                sub_p = layer_p[f"s{si}"]
+
+                def block_fn(xx, pp, bd=bd):
+                    out, a_ = _apply_block(bd, cfg, pp, xx, ctx)
+                    return constrain(out, "dp", None, None), a_
+                if cfg.remat:
+                    block_fn = jax.checkpoint(block_fn)
+                if ri == 1:
+                    x_c, a = block_fn(x_c, jax.tree.map(lambda t: t[0], sub_p))
+                    aux_c = aux_c + a
+                else:
+                    def inner(carry2, pp, block_fn=block_fn):
+                        x2, a2 = carry2
+                        x2, ad = block_fn(x2, pp)
+                        return (x2, a2 + ad), None
+                    (x_c, aux_c), _ = _scan_or_unroll(
+                        inner, (x_c, aux_c), sub_p, ri, cfg.scan_layers)
+            return (x_c, aux_c), None
+
+        (x, aux), _ = _scan_or_unroll(outer_body, (x, aux), stacked, ro,
+                                      cfg.scan_layers)
+    return x, aux
+
+
+def encode(cfg: ModelConfig, params: Dict[str, Any],
+           frames: jax.Array) -> jax.Array:
+    """Run the (bidirectional) encoder stack on stub frame embeddings."""
+    frames = frames.astype(cfg.dtype)
+    ectx = {"positions": jnp.arange(frames.shape[1]), "memory": None}
+    memory, _ = _run_stack(encoder_plan(cfg), cfg, params, frames,
+                           ectx, "enc_g")
+    return rms_norm(memory, params["enc_norm_f"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params: Dict[str, Any],
+            batch: Dict[str, jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits (B, S, vocab), moe_aux)."""
+    memory = None
+    if cfg.encoder_layers:
+        memory = encode(cfg, params, batch["enc_frames"])  # (B, Se, d) stub
+    elif cfg.cross_attn_every:
+        memory = batch["img_embed"].astype(cfg.dtype)      # (B, Ni, d) stub
+
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = constrain(x, "dp", None, None)
+    ctx = {"positions": jnp.arange(tokens.shape[1]), "memory": memory}
+    x, aux = _run_stack(layer_plan(cfg), cfg, params, x, ctx, "g")
+    x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+    unemb = (params["embed"].T if cfg.tie_embeddings
+             else params["unembed"])
+    logits = constrain(x @ unemb.astype(cfg.dtype), "dp", None, "tp")
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               mem_len: int = 0) -> Dict[str, Any]:
+    """Decode cache pytree, stacked to mirror the scanned parameter layout."""
+    caches: Dict[str, Any] = {}
+    for gi, (ro, subs) in enumerate(layer_plan(cfg)):
+        g: Dict[str, Any] = {}
+        for si, (ri, bd) in enumerate(subs):
+            one = _init_block_cache(bd, cfg, batch, max_len, mem_len)
+            g[f"s{si}"] = jax.tree.map(
+                lambda t: jnp.zeros((ro, ri) + t.shape, t.dtype), one)
+        caches[f"g{gi}"] = g
+    return caches
+
+
+def decode_step(cfg: ModelConfig, params: Dict[str, Any], token: jax.Array,
+                cache: Dict[str, Any], pos: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token serve step. token: (B, 1) int32; pos: scalar int32.
+
+    Returns (logits (B, vocab), new cache).
+    """
+    x = params["embed"][token].astype(cfg.dtype)           # (B, 1, d)
+    new_caches: Dict[str, Any] = {}
+    for gi, (ro, subs) in enumerate(layer_plan(cfg)):
+        stacked_p = params[f"g{gi}"]
+        stacked_c = cache[f"g{gi}"]
+
+        def outer_body(x_c, inp, subs=subs):
+            layer_p, layer_c = inp
+            new_layer_c = {}
+            for si, (ri, bd) in enumerate(subs):
+                sub_p, sub_c = layer_p[f"s{si}"], layer_c[f"s{si}"]
+                if ri == 1:
+                    x_c, nc = _decode_block(
+                        bd, cfg, jax.tree.map(lambda t: t[0], sub_p),
+                        x_c, jax.tree.map(lambda t: t[0], sub_c), pos)
+                    new_layer_c[f"s{si}"] = jax.tree.map(
+                        lambda t: t[None], nc)
+                else:
+                    def inner(x2, pc, bd=bd):
+                        pp, cc = pc
+                        x2, nc = _decode_block(bd, cfg, pp, x2, cc, pos)
+                        return x2, nc
+                    x_c, nc = _scan_or_unroll(inner, x_c, (sub_p, sub_c),
+                                              ri, cfg.scan_layers)
+                    new_layer_c[f"s{si}"] = nc
+            return x_c, new_layer_c
+
+        x, nc = _scan_or_unroll(outer_body, x, (stacked_p, stacked_c), ro,
+                                cfg.scan_layers)
+        new_caches[f"g{gi}"] = nc
+    x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+    unemb = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = (x @ unemb.astype(cfg.dtype))[:, 0]
+    return logits, new_caches
+
+
+def count_params(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k)[0],
+                            jax.random.key(0))
+    import numpy as _np
+    return int(sum(_np.prod(s.shape) for s in jax.tree.leaves(shapes)))

@@ -1,0 +1,20 @@
+from repro.similarity.measures import (
+    PointFeatures,
+    cosine_pairwise,
+    dot_pairwise,
+    jaccard_pairwise,
+    mixture_pairwise,
+    pairwise_similarity,
+)
+from repro.similarity.learned import LearnedSimilarity, TwoTowerConfig
+
+__all__ = [
+    "PointFeatures",
+    "cosine_pairwise",
+    "dot_pairwise",
+    "jaccard_pairwise",
+    "mixture_pairwise",
+    "pairwise_similarity",
+    "LearnedSimilarity",
+    "TwoTowerConfig",
+]

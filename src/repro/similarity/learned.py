@@ -1,0 +1,127 @@
+"""Learned pairwise similarity model (paper Appendix C.2 / D.3, after Grale [24]).
+
+Architecture (faithful to Appendix D.3):
+  * a shared-weight *embedding tower* maps node features -> embedding
+    (two hidden layers of width ``tower_hidden`` with ReLU [34]);
+  * the pairwise embedding is the Hadamard product of the two tower outputs;
+  * it is concatenated with hand-crafted pairwise features (cosine similarity
+    of the dense features, Jaccard similarity of the sets, and optionally a
+    co-occurrence indicator);
+  * a final MLP (two hidden layers, ReLU) produces one unthresholded scalar —
+    the similarity score mu(x, y).
+
+The model is symmetric by construction (shared towers + Hadamard product +
+symmetric pairwise features).
+
+Training (examples/train_embedder.py) follows the paper: positives are
+same-category pairs, negatives different-category pairs, drawn from LSH
+candidate buckets; the loss is sigmoid binary cross-entropy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.similarity.measures import (
+    PointFeatures, cosine_pairwise, jaccard_pairwise)
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    in_dim: int
+    tower_hidden: int = 100
+    embed_dim: int = 32
+    head_hidden: int = 100
+    use_set_features: bool = True
+    dtype: Any = jnp.float32
+
+
+def _dense_init(key, shape, dtype):
+    fan_in = shape[0]
+    return jax.random.normal(key, shape, dtype) * jnp.sqrt(2.0 / fan_in)
+
+
+def _mlp_init(key, dims, dtype, name):
+    params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k = jax.random.split(key)
+        params[f"{name}_w{i}"] = _dense_init(k, (a, b), dtype)
+        params[f"{name}_b{i}"] = jnp.zeros((b,), dtype)
+    return params
+
+
+def _mlp_apply(params, name, x, n_layers, final_relu=False):
+    for i in range(n_layers):
+        x = x @ params[f"{name}_w{i}"] + params[f"{name}_b{i}"]
+        if i < n_layers - 1 or final_relu:
+            x = jax.nn.relu(x)
+    return x
+
+
+class LearnedSimilarity:
+    """Two-tower + Hadamard-product pairwise similarity model."""
+
+    def __init__(self, cfg: TwoTowerConfig):
+        self.cfg = cfg
+        self._n_pair_feats = 1 + (1 if cfg.use_set_features else 0)
+
+    def init(self, key: jax.Array) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        params = _mlp_init(
+            k1, [cfg.in_dim, cfg.tower_hidden, cfg.tower_hidden, cfg.embed_dim],
+            cfg.dtype, "tower")
+        head_in = cfg.embed_dim + self._n_pair_feats
+        params.update(_mlp_init(
+            k2, [head_in, cfg.head_hidden, cfg.head_hidden, 1], cfg.dtype, "head"))
+        return params
+
+    def embed(self, params, dense: jax.Array) -> jax.Array:
+        """Tower embedding of node features; shape (..., embed_dim).
+
+        At serving scale this is computed ONCE per point (batched over the
+        data shards) and cached — only the cheap pair head runs per candidate
+        pair, which is what makes learned similarity affordable inside Stars.
+        """
+        return _mlp_apply(params, "tower", dense, n_layers=3)
+
+    def pair_score_from_embed(self, params, emb_a, emb_b, pair_feats) -> jax.Array:
+        """Score pairs given precomputed embeddings.
+
+        emb_a: (..., A, E);  emb_b: (..., B, E);  pair_feats: (..., A, B, F)
+        returns (..., A, B).
+        """
+        had = emb_a[..., :, None, :] * emb_b[..., None, :, :]
+        x = jnp.concatenate([had, pair_feats], axis=-1)
+        return _mlp_apply(params, "head", x, n_layers=3)[..., 0]
+
+    def pairwise(self, params, fa: PointFeatures, fb: PointFeatures) -> jax.Array:
+        """Full batched pairwise scores (used as a Stars similarity measure)."""
+        emb_a = self.embed(params, fa.dense)
+        emb_b = self.embed(params, fb.dense)
+        feats = [cosine_pairwise(fa.dense, fb.dense)[..., None]]
+        if self.cfg.use_set_features:
+            feats.append(jaccard_pairwise(
+                fa.set_idx, fa.set_w, fa.set_mask,
+                fb.set_idx, fb.set_w, fb.set_mask)[..., None])
+        pair_feats = jnp.concatenate(feats, axis=-1)
+        return self.pair_score_from_embed(params, emb_a, emb_b, pair_feats)
+
+    def loss(self, params, fa: PointFeatures, fb: PointFeatures,
+             labels: jax.Array) -> jax.Array:
+        """Sigmoid BCE on (aligned) pairs: fa[i] vs fb[i], labels (n,)."""
+        # Score aligned pairs by taking the diagonal of a (n, 1)x(1, n) block
+        # is wasteful; instead expand dims so A = B = 1 per-row.
+        expand = lambda x: None if x is None else x[:, None]
+        fa1 = PointFeatures(*(expand(getattr(fa, f.name))
+                              for f in dataclasses.fields(PointFeatures)))
+        fb1 = PointFeatures(*(expand(getattr(fb, f.name))
+                              for f in dataclasses.fields(PointFeatures)))
+        logits = self.pairwise(params, fa1, fb1)[:, 0, 0]
+        z = jax.nn.log_sigmoid(logits)
+        zn = jax.nn.log_sigmoid(-logits)
+        return -jnp.mean(labels * z + (1.0 - labels) * zn)

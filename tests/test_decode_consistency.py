@@ -1,0 +1,103 @@
+"""Token-by-token decode must reproduce the full forward pass exactly
+(the KV/latent/recurrent caches are correct)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (MambaConfig, ModelConfig, MoEConfig, decode_step,
+                          forward, init_cache, init_params)
+
+BASE = dict(n_layers=3, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+            vocab=64, dtype=jnp.float32, param_dtype=jnp.float32,
+            remat=False)
+
+
+def _run(cfg, extra=None, atol=5e-5):
+    params, _ = init_params(cfg, jax.random.key(1))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    mem_len = 0
+    if extra:
+        batch.update(extra)
+        mem_len = next(iter(extra.values())).shape[1]
+    logits, _ = forward(cfg, params, batch)
+    cache = init_cache(cfg, B, S, mem_len=mem_len)
+    if mem_len:
+        from repro.models import attention as attn_lib
+        from repro.models.stack import encode, layer_plan
+        mem = next(iter(extra.values())).astype(cfg.dtype)
+        if cfg.encoder_layers:
+            mem = encode(cfg, params, mem)   # cross-attn uses ENCODED memory
+        for gi, (ro, subs) in enumerate(layer_plan(cfg)):
+            for si, (ri, bd) in enumerate(subs):
+                if bd.flavor in ("cross_dense", "self_cross_dense"):
+                    p = params[f"g{gi}"][f"s{si}"]
+                    kv = jax.vmap(jax.vmap(
+                        lambda pp: attn_lib.cross_prefill_cache(
+                            pp, cfg, mem)))(p)
+                    cache[f"g{gi}"][f"s{si}"].update(kv)
+    errs = []
+    for t in range(S):
+        lg, cache = decode_step(cfg, params, toks[:, t:t + 1], cache,
+                                jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(lg - logits[:, t]))))
+    assert max(errs) < atol, max(errs)
+
+
+def test_dense_gqa():
+    _run(ModelConfig(name="t", kind="dense", **BASE))
+
+
+def test_qk_norm():
+    _run(ModelConfig(name="t", kind="dense", qk_norm=True, **BASE))
+
+
+def test_sliding_window_ring_cache():
+    b = dict(BASE); b.update(n_layers=6)
+    _run(ModelConfig(name="t", kind="dense", sliding_window=4,
+                     global_every=3, rope_theta_global=1e6, **b))
+
+
+def test_mla_absorbed_decode():
+    _run(ModelConfig(name="t", kind="dense", mla=True, mla_q_lora=32,
+                     mla_kv_lora=16, mla_rope_dim=8, mla_nope_dim=16,
+                     mla_v_dim=16, dense_prefix=3, dense_prefix_d_ff=64,
+                     moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32),
+                     **BASE))
+
+
+def test_moe_large_capacity():
+    # capacity_factor high enough that no token ever drops -> exact match
+    _run(ModelConfig(name="t", kind="moe",
+                     moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
+                                   capacity_factor=8.0), **BASE))
+
+
+def test_mamba_hybrid():
+    b = dict(BASE); b.update(n_layers=4)
+    _run(ModelConfig(name="t", kind="hybrid", attn_period=4, attn_offset=0,
+                     mamba=MambaConfig(d_state=4),
+                     moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
+                                   capacity_factor=8.0), **b), atol=2e-4)
+
+
+def test_rwkv6():
+    _run(ModelConfig(name="t", kind="ssm", rwkv=True, rwkv_head_dim=8,
+                     **BASE))
+
+
+def test_vlm_cross_attention():
+    rs = np.random.RandomState(0)
+    _run(ModelConfig(name="t", kind="vlm", cross_attn_every=3, **BASE),
+         extra={"img_embed": jnp.asarray(rs.randn(2, 6, 32), jnp.float32)})
+
+
+def test_encdec():
+    rs = np.random.RandomState(1)
+    _run(ModelConfig(name="t", kind="audio", encoder_layers=2, **BASE),
+         extra={"enc_frames": jnp.asarray(rs.randn(2, 6, 32), jnp.float32)})

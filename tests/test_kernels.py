@@ -1,0 +1,87 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.leader_score import leader_score
+from repro.kernels.simhash import simhash_packed
+
+
+@pytest.mark.parametrize("n,d,m", [(8, 16, 32), (70, 40, 64), (128, 64, 128),
+                                   (33, 7, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_simhash_matches_ref(n, d, m, dtype):
+    key = jax.random.key(n * m)
+    x = jax.random.normal(key, (n, d), dtype)
+    proj = jax.random.normal(jax.random.fold_in(key, 1), (d, m), dtype)
+    out = simhash_packed(x, proj, block_n=32, block_m=32, interpret=True)
+    exp = ref.simhash_packed_ref(x, proj)
+    assert out.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("nw,s,w,d", [(1, 4, 8, 16), (5, 8, 24, 16),
+                                      (3, 25, 250, 64), (2, 1, 16, 8)])
+@pytest.mark.parametrize("normalized", [True, False])
+def test_leader_score_matches_ref(nw, s, w, d, normalized):
+    key = jax.random.key(nw * w)
+    l = jax.random.normal(key, (nw, s, d))
+    m = jax.random.normal(jax.random.fold_in(key, 1), (nw, w, d))
+    lok = jax.random.uniform(jax.random.fold_in(key, 2), (nw, s)) > 0.3
+    mok = jax.random.uniform(jax.random.fold_in(key, 3), (nw, w)) > 0.3
+    out = np.asarray(leader_score(l, m, lok, mok, normalized=normalized,
+                                  interpret=True))
+    exp = np.asarray(ref.leader_score_ref(l, m, lok, mok,
+                                          normalized=normalized))
+    assert (np.isneginf(out) == np.isneginf(exp)).all()
+    fin = np.isfinite(exp)
+    np.testing.assert_allclose(out[fin], exp[fin], atol=2e-5)
+
+
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d", [
+    (1, 2, 2, 32, 32, 16),
+    (2, 4, 2, 64, 64, 32),
+    (2, 8, 1, 32, 32, 64),     # MQA
+    (1, 4, 4, 32, 128, 16),    # prefill with longer KV (right-aligned)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, hq, hkv, sq, sk, d, dtype):
+    key = jax.random.key(b + sq)
+    q = jax.random.normal(key, (b, hq, sq, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, hkv, sk, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, sk, d), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                          interpret=True)
+    exp = ref.mha_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [8, 16, 64])
+def test_flash_attention_sliding_window(window):
+    key = jax.random.key(window)
+    q = jax.random.normal(key, (2, 4, 64, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 2, 64, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 2, 64, 32))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    exp = ref.mha_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
+
+
+def test_flash_block_skipping_equals_full():
+    """Sliding-window block skip must not change results vs tiny blocks."""
+    key = jax.random.key(7)
+    q = jax.random.normal(key, (1, 2, 128, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 128, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 128, 16))
+    a = flash_attention(q, k, v, causal=True, window=32, block_q=32,
+                        block_k=32, interpret=True)
+    b = flash_attention(q, k, v, causal=True, window=32, block_q=64,
+                        block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

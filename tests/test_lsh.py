@@ -1,0 +1,109 @@
+"""LSH family properties (paper §2 Def 2.1, Prop 3.3/B.1-B.3).
+
+Collision-probability laws, verified empirically with hypothesis-driven
+inputs:
+  SimHash:  Pr[h(x)=h(y)] = 1 - theta(x,y)/pi          [13]
+  MinHash:  Pr[h(A)=h(B)] = |A n B| / |A u B|           [12]
+  weighted MinHash (exponential race): probability-Jaccard [33]
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing, lsh
+from repro.similarity.measures import PointFeatures
+
+
+def _sim_collision_rate(x, y, m=4096, seed=0):
+    feats = PointFeatures(dense=jnp.stack([x, y]))
+    words = lsh.sketch(feats, lsh.HashFamilyConfig("simhash", m=m),
+                       rep_seed=seed)
+    return float(jnp.mean(words[0] == words[1]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_simhash_collision_probability(seed):
+    rs = np.random.RandomState(seed % 10_000)
+    x = rs.randn(24).astype(np.float32)
+    y = rs.randn(24).astype(np.float32)
+    rate = _sim_collision_rate(jnp.asarray(x), jnp.asarray(y), seed=seed)
+    theta = np.arccos(np.clip(
+        x @ y / (np.linalg.norm(x) * np.linalg.norm(y)), -1, 1))
+    expected = 1 - theta / np.pi
+    assert abs(rate - expected) < 0.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 10_000))
+def test_minhash_collision_probability(seed):
+    rs = np.random.RandomState(seed)
+    universe = 1000
+    a = rs.choice(universe, size=24, replace=False)
+    b = np.concatenate([a[:12], rs.choice(universe, 12) + universe])
+    nnz = 24
+    idx = jnp.asarray(np.stack([a, b]), jnp.int32)
+    mask = jnp.ones((2, nnz), bool)
+    seeds = hashing.hash_u32(jnp.arange(2048, dtype=jnp.uint32), seed)
+    words = lsh.minhash_words(idx, mask, seeds)
+    rate = float(jnp.mean(words[0] == words[1]))
+    inter = np.intersect1d(a, b).size
+    union = np.union1d(a, b).size
+    assert abs(rate - inter / union) < 0.06
+
+
+def test_weighted_minhash_identical_sets_always_collide():
+    idx = jnp.asarray([[1, 5, 9], [1, 5, 9]], jnp.int32)
+    w = jnp.asarray([[0.5, 2.0, 1.0]] * 2, jnp.float32)
+    mask = jnp.ones((2, 3), bool)
+    seeds = hashing.hash_u32(jnp.arange(256, dtype=jnp.uint32), 3)
+    words = lsh.weighted_minhash_words(idx, w, mask, seeds)
+    assert bool(jnp.all(words[0] == words[1]))
+
+
+def test_weighted_minhash_monotone_in_overlap():
+    """More shared weight -> higher collision rate."""
+    rs = np.random.RandomState(0)
+    base = rs.choice(5000, 32, replace=False)
+    idx_a = base
+    idx_b_hi = np.concatenate([base[:28], rs.choice(5000, 4) + 5000])
+    idx_b_lo = np.concatenate([base[:8], rs.choice(5000, 24) + 5000])
+    seeds = hashing.hash_u32(jnp.arange(2048, dtype=jnp.uint32), 7)
+    mask = jnp.ones((1, 32), bool)
+    w = jnp.ones((1, 32), jnp.float32)
+
+    def rate(ia, ib):
+        wa = lsh.weighted_minhash_words(jnp.asarray(ia[None], jnp.int32), w,
+                                        mask, seeds)
+        wb = lsh.weighted_minhash_words(jnp.asarray(ib[None], jnp.int32), w,
+                                        mask, seeds)
+        return float(jnp.mean(wa == wb))
+
+    assert rate(idx_a, idx_b_hi) > rate(idx_a, idx_b_lo) + 0.2
+
+
+def test_pack_bits_roundtrip():
+    rs = np.random.RandomState(1)
+    bits = rs.rand(13, 45) > 0.5
+    packed = np.asarray(lsh.pack_bits(jnp.asarray(bits)))
+    for i in range(13):
+        for j in range(45):
+            assert bool((packed[i, j // 32] >> (j % 32)) & 1) == bits[i, j]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+def test_hamming_pairwise_matches_popcount(a, b):
+    pa = jnp.asarray([[a]], jnp.uint32)
+    pb = jnp.asarray([[b]], jnp.uint32)
+    got = int(lsh.hamming_pairwise(pa, pb)[0, 0])
+    assert got == bin(a ^ b).count("1")
+
+
+def test_mix32_is_bijective_sample():
+    xs = jnp.arange(100_000, dtype=jnp.uint32)
+    ys = np.asarray(hashing.mix32(xs))
+    assert np.unique(ys).size == xs.size

@@ -1,0 +1,114 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward + one train step on CPU, asserting shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_reduced
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.train import AdamWConfig, TrainState, make_train_step
+
+
+def _batch_for(cfg, b=2, s=16):
+    batch = {"tokens": jnp.ones((b, s), jnp.int32)}
+    if cfg.encoder_layers:
+        batch["enc_frames"] = jnp.ones((b, 8, cfg.d_model), jnp.float32)
+    if cfg.cross_attn_every and not cfg.encoder_layers:
+        batch["img_embed"] = jnp.ones((b, cfg.modality_tokens, cfg.d_model),
+                                      jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_forward_shapes_and_finite(arch):
+    import dataclasses
+    cfg = dataclasses.replace(get_reduced(arch), dtype=jnp.float32,
+                              param_dtype=jnp.float32)
+    params, axes = init_params(cfg, jax.random.key(0))
+    batch = _batch_for(cfg)
+    logits, aux = forward(cfg, params, batch)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_train_step(arch):
+    import dataclasses
+    cfg = dataclasses.replace(get_reduced(arch), dtype=jnp.float32,
+                              param_dtype=jnp.float32)
+    params, _ = init_params(cfg, jax.random.key(0))
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    state = TrainState.create(opt, params)
+    step = jax.jit(make_train_step(cfg, opt))
+    state, m = step(state, _batch_for(cfg))
+    assert np.isfinite(float(m["loss"]))
+    assert int(state.step) == 1
+    # params actually changed
+    p0 = jax.tree.leaves(params)[0]
+    p1 = jax.tree.leaves(state.params)[0]
+    assert not np.allclose(np.asarray(p0), np.asarray(p1))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_decode_step(arch):
+    import dataclasses
+    cfg = dataclasses.replace(get_reduced(arch), dtype=jnp.float32,
+                              param_dtype=jnp.float32)
+    params, _ = init_params(cfg, jax.random.key(0))
+    mem_len = 8 if (cfg.encoder_layers or cfg.cross_attn_every) else 0
+    cache = init_cache(cfg, 2, 32, mem_len=mem_len)
+    logits, cache2 = decode_step(cfg, params, jnp.ones((2, 1), jnp.int32),
+                                 cache, jnp.int32(0))
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    # cache structure preserved
+    assert jax.tree_util.tree_structure(cache) == \
+        jax.tree_util.tree_structure(cache2)
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned hyperparameters (the shape sheet)."""
+    from repro.configs import get_config
+    specs = {
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    }
+    for arch, (L, d, h, kv, ff, v) in specs.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.n_heads == h, arch
+        assert cfg.n_kv_heads == kv, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab == v, arch
+
+
+def test_moe_expert_counts():
+    from repro.configs import get_config
+    assert get_config("olmoe-1b-7b").moe.num_experts == 64
+    assert get_config("olmoe-1b-7b").moe.top_k == 8
+    ds = get_config("deepseek-v3-671b").moe
+    assert ds.num_experts == 256 and ds.top_k == 8 and ds.num_shared == 1
+    jb = get_config("jamba-1.5-large-398b").moe
+    assert jb.num_experts == 16 and jb.top_k == 2
+
+
+def test_param_counts_near_nameplate():
+    from repro.configs import get_config
+    from repro.models import count_params
+    targets = {"deepseek-v3-671b": 671e9, "jamba-1.5-large-398b": 398e9,
+               "tinyllama-1.1b": 1.1e9, "qwen3-8b": 8.2e9}
+    for arch, t in targets.items():
+        n = count_params(get_config(arch))
+        assert abs(n - t) / t < 0.05, (arch, n)

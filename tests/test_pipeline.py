@@ -1,0 +1,41 @@
+"""Pipeline parallelism (distributed/pipeline.py): GPipe schedule exactness."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("microbatches", [4, 8, 16])
+def test_pipeline_matches_sequential(microbatches):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+        import json
+        import jax, jax.numpy as jnp
+        from repro.distributed.pipeline import pipeline_apply
+        mesh = jax.make_mesh((4,), ("pipe",))
+        key = jax.random.key(0)
+        ws = jax.random.normal(key, (4, 8, 8)) * 0.3
+        def stage_fn(w, x):
+            return jnp.tanh(x @ w)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (16, 8))
+        y = pipeline_apply(stage_fn, ws, x, mesh,
+                           microbatches={microbatches})
+        ref = x
+        for i in range(4):
+            ref = jnp.tanh(ref @ ws[i])
+        print(json.dumps({{"err": float(jnp.max(jnp.abs(y - ref)))}}))
+    """)
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err"] < 1e-5

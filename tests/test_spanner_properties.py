@@ -1,0 +1,135 @@
+"""Two-hop spanner properties (paper Theorems 3.1, 3.4, 2.5/A.3).
+
+Property tests over randomized clustered datasets:
+  * Stars 1 never emits an edge below r1 (deterministic, Thm 3.1 cond 1).
+  * Stars 1 with enough repetitions two-hop-connects all pairs with
+    sim >= r2 (Thm 3.1 cond 2, w.h.p.).
+  * Stars 2 recovers a large fraction of k-ANN within two hops with far
+    fewer comparisons than brute force (Thm 3.4 + Fig 1/2 shape).
+  * Components of an (r/c, r) spanner interleave threshold-graph
+    components (Observation A.1 / Corollary A.2).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import (HashFamilyConfig, StarsConfig, allpairs_graph,
+                        build_graph)
+from repro.core.spanner import Graph
+from repro.data import mnist_like_points
+from repro.graph import (connected_components_np, neighbor_recall,
+                         two_hop_threshold_recall)
+from repro.graph.components import num_components
+
+
+def _dataset(seed, n=600, d=24, classes=6, spread=0.25):
+    feats, labels = mnist_like_points(n=n, d=d, classes=classes,
+                                      spread=spread, seed=seed)
+    return feats, labels
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_stars1_never_edges_below_r1(seed):
+    feats, _ = _dataset(seed)
+    r1 = 0.6
+    cfg = StarsConfig(mode="lsh", scoring="stars",
+                      family=HashFamilyConfig("simhash", m=8),
+                      measure="cosine", r=6, window=128, leaders=8, r1=r1,
+                      degree_cap=None, seed=seed)
+    g = build_graph(feats, cfg)
+    if g.num_edges:
+        assert float(g.w.min()) > r1
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_stars1_two_hop_connects_similar_pairs(seed):
+    feats, _ = _dataset(seed, n=400, spread=0.1)   # tight: r2-pairs exist
+    r1, r2 = 0.5, 0.8
+    cfg = StarsConfig(mode="lsh", scoring="stars",
+                      family=HashFamilyConfig("simhash", m=6),
+                      measure="cosine", r=40, window=256, leaders=12, r1=r1,
+                      degree_cap=None, seed=seed)
+    g = build_graph(feats, cfg)
+    # ground truth pairs with sim >= r2
+    x = np.asarray(feats.dense)
+    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    sims = xn @ xn.T
+    np.fill_diagonal(sims, -1)
+    queries = np.arange(60)
+    truth = [np.flatnonzero(sims[q] >= r2) for q in queries]
+    assume(sum(1 for t in truth if t.size > 0) >= 5)
+    rec = two_hop_threshold_recall(g, queries, truth, min_edge_w=r1)
+    assert rec > 0.95
+
+
+def test_stars2_knn_recall_with_fewer_comparisons():
+    feats, _ = _dataset(0, n=1500, spread=0.2)
+    k = 10
+    cfg = StarsConfig(mode="sorting", scoring="stars",
+                      family=HashFamilyConfig("simhash", m=24),
+                      measure="cosine", r=30, window=16 * k, leaders=12,
+                      degree_cap=50, seed=1)
+    g = build_graph(feats, cfg)
+    x = np.asarray(feats.dense)
+    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    sims = xn @ xn.T
+    np.fill_diagonal(sims, -np.inf)
+    queries = np.arange(100)
+    truth = [np.argsort(-sims[q])[:k] for q in queries]
+    rec = neighbor_recall(g, queries, truth, hops=2, k_cap=k)
+    brute = feats.n * (feats.n - 1) // 2
+    assert rec > 0.8
+    assert g.stats["comparisons"] < brute  # far fewer than AllPair
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_spanner_components_interleave_threshold_graphs(seed):
+    """Observation A.1: CC(r-threshold) refines CC(spanner) refines
+    CC(r/c-threshold)."""
+    feats, _ = _dataset(seed, n=300)
+    r, c = 0.75, 1.5
+    cfg = StarsConfig(mode="lsh", scoring="stars",
+                      family=HashFamilyConfig("simhash", m=6),
+                      measure="cosine", r=40, window=256, leaders=10,
+                      r1=r / c, degree_cap=None, seed=seed)
+    g = build_graph(feats, cfg)
+    x = np.asarray(feats.dense)
+    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    sims = xn @ xn.T
+    iu = np.triu_indices(feats.n, 1)
+    pairs = np.stack(iu, 1)
+    thr_hi = pairs[sims[iu] >= r]
+    thr_lo = pairs[sims[iu] >= r / c]
+    n_hi = num_components(connected_components_np(
+        feats.n, thr_hi[:, 0], thr_hi[:, 1]))
+    n_lo = num_components(connected_components_np(
+        feats.n, thr_lo[:, 0], thr_lo[:, 1]))
+    n_sp = num_components(connected_components_np(feats.n, g.src, g.dst))
+    assert n_lo <= n_sp <= n_hi
+
+
+def test_degree_cap_keeps_top_edges():
+    src = np.array([0, 0, 0, 1, 2])
+    dst = np.array([1, 2, 3, 2, 3])
+    w = np.array([0.9, 0.8, 0.1, 0.7, 0.95], np.float32)
+    g = Graph.from_candidates(4, src, dst, w, np.ones(5, bool))
+    capped = g.degree_cap(1)
+    kept = set(zip(capped.src.tolist(), capped.dst.tolist()))
+    # every node's single best edge must survive
+    assert (0, 1) in kept and (2, 3) in kept
+    assert capped.num_edges <= 3
+
+
+def test_graph_dedup_and_threshold():
+    src = np.array([0, 1, 0, 2])
+    dst = np.array([1, 0, 1, 0])
+    w = np.array([0.5, 0.8, 0.3, 0.2], np.float32)
+    g = Graph.from_candidates(3, src, dst, w, np.ones(4, bool))
+    assert g.num_edges == 2            # (0,1) deduped, (0,2) kept
+    assert float(g.w[(g.src == 0) & (g.dst == 1)][0]) == pytest.approx(0.8)
+    assert g.threshold(0.5).num_edges == 1

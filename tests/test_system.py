@@ -1,0 +1,131 @@
+"""End-to-end behaviour tests: the paper's full pipeline at small scale.
+
+Graph building -> clustering -> quality, reproducing the *shape* of the
+paper's headline results (Figs 1-4) as assertions:
+  1. Stars uses >=5x fewer comparisons than non-Stars at equal R (Fig 1).
+  2. Stars graphs reach the same VMeasure as non-Stars (Fig 4).
+  3. The learned similarity model trains to a useful AUC and can drive
+     graph building (Amazon2m learned-similarity pipeline, Appendix C.2).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HashFamilyConfig, StarsConfig, build_graph
+from repro.data import mnist_like_points, products_like_points
+from repro.graph import affinity_clustering, v_measure
+from repro.similarity.learned import LearnedSimilarity, TwoTowerConfig
+from repro.similarity.measures import PointFeatures
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return mnist_like_points(n=4000, d=32, classes=10, spread=0.15, seed=3)
+
+
+def _cfg(scoring, r=15, leaders=10, window=100):
+    return StarsConfig(mode="sorting", scoring=scoring,
+                       family=HashFamilyConfig("simhash", m=20),
+                       measure="cosine", r=r, window=window, leaders=leaders,
+                       degree_cap=50, seed=7,
+                       max_edges_per_rep=2_000_000)
+
+
+def test_stars_vs_nonstars_comparisons_and_quality(dataset):
+    feats, labels = dataset
+    g_stars = build_graph(feats, _cfg("stars"))
+    g_all = build_graph(feats, _cfg("allpairs"))
+    # Fig 1: comparison reduction
+    ratio = g_all.stats["comparisons"] / g_stars.stats["comparisons"]
+    assert ratio > 3.0, ratio
+    # Fig 4: no quality loss
+    v_stars = v_measure(labels, affinity_clustering(
+        g_stars.degree_cap(10), target_clusters=10))["v"]
+    v_all = v_measure(labels, affinity_clustering(
+        g_all.degree_cap(10), target_clusters=10))["v"]
+    assert v_stars > 0.8
+    assert v_stars > v_all - 0.05
+
+
+def test_end_to_end_learned_similarity_pipeline():
+    """Train the two-tower model on co-category pairs, then build a graph
+    with it as the similarity measure (the Amazon2m learned pipeline)."""
+    feats, labels = products_like_points(n=800, d=16, classes=8, nnz=8,
+                                         seed=4)
+    model = LearnedSimilarity(TwoTowerConfig(in_dim=16, tower_hidden=32,
+                                             embed_dim=16, head_hidden=32))
+    params = model.init(jax.random.key(0))
+
+    # balanced pair batches: half positives (same class), half random
+    rs = np.random.RandomState(0)
+    by_class = {c: np.flatnonzero(labels == c) for c in np.unique(labels)}
+    def pair_batch(bs=256):
+        i = rs.randint(0, feats.n, bs)
+        j = rs.randint(0, feats.n, bs)
+        pos = rs.rand(bs) < 0.5
+        j_pos = np.array([rs.choice(by_class[labels[ii]]) for ii in i])
+        j = np.where(pos, j_pos, j)
+        y = (labels[i] == labels[j]).astype(np.float32)
+        return i, j, y
+
+    @jax.jit
+    def step(params, i, j, y):
+        def loss(p):
+            return model.loss(p, feats.take(i), feats.take(j), y)
+        l, g = jax.value_and_grad(loss)(params)
+        params = jax.tree.map(lambda p_, g_: p_ - 0.05 * g_, params, g)
+        return params, l
+
+    for _ in range(300):
+        i, j, y = pair_batch()
+        params, l = step(params, jnp.asarray(i), jnp.asarray(j),
+                         jnp.asarray(y))
+
+    # AUC on held-out pairs
+    i, j, y = pair_batch(1000)
+    scores = np.asarray(model.pairwise(
+        params, feats.take(jnp.asarray(i)[:, None]),
+        feats.take(jnp.asarray(j)[:, None]))[:, 0, 0])
+    pos, neg = scores[y == 1], scores[y == 0]
+    auc = np.mean(pos[:, None] > neg[None, :])
+    assert auc > 0.8, auc
+
+    # build a graph with the learned measure
+    # r1=0.0: the unthresholded model output is a logit; >0 == "same class"
+    cfg = StarsConfig(mode="sorting", scoring="stars",
+                      family=HashFamilyConfig("simhash", m=16),
+                      measure="learned", r=8, window=64, leaders=8, r1=0.0,
+                      degree_cap=20, seed=5, score_chunk=2)
+    g = build_graph(feats, cfg,
+                    learned_apply=lambda fa, fb: model.pairwise(params, fa, fb))
+    assert g.num_edges > 0
+    intra = np.mean(labels[g.src] == labels[g.dst])
+    # chance level is 1/8 classes = 0.125; the learned measure must make
+    # edges far more class-coherent than chance
+    assert intra > 3 * 0.125, intra
+
+
+def test_hamming_prefilter_cuts_comparisons_at_equal_recall(dataset):
+    """Beyond-paper optimization: prefiltered build does fewer full
+    similarity evaluations with (near-)equal 2-hop recall."""
+    feats, labels = dataset
+    base = _cfg("stars", r=10)
+    import dataclasses
+    pref = dataclasses.replace(base, hamming_prefilter_bits=64,
+                               hamming_prefilter_max=24)
+    g0 = build_graph(feats, base)
+    g1 = build_graph(feats, pref)
+    assert g1.stats["comparisons"] < 0.7 * g0.stats["comparisons"]
+
+    x = np.asarray(feats.dense)
+    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    sims = xn @ xn.T
+    np.fill_diagonal(sims, -np.inf)
+    queries = np.arange(100)
+    truth = [np.argsort(-sims[q])[:10] for q in queries]
+    from repro.graph import neighbor_recall
+    r0 = neighbor_recall(g0, queries, truth, hops=2, k_cap=10)
+    r1 = neighbor_recall(g1, queries, truth, hops=2, k_cap=10)
+    assert r1 > r0 - 0.05, (r0, r1)
