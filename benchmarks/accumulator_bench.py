@@ -1,0 +1,111 @@
+"""Benchmark: device-resident edge accumulator vs the legacy host merge.
+
+Rows emitted (CSV via common.emit):
+  accum_build_s / hostmerge_build_s   — wall seconds for a full R-rep build,
+  accum_bytes_per_rep / hostmerge_bytes_per_rep — device->host edge bytes
+      divided by R (the accumulator's numerator is ONE final slab fetch;
+      the host merge pays the full candidate tensor every repetition),
+  accum_edge_fetches                  — device->host edge transfers for the
+      whole accumulator build; asserted == 1 (the acceptance invariant).
+
+The legacy path is reconstructed here (per-rep nonzero compaction bound +
+host lexsort-dedup + degree cap of the growing union every flush) so the
+comparison survives its removal from core/stars.py.
+
+Caveat for this CPU container: "device" IS the host, so there is no
+transfer/sync to save and XLA CPU's comparator sorts make the accumulator
+build *slower* at k=250 — the wall-time win is a TPU story (per-rep host
+sync and PCIe edge traffic eliminated); the bytes/rep and fetch-count rows
+are backend-independent evidence of it.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import algo_config, dataset, emit
+from repro.core import build_graph
+from repro.core.spanner import Graph
+from repro.core.stars import _rep_candidates
+from repro.graph import accumulator as acc_lib
+from repro.similarity.measures import pairwise_similarity
+
+_MAX_EDGES_PER_REP = 4_000_000   # the legacy device->host compaction bound
+_MERGE_EVERY = 8                 # the legacy host-flush cadence
+
+
+def _hostmerge_build(feats, cfg):
+    """The pre-accumulator build loop, bytes-transferred instrumented."""
+    measure_fn = pairwise_similarity(cfg.measure, alpha=cfg.mixture_alpha)
+
+    @jax.jit
+    def rep_fn(r):
+        out = _rep_candidates(cfg, feats, measure_fn, None, r)
+        total = out["src"].shape[0]
+        max_e = min(_MAX_EDGES_PER_REP, total)
+        (sel,) = jnp.nonzero(out["emit"], size=max_e, fill_value=0)
+        count = jnp.minimum(jnp.sum(out["emit"]), max_e)
+        return dict(src=out["src"][sel], dst=out["dst"][sel],
+                    w=out["w"][sel], count=count)
+
+    g = Graph(feats.n, np.empty(0, np.int64), np.empty(0, np.int64),
+              np.empty(0, np.float32), {})
+    pend, transferred = [], 0
+    for rep in range(cfg.r):
+        out = jax.device_get(rep_fn(jnp.int32(rep)))
+        transferred += sum(int(np.asarray(out[k]).nbytes)
+                           for k in ("src", "dst", "w"))
+        c = int(out["count"])
+        pend.append((out["src"][:c], out["dst"][:c], out["w"][:c]))
+        if (rep + 1) % _MERGE_EVERY == 0 or rep == cfg.r - 1:
+            g = g.merged_with(Graph.from_candidates(
+                feats.n, np.concatenate([p[0] for p in pend]),
+                np.concatenate([p[1] for p in pend]),
+                np.concatenate([p[2] for p in pend]),
+                np.ones(sum(p[0].size for p in pend), bool)))
+            if cfg.degree_cap is not None:
+                g = g.degree_cap(cfg.degree_cap)
+            pend = []
+    return g, transferred
+
+
+def accumulator_vs_hostmerge(ds: str = "mnist", algo: str = "sorting_stars",
+                             r: int = 10) -> None:
+    feats, _ = dataset(ds)
+    cfg = algo_config(algo, ds, r=r)
+
+    acc_lib.reset_transfer_stats()
+    t0 = time.time()
+    g_new = build_graph(feats, cfg)
+    t_new = time.time() - t0
+    fetches = acc_lib.transfer_stats["edge_fetches"]
+    new_bytes = acc_lib.transfer_stats["bytes"]
+    assert fetches == 1, f"expected ONE edge transfer per build, saw {fetches}"
+
+    t0 = time.time()
+    g_old, old_bytes = _hostmerge_build(feats, cfg)
+    t_old = time.time() - t0
+    assert g_new.num_edges == g_old.num_edges, (g_new.num_edges,
+                                                g_old.num_edges)
+
+    emit(f"accum_build_s[{ds}/{algo}/r{r}]", t_new * 1e6 / r,
+         f"{t_new:.3f}s")
+    emit(f"hostmerge_build_s[{ds}/{algo}/r{r}]", t_old * 1e6 / r,
+         f"{t_old:.3f}s")
+    emit(f"accum_bytes_per_rep[{ds}/{algo}/r{r}]", 0.0, new_bytes // r)
+    emit(f"hostmerge_bytes_per_rep[{ds}/{algo}/r{r}]", 0.0, old_bytes // r)
+    emit(f"accum_edge_fetches[{ds}/{algo}/r{r}]", 0.0, fetches)
+
+
+def accumulator_table() -> None:
+    accumulator_vs_hostmerge("mnist", "sorting_stars", r=10)
+    accumulator_vs_hostmerge("mnist", "lsh_stars", r=10)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    accumulator_table()

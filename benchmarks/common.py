@@ -88,7 +88,7 @@ def algo_config(algo: str, ds: str, *, r: int = 10, leaders: int = 25,
     1000 vs Stars cap 10000 (D.2); s leaders default 25.
     """
     common = dict(measure=_MEASURE[ds], r=r, degree_cap=250, seed=11,
-                  score_chunk=4, max_edges_per_rep=4_000_000)
+                  score_chunk=4)
     if algo == "lsh_stars":
         return StarsConfig(mode="lsh", scoring="stars", family=_FAMILY[ds],
                            window=10_000, leaders=leaders, r1=r1, **common)

@@ -9,7 +9,7 @@ import time
 
 
 def main() -> None:
-    from benchmarks import figures, roofline, tables
+    from benchmarks import accumulator_bench, figures, roofline, tables
 
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -21,6 +21,7 @@ def main() -> None:
     tables.table12_runtime()
     tables.table3_scaling()
     roofline.roofline_table()
+    accumulator_bench.accumulator_table()
     print(f"# total benchmark wall time: {time.time() - t0:.1f}s")
 
 

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 test wrapper: sets PYTHONPATH=src and runs the pytest suite.
+#
+#   scripts/run_tests.sh            # full tier-1 suite (the CI gate)
+#   scripts/run_tests.sh fast       # <60s quick gate (-m fast)
+#   scripts/run_tests.sh [args...]  # extra args forwarded to pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "fast" ]]; then
+  shift
+  exec python -m pytest -q -m fast "$@"
+fi
+exec python -m pytest -x -q "$@"

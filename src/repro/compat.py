@@ -1,0 +1,42 @@
+"""Version-guarded aliases for JAX APIs that moved between releases.
+
+The container pins jax 0.4.37; newer releases promoted several experimental
+APIs to the top-level namespace (and renamed a few Pallas symbols).  Every
+module that touches one of these drift points imports it from here so the
+codebase runs unmodified on either side of the rename:
+
+  * ``shard_map``:  ``jax.shard_map`` (>= 0.6) vs
+    ``jax.experimental.shard_map.shard_map`` (0.4.x).
+  * ``pcast``:      ``jax.lax.pcast`` marks values device-varying under the
+    new shard_map type system; the legacy tracer infers replication itself,
+    so the fallback is the identity.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:                                        # jax >= 0.6
+    shard_map = jax.shard_map
+except AttributeError:                      # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+try:                                        # jax >= 0.5
+    axis_size = jax.lax.axis_size
+except AttributeError:                      # jax 0.4.x: the classic idiom —
+                                            # psum of a literal constant-folds
+                                            # to a static Python int
+
+    def axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)
+
+
+try:                                        # jax >= 0.6
+    pcast = jax.lax.pcast
+except AttributeError:                      # jax 0.4.x: replication is inferred
+
+    def pcast(x, axis_name, to=None):       # noqa: ARG001 - signature parity
+        return x
+
+
+__all__ = ["shard_map", "pcast", "axis_size"]

@@ -62,6 +62,26 @@ class Graph:
         return Graph(n=n, src=key // n, dst=key % n, w=w,
                      stats=dict(stats or {}))
 
+    @staticmethod
+    def from_degree_slabs(n: int, nbr, w,
+                          stats: Optional[Dict[str, float]] = None) -> "Graph":
+        """Compact per-node top-k degree slabs into a deduplicated Graph.
+
+        This is the single host-side pass of an accumulator build
+        (graph/accumulator.py): ``nbr``/``w`` are (n, k) per-node tables
+        (-1 / -inf on empty slots); an edge appears in the result iff it sits
+        in at least one endpoint's slab.  Duplicates (an edge present in both
+        endpoints' slabs) keep their max weight via ``from_candidates``.
+        """
+        nbr = np.asarray(nbr)
+        w = np.asarray(w, np.float32)
+        k = nbr.shape[1]
+        node = np.repeat(np.arange(n, dtype=np.int64), k)
+        nbr_f = nbr.ravel().astype(np.int64)
+        w_f = w.ravel()
+        valid = (nbr_f >= 0) & np.isfinite(w_f)
+        return Graph.from_candidates(n, node, nbr_f, w_f, valid, stats)
+
     def merged_with(self, other: "Graph") -> "Graph":
         assert self.n == other.n
         g = Graph.from_candidates(

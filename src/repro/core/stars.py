@@ -21,6 +21,15 @@ Each repetition r of R:
 The *number of similarity comparisons* — the paper's headline efficiency
 metric (Fig. 1) — is counted exactly as the number of unmasked scored pairs.
 
+Edge accumulation is device-resident (graph/accumulator.py): every
+repetition's masked candidate stream folds into fixed-capacity per-node
+top-k slabs on device, and the host sees edges exactly once per build via
+``Graph.from_degree_slabs``.  This removes the old per-repetition
+device->host transfer and the repeated host-side lexsort-dedup/degree-cap
+of the growing union; incremental per-node capping is exact because the
+candidate pool only grows, so an edge outside a node's running top-k can
+never re-enter.
+
 Beyond-paper optimization (EXPERIMENTS.md §Perf): an optional *Hamming
 prefilter* reuses packed SimHash bits to discard pairs whose estimated angle
 is far above the threshold BEFORE the expensive measure (learned / Jaccard /
@@ -40,6 +49,7 @@ import numpy as np
 from repro.core import lsh as lsh_lib
 from repro.core import windows as win_lib
 from repro.core.spanner import Graph
+from repro.graph import accumulator as acc_lib
 from repro.kernels import ops as kernel_ops
 from repro.similarity.measures import PointFeatures, pairwise_similarity
 
@@ -61,8 +71,12 @@ class StarsConfig:
       hamming_prefilter_bits / max_dist: beyond-paper prefilter (see module
                  docstring); disabled when bits == 0.
       score_chunk: windows scored per lax.map step (memory knob).
-      max_edges_per_rep: device->host compaction bound per repetition.
       seed:      root seed; every repetition folds its index into it.
+
+    The accumulator's slab capacity is derived from ``degree_cap`` (the
+    paper's k=250); with ``degree_cap=None`` the worst-case per-node degree
+    ``r * (window + leaders)`` is materialized instead, which is only meant
+    for small uncapped baselines.
     """
 
     mode: str = "sorting"
@@ -78,9 +92,12 @@ class StarsConfig:
     hamming_prefilter_max: int = 0
     mixture_alpha: float = 0.5
     score_chunk: int = 8
-    max_edges_per_rep: int = 4_000_000
-    merge_every: int = 8
     seed: int = 0
+
+    def slab_capacity(self, n: int) -> int:
+        """Per-node accumulator capacity for an n-point build."""
+        return acc_lib.capacity_for(self.degree_cap, n, reps=self.r,
+                                    per_rep_bound=self.window + self.leaders)
 
 
 # --------------------------------------------------------------------------- #
@@ -167,22 +184,19 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
     outs = jax.lax.map(score_chunk, (resh(gid), resh(valid), resh(bucket)))
     src, dst, wts, emit, comp_chunks, pref_chunks = outs
     src, dst, wts, emit = (x.reshape(-1) for x in (src, dst, wts, emit))
-    total = src.shape[0]
-    max_e = min(cfg.max_edges_per_rep, total)
-    (sel,) = jnp.nonzero(emit, size=max_e, fill_value=0)
-    count = jnp.minimum(jnp.sum(emit), max_e)
-    out_valid = jnp.arange(max_e) < count
-    return dict(src=src[sel], dst=dst[sel], w=wts[sel], valid=out_valid,
-                count=count, emitted=jnp.sum(emit),
+    return dict(src=src, dst=dst, w=wts, emit=emit,
+                emitted=jnp.sum(emit),
                 comparisons=comp_chunks, prefilter_ops=pref_chunks)
 
 
 def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
                     measure_fn, prefilter, rep_index: jax.Array):
-    """One repetition: sketch, window, score; returns compacted candidates.
+    """One repetition: sketch, window, score; returns the candidate stream.
 
-    Returns dict with 'src','dst','w' of shape (max_edges,), 'count' valid
-    prefix length, 'comparisons' scalar, 'prefilter_ops' scalar.
+    Returns dict with the full fixed-shape 'src','dst','w' stream plus its
+    'emit' mask (the accumulator consumes the stream masked, so no device
+    compaction is needed), per-chunk 'comparisons' / 'prefilter_ops' int32
+    counts, and the scalar 'emitted'.
     """
     rep_seed = jnp.asarray(rep_index, jnp.uint32) ^ jnp.uint32(cfg.seed)
     key = jax.random.fold_in(jax.random.key(cfg.seed), rep_index)
@@ -276,13 +290,8 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
     src, dst, wts, emit, comp_chunks, pref_chunks = outs
 
     src, dst, wts, emit = (x.reshape(-1) for x in (src, dst, wts, emit))
-    total = src.shape[0]
-    max_e = min(cfg.max_edges_per_rep, total)
-    (sel,) = jnp.nonzero(emit, size=max_e, fill_value=0)
-    count = jnp.minimum(jnp.sum(emit), max_e)
-    out_valid = jnp.arange(max_e) < count
-    return dict(src=src[sel], dst=dst[sel], w=wts[sel], valid=out_valid,
-                count=count, emitted=jnp.sum(emit),
+    return dict(src=src, dst=dst, w=wts, emit=emit,
+                emitted=jnp.sum(emit),
                 comparisons=comp_chunks, prefilter_ops=pref_chunks)
 
 
@@ -294,57 +303,47 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
 def build_graph(features: PointFeatures, cfg: StarsConfig, *,
                 learned_apply: Optional[Callable] = None,
                 progress: Optional[Callable[[int], None]] = None) -> Graph:
-    """Run R repetitions of Stars/non-Stars and return the merged graph."""
+    """Run R repetitions of Stars/non-Stars and return the merged graph.
+
+    Edges never leave the device during the loop: each repetition's masked
+    candidate stream folds into the degree-slab accumulator in the same jit
+    program that scored it (the slabs are donated, so the update is
+    in-place), and the single device->host edge transfer happens in
+    ``acc_lib.to_graph`` after the last repetition.  Per-repetition scalar
+    counters stay on device too and are summed on the host in int64 at the
+    end, so tera-scale comparison counts never overflow a device integer.
+    """
     measure_fn = pairwise_similarity(
         cfg.measure, alpha=cfg.mixture_alpha, learned_apply=learned_apply)
     prefilter = (_prefilter_sketch(features, cfg.hamming_prefilter_bits)
                  if cfg.hamming_prefilter_bits > 0 else None)
+    n = features.n
 
-    rep_fn = jax.jit(functools.partial(
-        _rep_candidates, cfg, features, measure_fn, prefilter))
+    @functools.partial(jax.jit, donate_argnums=0)
+    def rep_step(state, rep_index):
+        out = _rep_candidates(cfg, features, measure_fn, prefilter, rep_index)
+        state = acc_lib.accumulate(state, out["src"], out["dst"], out["w"],
+                                   out["emit"])
+        return state, {k: out[k] for k in
+                       ("comparisons", "emitted", "prefilter_ops")}
 
-    merged = Graph(features.n, np.empty(0, np.int64), np.empty(0, np.int64),
-                   np.empty(0, np.float32),
-                   {"comparisons": 0, "emitted": 0, "prefilter_ops": 0,
-                    "overflow_reps": 0})
-    pend_src, pend_dst, pend_w = [], [], []
-
-    def flush():
-        nonlocal merged, pend_src, pend_dst, pend_w
-        if not pend_src:
-            return
-        g = Graph.from_candidates(
-            features.n, np.concatenate(pend_src), np.concatenate(pend_dst),
-            np.concatenate(pend_w), np.ones(sum(len(x) for x in pend_src), bool))
-        merged = merged.merged_with(g)
-        if cfg.degree_cap is not None:
-            # Incremental capping is exact: an edge outside either endpoint's
-            # running top-k can never re-enter as the union only grows.
-            merged = merged.degree_cap(cfg.degree_cap)
-        pend_src, pend_dst, pend_w = [], [], []
-
-    stats = merged.stats
+    state = acc_lib.EdgeAccumulator.create(n, cfg.slab_capacity(n))
+    per_rep = []
     for rep in range(cfg.r):
-        out = jax.device_get(rep_fn(jnp.int32(rep)))
-        c = int(out["count"])
-        stats["comparisons"] += int(np.sum(np.asarray(out["comparisons"],
-                                                      np.int64)))
-        stats["emitted"] += int(out["emitted"])
-        stats["prefilter_ops"] += int(np.sum(np.asarray(out["prefilter_ops"],
-                                                        np.int64)))
-        if int(out["emitted"]) > c:
-            stats["overflow_reps"] += 1
-        pend_src.append(out["src"][:c])
-        pend_dst.append(out["dst"][:c])
-        pend_w.append(out["w"][:c])
-        if (rep + 1) % cfg.merge_every == 0:
-            flush()
+        state, counters = rep_step(state, jnp.int32(rep))
+        per_rep.append(counters)
         if progress is not None:
             progress(rep)
-    flush()
-    merged.stats.update(stats)
-    merged.stats["reps"] = cfg.r
-    return merged
+
+    stats = {"comparisons": 0, "emitted": 0, "prefilter_ops": 0,
+             "reps": cfg.r}
+    for counters in jax.device_get(per_rep):
+        stats["comparisons"] += int(np.sum(np.asarray(counters["comparisons"],
+                                                      np.int64)))
+        stats["emitted"] += int(counters["emitted"])
+        stats["prefilter_ops"] += int(np.sum(np.asarray(
+            counters["prefilter_ops"], np.int64)))
+    return acc_lib.to_graph(state, stats=stats)
 
 
 def allpairs_graph(features: PointFeatures, measure: str = "cosine", *,
@@ -352,50 +351,35 @@ def allpairs_graph(features: PointFeatures, measure: str = "cosine", *,
                    degree_cap: Optional[int] = None,
                    block: int = 2048, mixture_alpha: float = 0.5,
                    learned_apply: Optional[Callable] = None) -> Graph:
-    """Brute-force *AllPair* baseline: exact n^2/2 comparisons, blocked."""
+    """Brute-force *AllPair* baseline: exact n^2/2 comparisons, blocked.
+
+    Each (block x block) similarity tile is scored AND folded into the
+    degree-slab accumulator in one jit program; edges reach the host once,
+    at the final compaction.  Blocks are fixed-shape (tails padded with
+    invalid ids) so the whole sweep reuses a single compiled program.
+    """
     measure_fn = pairwise_similarity(
         measure, alpha=mixture_alpha, learned_apply=learned_apply)
     n = features.n
+    cap = acc_lib.capacity_for(degree_cap, n)
 
-    @jax.jit
-    def block_sims(ia, ib):
-        fa = features.take(ia)
-        fb = features.take(ib)
-        return measure_fn(fa, fb)
+    @functools.partial(jax.jit, donate_argnums=0)
+    def block_step(state, a0, b0):
+        ids_a = a0 + jnp.arange(block, dtype=jnp.int32)
+        ids_b = b0 + jnp.arange(block, dtype=jnp.int32)
+        fa = features.take(jnp.minimum(ids_a, n - 1))
+        fb = features.take(jnp.minimum(ids_b, n - 1))
+        sims = measure_fn(fa, fb)
+        aa = jnp.broadcast_to(ids_a[:, None], (block, block))
+        bb = jnp.broadcast_to(ids_b[None, :], (block, block))
+        keep = (aa < bb) & (bb < n)
+        if r1 is not None:
+            keep &= sims > r1
+        return acc_lib.accumulate(state, aa, bb, sims, keep)
 
-    g = Graph(n, np.empty(0, np.int64), np.empty(0, np.int64),
-              np.empty(0, np.float32), {"comparisons": n * (n - 1) // 2})
-    ids = np.arange(n)
-    pend = []
+    state = acc_lib.EdgeAccumulator.create(n, cap)
     for a0 in range(0, n, block):
-        ia = jnp.arange(a0, min(a0 + block, n))
         for b0 in range(a0, n, block):
-            ib = jnp.arange(b0, min(b0 + block, n))
-            sims = np.asarray(block_sims(ia, ib))
-            aa, bb = np.meshgrid(ids[a0:a0 + ia.shape[0]],
-                                 ids[b0:b0 + ib.shape[0]], indexing="ij")
-            keep = aa < bb
-            if r1 is not None:
-                keep &= sims > r1
-            pend.append((aa[keep], bb[keep], sims[keep]))
-        if len(pend) >= 64:
-            add = Graph.from_candidates(
-                n, np.concatenate([p[0] for p in pend]),
-                np.concatenate([p[1] for p in pend]),
-                np.concatenate([p[2] for p in pend]),
-                np.ones(sum(p[0].size for p in pend), bool))
-            g = g.merged_with(add)
-            if degree_cap is not None:
-                g = g.degree_cap(degree_cap)
-            pend = []
-    if pend:
-        add = Graph.from_candidates(
-            n, np.concatenate([p[0] for p in pend]),
-            np.concatenate([p[1] for p in pend]),
-            np.concatenate([p[2] for p in pend]),
-            np.ones(sum(p[0].size for p in pend), bool))
-        g = g.merged_with(add)
-    if degree_cap is not None:
-        g = g.degree_cap(degree_cap)
-    g.stats["comparisons"] = n * (n - 1) // 2
-    return g
+            state = block_step(state, jnp.int32(a0), jnp.int32(b0))
+    return acc_lib.to_graph(state,
+                            stats={"comparisons": n * (n - 1) // 2})

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import pcast, shard_map
+
 
 def pipeline_apply(stage_fn: Callable, stage_params: Any, x: jax.Array,
                    mesh: jax.sharding.Mesh, *, axis: str = "pipe",
@@ -78,14 +80,14 @@ def pipeline_apply(stage_fn: Callable, stage_params: Any, x: jax.Array,
 
         state0 = jnp.zeros((mb,) + xs.shape[1:], xs.dtype)
         # mark carries as device-varying (they diverge per stage)
-        state0 = jax.lax.pcast(state0, (axis,), to="varying")
-        buf = jax.lax.pcast(buf, (axis,), to="varying")
+        state0 = pcast(state0, (axis,), to="varying")
+        buf = pcast(buf, (axis,), to="varying")
         (_, buf), _ = jax.lax.scan(tick, (state0, buf),
                                    jnp.arange(n_ticks))
         # each stage emits its buffer; only the last stage's is real
         return buf.reshape(xs.shape)[None]
 
-    out = jax.shard_map(
+    out = shard_map(
         per_stage, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(axis),

@@ -30,6 +30,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size, shard_map
+
 SENTINEL = jnp.uint32(0xFFFFFFFF)
 
 
@@ -41,7 +43,7 @@ def _sample_sort_shard(keys: jax.Array, payload: jax.Array, *,
     keys: (n_local,) uint32; payload: (n_local,) int32 (point ids).
     Returns (sorted_keys (p*cap,), sorted_payload, valid, dropped_count).
     """
-    p = jax.lax.axis_size(axis)
+    p = axis_size(axis)
     n_local = keys.shape[0]
     cap = int(capacity_factor * n_local / p) + 1
 
@@ -95,7 +97,7 @@ def distributed_sort(keys: jax.Array, payload: jax.Array,
 
     fn = functools.partial(_sample_sort_shard, axis=axis,
                            capacity_factor=capacity_factor)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis), P(axis), P(axis)),

@@ -8,7 +8,17 @@ Phases per repetition (paper §4, adapted per DESIGN.md §3):
                  shards by gid (the DHT / shuffle-join analogue; XLA lowers
                  the gather to collective traffic, visible in the roofline),
   4. score     — leaders x window similarity tiles (leader_score kernel),
-  5. emit      — masked edge candidates stay sharded; the host compacts.
+  5. emit      — masked edge candidates fold into the degree-slab
+                 accumulator (graph/accumulator.py) inside the same jit
+                 program; the slabs stay sharded row-wise over the `data`
+                 axis, so a shard's emit writes mostly land on its own rows
+                 and XLA inserts the residual scatter traffic.
+
+The host never sees per-repetition edges: one slab fetch after the last
+repetition produces the final Graph (``Graph.from_degree_slabs``), the same
+single-transfer contract as the single-device builder.  Per-repetition
+comparison/drop counters stay on device and are summed on the host in int64
+at the end.
 
 Supports cosine/dot measures (the tera-scale Random1B/10B setting).  The
 single-device path (core/stars.py) remains the reference; the equivalence
@@ -18,34 +28,37 @@ test checks recall parity on a shared dataset.
 from __future__ import annotations
 
 import functools
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+import numpy as np
+
 from repro.core import lsh as lsh_lib
 from repro.core.spanner import Graph
 from repro.core.stars import StarsConfig
 from repro.distributed.sorter import distributed_sort
+from repro.graph import accumulator as acc_lib
 from repro.kernels import ops as kernel_ops
 
-import numpy as np
 
-
-def _rep_edges(cfg: StarsConfig, dense, mesh, rep: int):
-    """One repetition; returns host-side candidate arrays + counts."""
-    n, d = dense.shape
+def build_graph_distributed(dense: jax.Array, cfg: StarsConfig,
+                            mesh: jax.sharding.Mesh) -> Graph:
+    """Multi-device Stars build; `dense` is (n, d), sharded or shardable."""
     axis = "data"
-    rep_seed = jnp.uint32(rep) ^ jnp.uint32(cfg.seed)
-    key = jax.random.fold_in(jax.random.key(cfg.seed), rep)
-    k_tie, k_lead = jax.random.split(key)
+    dense = jax.device_put(dense, NamedSharding(mesh, P(axis, None)))
+    n = dense.shape[0]
+    cap = cfg.slab_capacity(n)
+    slab_shard = NamedSharding(mesh, P(axis, None))
+    repl = NamedSharding(mesh, P())
 
     @functools.partial(jax.jit,
                        out_shardings=(NamedSharding(mesh, P(axis)),
                                       NamedSharding(mesh, P(axis))))
-    def sketch_phase(x):
+    def sketch_phase(x, rep):
         from repro.similarity.measures import PointFeatures
+        rep_seed = jnp.asarray(rep, jnp.uint32) ^ jnp.uint32(cfg.seed)
         words = lsh_lib.sketch(PointFeatures(dense=x), cfg.family,
                                rep_seed=rep_seed)
         if cfg.mode == "lsh":
@@ -56,16 +69,19 @@ def _rep_edges(cfg: StarsConfig, dense, mesh, rep: int):
         gids = jnp.arange(n, dtype=jnp.int32)
         return keys, gids
 
-    keys, gids = sketch_phase(dense)
-    keys_s, gids_s, valid, dropped = distributed_sort(keys, gids, mesh,
-                                                      axis=axis)
-
     w = cfg.window
-    n_tot = keys_s.shape[0]
-    n_win = n_tot // w
 
-    @jax.jit
-    def score_phase(keys_s, gids_s, valid):
+    @functools.partial(
+        jax.jit, donate_argnums=0,
+        out_shardings=(acc_lib.EdgeAccumulator(nbr=slab_shard, w=slab_shard),
+                       repl))
+    def score_and_update(state, keys_s, gids_s, valid, rep):
+        # the sorted sequence is longer than n (fixed-capacity sort slots
+        # with sentinel padding per shard); window ALL of it — the validity
+        # mask handles the sentinels.
+        n_win = keys_s.shape[0] // w
+        key = jax.random.fold_in(jax.random.key(cfg.seed), rep)
+        _, k_lead = jax.random.split(key)
         kw = keys_s[:n_win * w].reshape(n_win, w)
         gw = gids_s[:n_win * w].reshape(n_win, w)
         vw = valid[:n_win * w].reshape(n_win, w)
@@ -84,39 +100,35 @@ def _rep_edges(cfg: StarsConfig, dense, mesh, rep: int):
         mask &= lslot[:, :, None] != jnp.arange(w)[None, None, :]
         if cfg.mode == "lsh":
             mask &= lkey[:, :, None] == kw[:, None, :]
+        # per-window int32 partial counts; the host sums them in int64 so
+        # tera-scale comparison totals never overflow a device integer
+        comparisons = jnp.sum(mask, axis=(1, 2)).astype(jnp.int32)
         if cfg.r1 is not None:
             mask &= sims > cfg.r1
         src = jnp.broadcast_to(lgid[:, :, None], sims.shape)
         dst = jnp.broadcast_to(gw[:, None, :], sims.shape)
-        comparisons = jnp.sum(ok_l[:, :, None] & vw[:, None, :])
-        return (src.reshape(-1), dst.reshape(-1),
-                sims.reshape(-1), mask.reshape(-1), comparisons)
+        state = acc_lib.accumulate(state, src, dst, sims, mask)
+        return state, comparisons
 
-    src, dst, sims, mask, comps = jax.device_get(
-        score_phase(keys_s, gids_s, valid))
-    return {
-        "src": src, "dst": dst, "w": sims, "valid": mask,
-        "comparisons": int(comps),
-        "dropped": int(np.sum(np.asarray(jax.device_get(dropped)))),
-    }
-
-
-def build_graph_distributed(dense: jax.Array, cfg: StarsConfig,
-                            mesh: jax.sharding.Mesh) -> Graph:
-    """Multi-device Stars build; `dense` is (n, d), sharded or shardable."""
-    dense = jax.device_put(
-        dense, NamedSharding(mesh, P("data", None)))
-    n = dense.shape[0]
-    g = Graph(n, np.empty(0, np.int64), np.empty(0, np.int64),
-              np.empty(0, np.float32),
-              {"comparisons": 0, "dropped": 0})
+    state = jax.device_put(
+        acc_lib.EdgeAccumulator.create(n, cap),
+        acc_lib.EdgeAccumulator(nbr=slab_shard, w=slab_shard))
+    comp_per_rep, drop_per_rep = [], []
     for rep in range(cfg.r):
-        out = _rep_edges(cfg, dense, mesh, rep)
-        add = Graph.from_candidates(n, out["src"], out["dst"], out["w"],
-                                    out["valid"])
-        g = g.merged_with(add)
-        g.stats["comparisons"] += out["comparisons"]
-        g.stats["dropped"] += out["dropped"]
-        if cfg.degree_cap is not None:
-            g = g.degree_cap(cfg.degree_cap)
-    return g
+        keys, gids = sketch_phase(dense, jnp.int32(rep))
+        keys_s, gids_s, valid, dropped = distributed_sort(keys, gids, mesh,
+                                                          axis=axis)
+        state, comps = score_and_update(state, keys_s, gids_s, valid,
+                                        jnp.int32(rep))
+        comp_per_rep.append(comps)
+        drop_per_rep.append(dropped)
+
+    comp_h, drop_h = jax.device_get((comp_per_rep, drop_per_rep))
+    stats = {
+        "comparisons": int(np.sum([np.sum(np.asarray(c, np.int64))
+                                   for c in comp_h])),
+        "dropped": int(np.sum([np.sum(np.asarray(d, np.int64))
+                               for d in drop_h])),
+        "reps": cfg.r,
+    }
+    return acc_lib.to_graph(state, stats=stats)

@@ -1,3 +1,13 @@
+# accumulator first: it has no repro.core dependency at import time, and
+# repro.core.stars imports it back while this package is mid-initialization.
+from repro.graph.accumulator import (
+    EdgeAccumulator,
+    accumulate,
+    capacity_for,
+    reset_transfer_stats,
+    to_graph,
+    transfer_stats,
+)
 from repro.graph.components import (
     connected_components_jax,
     connected_components_np,
@@ -11,6 +21,12 @@ from repro.graph.metrics import (
 )
 
 __all__ = [
+    "EdgeAccumulator",
+    "accumulate",
+    "capacity_for",
+    "reset_transfer_stats",
+    "to_graph",
+    "transfer_stats",
     "connected_components_jax",
     "connected_components_np",
     "affinity_clustering",

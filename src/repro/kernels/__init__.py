@@ -2,6 +2,7 @@
 
   simhash        — fused SimHash projection + sign + 32x bit-pack
   leader_score   — fused Stars leader x window similarity + masking
+  topk_merge     — per-node top-k degree-slab merge (edge accumulator)
   flash_attention— blocked causal/GQA/sliding-window attention (LM substrate)
 
 Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle

@@ -18,6 +18,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import leader_score as _ls
 from repro.kernels import ref as _ref
 from repro.kernels import simhash as _sh
+from repro.kernels import topk_merge as _tm
 
 
 def _pick(use_pallas: Optional[bool]) -> tuple[bool, bool]:
@@ -48,6 +49,17 @@ def leader_score(leaders, members, leader_ok, member_ok, *,
                                 normalized=normalized, interpret=interp)
     return _ref.leader_score_ref(leaders, members, leader_ok, member_ok,
                                  normalized=normalized)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def topk_merge(slab_nbr, slab_w, inc_nbr, inc_w, *,
+               use_pallas: Optional[bool] = None):
+    """Per-node top-k degree-slab merge (the edge-accumulator update)."""
+    use, interp = _pick(use_pallas)
+    if use:
+        return _tm.topk_merge(slab_nbr, slab_w, inc_nbr, inc_w,
+                              interpret=interp)
+    return _ref.topk_merge_ref(slab_nbr, slab_w, inc_nbr, inc_w)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",

@@ -44,6 +44,41 @@ def leader_score_ref(leaders: jax.Array, members: jax.Array,
     return jnp.where(mask, sims, -jnp.inf).astype(jnp.float32)
 
 
+def topk_merge_ref(slab_nbr: jax.Array, slab_w: jax.Array,
+                   inc_nbr: jax.Array, inc_w: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Per-node top-k degree-slab merge (see kernels/topk_merge.py).
+
+    slab_nbr/slab_w: (n, k); inc_nbr/inc_w: (n, kin); -1 / -inf mark empty
+    slots.  Per row: dedup by neighbour keeping max weight, then keep the k
+    heaviest survivors sorted by (weight desc, nbr asc).
+
+    Sort-based formulation — O(K log K) per row instead of the kernel's
+    O(K^2) VMEM matrices, which is the right trade-off for the CPU path.
+    """
+    big = jnp.int32(2**31 - 1)
+    k = slab_nbr.shape[1]
+    nbr = jnp.concatenate([slab_nbr, inc_nbr], axis=1)       # (n, K)
+    w = jnp.concatenate([slab_w, inc_w], axis=1).astype(jnp.float32)
+    valid = nbr >= 0
+    negw = jnp.where(valid, -w, jnp.inf)
+    nbr_key = jnp.where(valid, nbr, big)
+    # group instances of a neighbour together, heaviest first
+    nbr_s, negw_s = jax.lax.sort((nbr_key, negw), num_keys=2, dimension=1)
+    first = jnp.concatenate(
+        [jnp.ones_like(nbr_s[:, :1], bool), nbr_s[:, 1:] != nbr_s[:, :-1]],
+        axis=1)
+    keep = first & (nbr_s != big)
+    # rank survivors by (w desc, nbr asc); duplicates sort to the tail
+    negw2 = jnp.where(keep, negw_s, jnp.inf)
+    nbr2 = jnp.where(keep, nbr_s, big)
+    negw_f, nbr_f = jax.lax.sort((negw2, nbr2), num_keys=2, dimension=1)
+    out_valid = negw_f[:, :k] != jnp.inf
+    out_nbr = jnp.where(out_valid, nbr_f[:, :k], -1)
+    out_w = jnp.where(out_valid, -negw_f[:, :k], -jnp.inf)
+    return out_nbr.astype(jnp.int32), out_w
+
+
 def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
             causal: bool = True, window: int | None = None,
             scale: float | None = None) -> jax.Array:

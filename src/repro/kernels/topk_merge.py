@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: per-node top-k degree-slab merge (edge accumulator).
+
+The streaming edge accumulator (graph/accumulator.py) keeps, for every node,
+a fixed-capacity slab of its k heaviest candidate edges as `(nbr, w)` rows of
+shape (n, k).  Each repetition contributes a bucketed batch of per-node
+candidates (n, kin); this kernel fuses the whole slab update into one VMEM
+pass per node row:
+
+  1. **dedup** — the same neighbour may already sit in the slab (earlier
+     repetition) or appear twice in the batch; only its max-weight instance
+     survives, which matches the host merge's "duplicates keep max weight",
+  2. **rank** — surviving entries are ranked by (weight desc, nbr asc),
+  3. **compact** — the top k are scattered to their rank position via a
+     one-hot reduction (TPU has no in-register scatter), so the output slab
+     stays sorted by weight.
+
+A naive lowering materializes the (n, k + kin) concatenation, an argsort and
+two gathers in HBM; here the (K x K) comparison matrices live only in VMEM
+and HBM traffic is exactly one read of both slabs + one write of the result.
+
+Empty slots carry nbr = -1 / w = -inf and sort to the tail, so saturation
+(full slab, heavier batch) and warm-up (half-empty slab) need no special
+cases.  Ranking ties break deterministically by neighbour id; two entries
+with equal weight AND equal neighbour are duplicates by definition and the
+earlier position wins, so ranks are unique among survivors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_merge_kernel(snbr_ref, sw_ref, inbr_ref, iw_ref,
+                       onbr_ref, ow_ref, *, k: int):
+    nbr = jnp.concatenate([snbr_ref[0], inbr_ref[0]])        # (K,)
+    w = jnp.concatenate([sw_ref[0], iw_ref[0]])              # (K,)
+    valid = nbr >= 0
+    w = jnp.where(valid, w, -jnp.inf)
+    kk = nbr.shape[0]
+
+    pos_i = jax.lax.broadcasted_iota(jnp.int32, (kk, kk), 0)
+    pos_j = jax.lax.broadcasted_iota(jnp.int32, (kk, kk), 1)
+    w_i, w_j = w[:, None], w[None, :]
+    nbr_i, nbr_j = nbr[:, None], nbr[None, :]
+
+    # j beats i for the same neighbour -> i is a duplicate instance.
+    beats = (w_j > w_i) | ((w_j == w_i) & (pos_j < pos_i))
+    dup = jnp.any((nbr_i == nbr_j) & valid[None, :] & beats, axis=1)
+    keep = valid & ~dup
+
+    # rank among survivors by (w desc, nbr asc); unique post-dedup.
+    outrank = keep[None, :] & ((w_j > w_i) | ((w_j == w_i) & (nbr_j < nbr_i)))
+    rank = jnp.sum(outrank, axis=1).astype(jnp.int32)        # (K,)
+    sel = keep & (rank < k)
+
+    # compact via one-hot reduction: column r collects the rank-r entry.
+    slot = jax.lax.broadcasted_iota(jnp.int32, (kk, k), 1)
+    onehot = sel[:, None] & (rank[:, None] == slot)          # (K, k)
+    ow_ref[0] = jnp.max(jnp.where(onehot, w[:, None], -jnp.inf), axis=0)
+    onbr_ref[0] = jnp.max(jnp.where(onehot, nbr[:, None], -1), axis=0)
+
+
+def topk_merge(slab_nbr: jax.Array, slab_w: jax.Array,
+               inc_nbr: jax.Array, inc_w: jax.Array, *,
+               interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Merge per-node candidate batches into top-k degree slabs.
+
+    slab_nbr/slab_w: (n, k) current slabs (int32 / float32; -1 / -inf empty).
+    inc_nbr/inc_w:   (n, kin) incoming per-node candidates, same encoding.
+    Returns the updated (n, k) slabs, rows sorted by weight descending.
+    """
+    n, k = slab_nbr.shape
+    return pl.pallas_call(
+        functools.partial(_topk_merge_kernel, k=k),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, inc_nbr.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((1, inc_nbr.shape[1]), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), jnp.int32),
+            jax.ShapeDtypeStruct((n, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(slab_nbr, slab_w, inc_nbr, inc_w)

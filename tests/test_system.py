@@ -29,8 +29,7 @@ def _cfg(scoring, r=15, leaders=10, window=100):
     return StarsConfig(mode="sorting", scoring=scoring,
                        family=HashFamilyConfig("simhash", m=20),
                        measure="cosine", r=r, window=window, leaders=leaders,
-                       degree_cap=50, seed=7,
-                       max_edges_per_rep=2_000_000)
+                       degree_cap=50, seed=7)
 
 
 def test_stars_vs_nonstars_comparisons_and_quality(dataset):
