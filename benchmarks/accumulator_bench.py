@@ -13,10 +13,15 @@ host lexsort-dedup + degree cap of the growing union every flush) so the
 comparison survives its removal from core/stars.py.
 
 Caveat for this CPU container: "device" IS the host, so there is no
-transfer/sync to save and XLA CPU's comparator sorts make the accumulator
-build *slower* at k=250 — the wall-time win is a TPU story (per-rep host
-sync and PCIe edge traffic eliminated); the bytes/rep and fetch-count rows
-are backend-independent evidence of it.
+transfer/sync to save; XLA CPU's comparator sorts used to make the
+accumulator build *slower* at k=250 than the old host merge.  The CPU slab
+merge is now the sort-free merge-path formulation
+(``ref.topk_merge_sorted_ref`` fed the accumulator's presorted companion
+view) — the ``merge_*`` rows below A/B it against the original re-sort
+formulation at the paper's k=250, and the build rows show the remaining
+gap; the wall-time *win* is still a TPU story (per-rep host sync and PCIe
+edge traffic eliminated), for which the bytes/rep and fetch-count rows are
+the backend-independent evidence.
 """
 
 from __future__ import annotations
@@ -32,6 +37,7 @@ from repro.core import build_graph
 from repro.core.spanner import Graph
 from repro.core.stars import _rep_candidates
 from repro.graph import accumulator as acc_lib
+from repro.kernels import ref as kernel_ref
 from repro.similarity.measures import pairwise_similarity
 
 _MAX_EDGES_PER_REP = 4_000_000   # the legacy device->host compaction bound
@@ -101,9 +107,68 @@ def accumulator_vs_hostmerge(ds: str = "mnist", algo: str = "sorting_stars",
     emit(f"accum_edge_fetches[{ds}/{algo}/r{r}]", 0.0, fetches)
 
 
+def merge_formulation_rows(n: int = 4000, k: int = 250,
+                           iters: int = 5) -> None:
+    """A/B the CPU slab-merge formulations at the paper's k=250.
+
+    merge_resort_ms     — the original topk_merge_ref: two (n, k+kin)
+                          multi-key comparator sorts per repetition,
+    merge_mergepath_ms  — topk_merge_sorted_ref doing its own narrow dedup
+                          sort (the standalone-call path),
+    merge_presorted_ms  — topk_merge_sorted_ref fed the accumulator's
+                          nbr-ascending companion view (the build path;
+                          view construction rides the accumulate stream
+                          scatters, so this is what each repetition pays).
+
+    Fill levels mirror a steady-state sorting-stars build (slab ~90% full
+    after warm-up, batch ~20% full: expected per-node candidates per rep is
+    ~2s << W + s); XLA CPU's comparator sorts are *adaptive* on the
+    sentinel-padded tails, so fully dense synthetic rows would overstate
+    the re-sort cost and flatter the merge-path.
+    """
+    rs = np.random.RandomState(0)
+
+    def slabs(cols, fill):
+        # weight-sorted rows with per-row-unique neighbours, valid-prefix
+        # lengths binomial around `fill` like a real build's tables
+        ids = np.argsort(rs.rand(n, 3 * cols), axis=1)[:, :cols]
+        w = -np.sort(-rs.rand(n, cols).astype(np.float32), axis=1)
+        nvalid = rs.binomial(cols, fill, size=(n, 1))
+        empty = np.arange(cols)[None, :] >= nvalid
+        ids[empty] = -1
+        w[empty] = -np.inf
+        return jnp.asarray(ids.astype(np.int32)), jnp.asarray(w)
+
+    snbr, sw = slabs(k, 0.9)
+    inbr, iw = slabs(k, 0.2)
+    big = jnp.int32(2**31 - 1)
+    iota = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), (n, k))
+    presorted = jax.jit(lambda nb, ng: jax.lax.sort(
+        (jnp.where(nb >= 0, nb, big), ng, iota), num_keys=2, dimension=1))(
+            inbr, -iw)
+
+    cases = [
+        ("merge_resort_ms", jax.jit(kernel_ref.topk_merge_ref),
+         (snbr, sw, inbr, iw)),
+        ("merge_mergepath_ms", jax.jit(kernel_ref.topk_merge_sorted_ref),
+         (snbr, sw, inbr, iw)),
+        ("merge_presorted_ms",
+         jax.jit(lambda a, b, c, d, p: kernel_ref.topk_merge_sorted_ref(
+             a, b, c, d, p)), (snbr, sw, inbr, iw, presorted)),
+    ]
+    for name, fn, args in cases:
+        jax.block_until_ready(fn(*args))
+        t0 = time.time()
+        for _ in range(iters):
+            jax.block_until_ready(fn(*args))
+        ms = (time.time() - t0) / iters * 1e3
+        emit(f"{name}[n{n}/k{k}]", ms * 1e3, f"{ms:.1f}ms")
+
+
 def accumulator_table() -> None:
     accumulator_vs_hostmerge("mnist", "sorting_stars", r=10)
     accumulator_vs_hostmerge("mnist", "lsh_stars", r=10)
+    merge_formulation_rows()
 
 
 if __name__ == "__main__":

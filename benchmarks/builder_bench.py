@@ -1,0 +1,106 @@
+"""Benchmark: incremental extend() vs a from-scratch rebuild.
+
+The streaming claim of the GraphBuilder session API (core/builder.py): when
+a fraction of points arrives after an initial build, ``extend()`` pays only
+the new-vs-all candidate stream — old-old pairs are never rescored and old
+edges never leave the slabs — while a rebuild pays the full quadratic-ish
+stream again.
+
+Rows emitted (CSV via common.emit):
+  rebuild_s / extend_s                — wall seconds for a full R-rep
+      rebuild of n points vs extend()ing the last ``frac`` of them into an
+      existing (1-frac) build (extension repetitions only),
+  rebuild_comparisons / extend_comparisons — similarity comparisons paid by
+      each path (machine-independent, the paper's headline metric),
+  builder_recall_delta                — two-hop 10-NN recall(full) minus
+      recall(incremental); the acceptance bar is |delta| <= 0.02.
+
+Source-dependent caveat: the windowed multi-leader sources (sorting_stars)
+mask to pure new-vs-all pairs, so extension comparisons track the inserted
+fraction (~2-3x below a rebuild at +20%).  The single-leader lsh_stars
+source must rescore every sub-bucket a new point lands in to keep each
+touched star intact (core/stars.py ``_rep_lsh_stars``), so its savings
+scale with insertion size *relative to bucket size*: at +20% of n with
+~15-point buckets nearly every bucket is touched and comparisons approach
+a rebuild's, while recall parity holds; small/continuous insertions are
+where the locality rule pays.
+
+The same numbers are dumped to BENCH_builder.json (cwd) for the CI trend
+tracker.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import algo_config, dataset, emit
+from repro.core import GraphBuilder
+from repro.graph import accumulator as acc_lib
+from repro.graph import neighbor_recall
+
+
+def incremental_vs_rebuild(ds: str = "mnist", algo: str = "sorting_stars",
+                           r: int = 10, frac: float = 0.2) -> dict:
+    feats, _ = dataset(ds)
+    cfg = algo_config(algo, ds, r=r)
+    n = feats.n
+    n0 = int(n * (1.0 - frac))
+
+    # base session: the pre-existing build the new points arrive into
+    # (outside both timed sections)
+    base = GraphBuilder(feats.take(np.arange(n0)), cfg)
+    base.add_reps(r)
+    base_comps = base._merged_stats()["comparisons"]
+
+    acc_lib.reset_transfer_stats()
+    t0 = time.time()
+    base.extend(feats.take(np.arange(n0, n)), reps=r)
+    g_inc = base.finalize()
+    t_extend = time.time() - t0
+    assert acc_lib.transfer_stats["edge_fetches"] == 1
+    ext_comps = g_inc.stats["comparisons"] - base_comps
+
+    t0 = time.time()
+    full = GraphBuilder(feats, cfg)
+    full.add_reps(r)
+    g_full = full.finalize()
+    t_rebuild = time.time() - t0
+
+    x = np.asarray(feats.dense)
+    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    sims = xn @ xn.T
+    np.fill_diagonal(sims, -np.inf)
+    queries = np.concatenate([np.arange(n0, n, 4), np.arange(0, n0, 16)])
+    truth = [np.argsort(-sims[q])[:10] for q in queries]
+    rec_full = neighbor_recall(g_full, queries, truth, hops=2, k_cap=10)
+    rec_inc = neighbor_recall(g_inc, queries, truth, hops=2, k_cap=10)
+
+    tag = f"[{ds}/{algo}/r{r}/+{int(frac * 100)}%]"
+    emit(f"rebuild_s{tag}", t_rebuild * 1e6 / r, f"{t_rebuild:.3f}s")
+    emit(f"extend_s{tag}", t_extend * 1e6 / r, f"{t_extend:.3f}s")
+    emit(f"rebuild_comparisons{tag}", 0.0, g_full.stats["comparisons"])
+    emit(f"extend_comparisons{tag}", 0.0, ext_comps)
+    emit(f"builder_recall_delta{tag}", 0.0, f"{rec_full - rec_inc:+.4f}")
+    return {
+        "dataset": ds, "algo": algo, "r": r, "frac": frac,
+        "rebuild_s": t_rebuild, "extend_s": t_extend,
+        "rebuild_comparisons": int(g_full.stats["comparisons"]),
+        "extend_comparisons": int(ext_comps),
+        "recall_full": rec_full, "recall_incremental": rec_inc,
+        "edge_fetches_per_finalize": 1,
+    }
+
+
+def builder_table() -> None:
+    rows = [incremental_vs_rebuild("mnist", "sorting_stars", r=10),
+            incremental_vs_rebuild("mnist", "lsh_stars", r=10)]
+    with open("BENCH_builder.json", "w") as f:
+        json.dump(rows, f, indent=2)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    builder_table()

@@ -9,7 +9,8 @@ import time
 
 
 def main() -> None:
-    from benchmarks import accumulator_bench, figures, roofline, tables
+    from benchmarks import (accumulator_bench, builder_bench, figures,
+                            roofline, tables)
 
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -22,6 +23,7 @@ def main() -> None:
     tables.table3_scaling()
     roofline.roofline_table()
     accumulator_bench.accumulator_table()
+    builder_bench.builder_table()
     print(f"# total benchmark wall time: {time.time() - t0:.1f}s")
 
 

@@ -1,15 +1,17 @@
 """Multi-device distributed Stars build (TeraSort-analogue pipeline).
 
 Re-executes itself with 8 forced host devices, then runs the full
-distributed pipeline: per-shard sketching -> distributed sample-sort ->
-cross-shard feature join -> leader scoring, and compares recall +
-comparisons against the single-device reference.
+distributed pipeline through the unified session API — constructing
+``GraphBuilder(..., mesh=mesh)`` shards the feature table and the degree
+slabs row-wise over the ``data`` axis: per-shard sketching -> distributed
+sample-sort -> cross-shard feature join -> leader scoring -> sharded slab
+fold — and compares recall + comparisons against the single-device session
+plus a mid-build checkpoint/restore round-trip.
 
   PYTHONPATH=src python examples/distributed_graph.py
 """
 
 import os
-import sys
 
 if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -17,9 +19,8 @@ if "XLA_FLAGS" not in os.environ:
 import jax
 import numpy as np
 
-from repro.core import HashFamilyConfig, StarsConfig, build_graph
+from repro.core import GraphBuilder, HashFamilyConfig, StarsConfig
 from repro.data import mnist_like_points
-from repro.distributed.stars_dist import build_graph_distributed
 from repro.graph import neighbor_recall
 
 
@@ -33,8 +34,18 @@ def main():
                       degree_cap=50, seed=2)
 
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-    g_dist = build_graph_distributed(feats.dense, cfg, mesh)
-    g_ref = build_graph(feats, cfg)
+
+    # mesh-sharded session: same API, slabs partitioned over 'data'
+    dist = GraphBuilder(feats.dense, cfg, mesh=mesh)
+    dist.add_reps(cfg.r // 3)
+    # a mid-build checkpoint is a host snapshot of the sharded slabs; the
+    # restored session re-shards it and continues bit-exactly
+    ckpt = dist.checkpoint()
+    dist = GraphBuilder.restore(feats.dense, cfg, ckpt, mesh=mesh)
+    dist.add_reps(cfg.r - cfg.r // 3)
+    g_dist = dist.finalize()
+
+    g_ref = GraphBuilder(feats, cfg).add_reps(cfg.r).finalize()
 
     x = np.asarray(feats.dense)
     xn = x / np.linalg.norm(x, axis=1, keepdims=True)
@@ -48,7 +59,8 @@ def main():
           f"comparisons={g_ref.stats['comparisons']:,} recall@10={r_s:.3f}")
     print(f"8-device dist : edges={g_dist.num_edges:,} "
           f"comparisons={g_dist.stats['comparisons']:,} recall@10={r_d:.3f} "
-          f"(sort drops: {g_dist.stats['dropped']})")
+          f"(sort drops: {g_dist.stats['dropped']}; resumed from a "
+          f"checkpoint at rep {ckpt.reps_done})")
 
 
 if __name__ == "__main__":

@@ -2,13 +2,22 @@
 # Tier-1 test wrapper: sets PYTHONPATH=src and runs the pytest suite.
 #
 #   scripts/run_tests.sh            # full tier-1 suite (the CI gate)
-#   scripts/run_tests.sh fast       # <60s quick gate (-m fast)
+#   scripts/run_tests.sh fast       # <60s quick gate (-m fast; includes the
+#                                   #   GraphBuilder session-API tests)
+#   scripts/run_tests.sh builder    # the session-API surface only
+#                                   #   (tests/test_builder.py + accumulator)
 #   scripts/run_tests.sh [args...]  # extra args forwarded to pytest
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-if [[ "${1:-}" == "fast" ]]; then
-  shift
-  exec python -m pytest -q -m fast "$@"
-fi
+case "${1:-}" in
+  fast)
+    shift
+    exec python -m pytest -q -m fast "$@"
+    ;;
+  builder)
+    shift
+    exec python -m pytest -q tests/test_builder.py tests/test_accumulator.py "$@"
+    ;;
+esac
 exec python -m pytest -x -q "$@"

@@ -3,6 +3,11 @@
 from repro.core.lsh import HashFamilyConfig
 from repro.core.spanner import Graph
 from repro.core.stars import StarsConfig, allpairs_graph, build_graph
+from repro.core.builder import (
+    CANDIDATE_SOURCES,
+    BuilderCheckpoint,
+    GraphBuilder,
+)
 
 __all__ = [
     "HashFamilyConfig",
@@ -10,4 +15,7 @@ __all__ = [
     "StarsConfig",
     "allpairs_graph",
     "build_graph",
+    "CANDIDATE_SOURCES",
+    "BuilderCheckpoint",
+    "GraphBuilder",
 ]

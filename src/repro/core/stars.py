@@ -39,19 +39,17 @@ mixture) is evaluated, cutting full comparisons further at equal recall.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import lsh as lsh_lib
 from repro.core import windows as win_lib
 from repro.core.spanner import Graph
 from repro.graph import accumulator as acc_lib
 from repro.kernels import ops as kernel_ops
-from repro.similarity.measures import PointFeatures, pairwise_similarity
+from repro.similarity.measures import PointFeatures
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,10 +91,29 @@ class StarsConfig:
     mixture_alpha: float = 0.5
     score_chunk: int = 8
     seed: int = 0
+    source: Optional[str] = None
+    allpairs_block: int = 2048
 
-    def slab_capacity(self, n: int) -> int:
-        """Per-node accumulator capacity for an n-point build."""
-        return acc_lib.capacity_for(self.degree_cap, n, reps=self.r,
+    @property
+    def source_name(self) -> str:
+        """Candidate-source name (core/builder.py registry).
+
+        Defaults to '<mode>-<scoring>' (e.g. 'sorting-stars'); set
+        ``source='allpairs'`` for the brute-force AllPair sweep, which
+        ignores mode/window/leaders entirely.
+        """
+        return self.source if self.source is not None \
+            else f"{self.mode}-{self.scoring}"
+
+    def slab_capacity(self, n: int, *, reps: Optional[int] = None) -> int:
+        """Per-node accumulator capacity for an n-point build.
+
+        ``reps`` overrides the config's R for session builds that run more
+        repetitions than initially planned (GraphBuilder.add_reps)."""
+        if self.source_name == "allpairs":
+            return acc_lib.capacity_for(self.degree_cap, n)
+        return acc_lib.capacity_for(self.degree_cap, n,
+                                    reps=self.r if reps is None else reps,
                                     per_rep_bound=self.window + self.leaders)
 
 
@@ -105,9 +122,16 @@ class StarsConfig:
 # --------------------------------------------------------------------------- #
 
 
-def _prefilter_sketch(features: PointFeatures, bits: int) -> jax.Array:
-    """Packed SimHash bits shared by all repetitions (prefilter only)."""
-    key = jax.random.key(0xBEEF)
+def _prefilter_sketch(features: PointFeatures, bits: int,
+                      seed: int) -> jax.Array:
+    """Packed SimHash bits shared by all repetitions (prefilter only).
+
+    The config seed is folded into the projection so two builds with
+    different seeds don't share prefilter error patterns; the 0xBEEF stream
+    id keeps the prefilter draw disjoint from the per-repetition sketches
+    (which fold small rep indices into the same root key).
+    """
+    key = jax.random.fold_in(jax.random.key(seed), 0xBEEF)
     proj = jax.random.normal(key, (features.dense.shape[-1], bits),
                              features.dense.dtype)
     return lsh_lib.pack_bits(lsh_lib.simhash_bits(features.dense, proj))
@@ -131,10 +155,20 @@ def _score_tile(measure_fn, features: PointFeatures,
 
 
 def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
-                   prefilter, win):
+                   prefilter, win, *, new_from: int = 0):
     """Stars 1 scoring: every member compares to its bucket's leader only.
 
     O(n) comparisons per repetition — the paper's quadratic->linear win.
+
+    ``new_from`` > 0 restricts scoring to *sub-buckets containing at least
+    one point with gid >= new_from* (incremental extension; see
+    GraphBuilder.extend).  Unlike the multi-leader windowed path, a star is
+    this graph's ONLY intra-bucket connectivity: a new member q reaches its
+    old bucket-mates x exclusively via q - leader - x, so the whole touched
+    star must be (re)scored, not just the new-endpoint pairs — the
+    locality-driven repair rule of Cluster-and-Conquer-style builders.
+    Untouched buckets (the vast majority for a small insertion) are still
+    skipped entirely.
     """
     nw, w_sz = win.gid.shape
     use_pref = cfg.hamming_prefilter_bits > 0
@@ -161,6 +195,14 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
         head_gid = jnp.take_along_axis(gid_c, head_slot, axis=1)
 
         mask = valid_c & (head_slot != slot_ids)          # leaders skip self
+        if new_from > 0:
+            nf = jnp.int32(new_from)
+            is_new = valid_c & (gid_c >= nf)
+            seg = jax.lax.cumsum(is_head.astype(jnp.int32), axis=1)
+            rows_c = jnp.arange(gid_c.shape[0], dtype=jnp.int32)[:, None]
+            seg_new = jnp.zeros((gid_c.shape[0], w_sz + 1), jnp.int32)
+            seg_new = seg_new.at[rows_c, seg].max(is_new.astype(jnp.int32))
+            mask &= jnp.take_along_axis(seg_new, seg, axis=1) > 0
         pref_ops = jnp.zeros((), jnp.int32)
         if use_pref:
             pref_ops = jnp.sum(mask).astype(jnp.int32)
@@ -190,13 +232,22 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
 
 
 def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
-                    measure_fn, prefilter, rep_index: jax.Array):
+                    measure_fn, prefilter, rep_index: jax.Array, *,
+                    new_from: int = 0):
     """One repetition: sketch, window, score; returns the candidate stream.
 
     Returns dict with the full fixed-shape 'src','dst','w' stream plus its
     'emit' mask (the accumulator consumes the stream masked, so no device
     compaction is needed), per-chunk 'comparisons' / 'prefilter_ops' int32
     counts, and the scalar 'emitted'.
+
+    ``new_from`` > 0 masks out pairs whose endpoints BOTH predate an
+    incremental extension (gid < new_from): old-old edges are already in the
+    accumulator slabs, so extension repetitions only pay for new-vs-all
+    comparisons (GraphBuilder.extend).  Exception: the single-leader
+    LSH-Stars path rescores whole touched sub-buckets instead (see
+    ``_rep_lsh_stars``).  The mask is applied before the comparison
+    counters, so `stats['comparisons']` reflects the saving.
     """
     rep_seed = jnp.asarray(rep_index, jnp.uint32) ^ jnp.uint32(cfg.seed)
     key = jax.random.fold_in(jax.random.key(cfg.seed), rep_index)
@@ -222,7 +273,8 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
         # within-bucket order is uniform — the FIRST slot of every bucket
         # run IS a uniform random leader.  Window-initial slots start a new
         # run (= the paper's random sub-bucket split at the size cap).
-        return _rep_lsh_stars(cfg, features, measure_fn, prefilter, win)
+        return _rep_lsh_stars(cfg, features, measure_fn, prefilter, win,
+                              new_from=new_from)
     if cfg.scoring == "stars":
         leader_slot, leader_ok = win_lib.sample_leaders(
             win, s=cfg.leaders, key=k_lead)
@@ -263,6 +315,9 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
                      < jnp.arange(w_sz, dtype=jnp.int32)[None, None, :])
         if same_bucket_mode:
             mask &= lead_bucket[:, :, None] == bucket_c[:, None, :]
+        if new_from > 0:
+            nf = jnp.int32(new_from)
+            mask &= (lead_gid[:, :, None] >= nf) | (gid_c[:, None, :] >= nf)
         pref_ops = jnp.zeros((), jnp.int32)
         if use_pref:
             pref_ops = jnp.sum(mask).astype(jnp.int32)
@@ -305,45 +360,15 @@ def build_graph(features: PointFeatures, cfg: StarsConfig, *,
                 progress: Optional[Callable[[int], None]] = None) -> Graph:
     """Run R repetitions of Stars/non-Stars and return the merged graph.
 
-    Edges never leave the device during the loop: each repetition's masked
-    candidate stream folds into the degree-slab accumulator in the same jit
-    program that scored it (the slabs are donated, so the update is
-    in-place), and the single device->host edge transfer happens in
-    ``acc_lib.to_graph`` after the last repetition.  Per-repetition scalar
-    counters stay on device too and are summed on the host in int64 at the
-    end, so tera-scale comparison counts never overflow a device integer.
+    DEPRECATED one-shot wrapper over :class:`repro.core.builder.GraphBuilder`
+    (kept so the paper-repro scripts and older call sites keep working).
+    The session API additionally supports incremental repetitions, point
+    insertion, and checkpoint/resume; see core/builder.py.
     """
-    measure_fn = pairwise_similarity(
-        cfg.measure, alpha=cfg.mixture_alpha, learned_apply=learned_apply)
-    prefilter = (_prefilter_sketch(features, cfg.hamming_prefilter_bits)
-                 if cfg.hamming_prefilter_bits > 0 else None)
-    n = features.n
-
-    @functools.partial(jax.jit, donate_argnums=0)
-    def rep_step(state, rep_index):
-        out = _rep_candidates(cfg, features, measure_fn, prefilter, rep_index)
-        state = acc_lib.accumulate(state, out["src"], out["dst"], out["w"],
-                                   out["emit"])
-        return state, {k: out[k] for k in
-                       ("comparisons", "emitted", "prefilter_ops")}
-
-    state = acc_lib.EdgeAccumulator.create(n, cfg.slab_capacity(n))
-    per_rep = []
-    for rep in range(cfg.r):
-        state, counters = rep_step(state, jnp.int32(rep))
-        per_rep.append(counters)
-        if progress is not None:
-            progress(rep)
-
-    stats = {"comparisons": 0, "emitted": 0, "prefilter_ops": 0,
-             "reps": cfg.r}
-    for counters in jax.device_get(per_rep):
-        stats["comparisons"] += int(np.sum(np.asarray(counters["comparisons"],
-                                                      np.int64)))
-        stats["emitted"] += int(counters["emitted"])
-        stats["prefilter_ops"] += int(np.sum(np.asarray(
-            counters["prefilter_ops"], np.int64)))
-    return acc_lib.to_graph(state, stats=stats)
+    from repro.core.builder import GraphBuilder
+    builder = GraphBuilder(features, cfg, learned_apply=learned_apply)
+    builder.add_reps(cfg.r, progress=progress)
+    return builder.finalize()
 
 
 def allpairs_graph(features: PointFeatures, measure: str = "cosine", *,
@@ -353,33 +378,14 @@ def allpairs_graph(features: PointFeatures, measure: str = "cosine", *,
                    learned_apply: Optional[Callable] = None) -> Graph:
     """Brute-force *AllPair* baseline: exact n^2/2 comparisons, blocked.
 
-    Each (block x block) similarity tile is scored AND folded into the
-    degree-slab accumulator in one jit program; edges reach the host once,
-    at the final compaction.  Blocks are fixed-shape (tails padded with
-    invalid ids) so the whole sweep reuses a single compiled program.
+    DEPRECATED one-shot wrapper over the 'allpairs' candidate source of
+    :class:`repro.core.builder.GraphBuilder` (one round == one full blocked
+    sweep; edges reach the host once, at finalize).
     """
-    measure_fn = pairwise_similarity(
-        measure, alpha=mixture_alpha, learned_apply=learned_apply)
-    n = features.n
-    cap = acc_lib.capacity_for(degree_cap, n)
-
-    @functools.partial(jax.jit, donate_argnums=0)
-    def block_step(state, a0, b0):
-        ids_a = a0 + jnp.arange(block, dtype=jnp.int32)
-        ids_b = b0 + jnp.arange(block, dtype=jnp.int32)
-        fa = features.take(jnp.minimum(ids_a, n - 1))
-        fb = features.take(jnp.minimum(ids_b, n - 1))
-        sims = measure_fn(fa, fb)
-        aa = jnp.broadcast_to(ids_a[:, None], (block, block))
-        bb = jnp.broadcast_to(ids_b[None, :], (block, block))
-        keep = (aa < bb) & (bb < n)
-        if r1 is not None:
-            keep &= sims > r1
-        return acc_lib.accumulate(state, aa, bb, sims, keep)
-
-    state = acc_lib.EdgeAccumulator.create(n, cap)
-    for a0 in range(0, n, block):
-        for b0 in range(a0, n, block):
-            state = block_step(state, jnp.int32(a0), jnp.int32(b0))
-    return acc_lib.to_graph(state,
-                            stats={"comparisons": n * (n - 1) // 2})
+    from repro.core.builder import GraphBuilder
+    cfg = StarsConfig(source="allpairs", measure=measure, r=1, r1=r1,
+                      degree_cap=degree_cap, mixture_alpha=mixture_alpha,
+                      allpairs_block=block)
+    builder = GraphBuilder(features, cfg, learned_apply=learned_apply)
+    builder.add_reps(1)
+    return builder.finalize()

@@ -1,6 +1,10 @@
 """Distributed Stars: the graph-build pipeline on a device mesh.
 
-Phases per repetition (paper §4, adapted per DESIGN.md §3):
+The mesh build is now a backend of the unified session API — constructing
+``GraphBuilder(features, cfg, mesh=mesh)`` shards the feature table and the
+degree slabs row-wise over the ``data`` axis and runs, per repetition
+(paper §4, adapted per DESIGN.md §3):
+
   1. sketch    — each `data` shard sketches its own points (no comms),
   2. sort      — distributed sample-sort of (key, gid) pairs (sorter.py);
                  the output windows are shard-contiguous,
@@ -10,125 +14,31 @@ Phases per repetition (paper §4, adapted per DESIGN.md §3):
   4. score     — leaders x window similarity tiles (leader_score kernel),
   5. emit      — masked edge candidates fold into the degree-slab
                  accumulator (graph/accumulator.py) inside the same jit
-                 program; the slabs stay sharded row-wise over the `data`
-                 axis, so a shard's emit writes mostly land on its own rows
+                 program; a shard's emit writes mostly land on its own rows
                  and XLA inserts the residual scatter traffic.
 
-The host never sees per-repetition edges: one slab fetch after the last
-repetition produces the final Graph (``Graph.from_degree_slabs``), the same
-single-transfer contract as the single-device builder.  Per-repetition
-comparison/drop counters stay on device and are summed on the host in int64
-at the end.
-
-Supports cosine/dot measures (the tera-scale Random1B/10B setting).  The
-single-device path (core/stars.py) remains the reference; the equivalence
-test checks recall parity on a shared dataset.
+The host never sees per-repetition edges: one slab fetch per ``finalize()``
+produces the Graph, the same single-transfer contract as the single-device
+backend.  See ``repro.core.builder._MeshBackend`` for the implementation;
+this module keeps the legacy one-shot entry point.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-import numpy as np
-
-from repro.core import lsh as lsh_lib
 from repro.core.spanner import Graph
 from repro.core.stars import StarsConfig
-from repro.distributed.sorter import distributed_sort
-from repro.graph import accumulator as acc_lib
-from repro.kernels import ops as kernel_ops
 
 
 def build_graph_distributed(dense: jax.Array, cfg: StarsConfig,
                             mesh: jax.sharding.Mesh) -> Graph:
-    """Multi-device Stars build; `dense` is (n, d), sharded or shardable."""
-    axis = "data"
-    dense = jax.device_put(dense, NamedSharding(mesh, P(axis, None)))
-    n = dense.shape[0]
-    cap = cfg.slab_capacity(n)
-    slab_shard = NamedSharding(mesh, P(axis, None))
-    repl = NamedSharding(mesh, P())
+    """Multi-device Stars build; `dense` is (n, d), sharded or shardable.
 
-    @functools.partial(jax.jit,
-                       out_shardings=(NamedSharding(mesh, P(axis)),
-                                      NamedSharding(mesh, P(axis))))
-    def sketch_phase(x, rep):
-        from repro.similarity.measures import PointFeatures
-        rep_seed = jnp.asarray(rep, jnp.uint32) ^ jnp.uint32(cfg.seed)
-        words = lsh_lib.sketch(PointFeatures(dense=x), cfg.family,
-                               rep_seed=rep_seed)
-        if cfg.mode == "lsh":
-            keys = lsh_lib.bucket_key(words, cfg.family)
-        else:
-            packed = lsh_lib.pack_bits(words.astype(bool))
-            keys = packed[:, 0]        # lexicographic prefix word
-        gids = jnp.arange(n, dtype=jnp.int32)
-        return keys, gids
-
-    w = cfg.window
-
-    @functools.partial(
-        jax.jit, donate_argnums=0,
-        out_shardings=(acc_lib.EdgeAccumulator(nbr=slab_shard, w=slab_shard),
-                       repl))
-    def score_and_update(state, keys_s, gids_s, valid, rep):
-        # the sorted sequence is longer than n (fixed-capacity sort slots
-        # with sentinel padding per shard); window ALL of it — the validity
-        # mask handles the sentinels.
-        n_win = keys_s.shape[0] // w
-        key = jax.random.fold_in(jax.random.key(cfg.seed), rep)
-        _, k_lead = jax.random.split(key)
-        kw = keys_s[:n_win * w].reshape(n_win, w)
-        gw = gids_s[:n_win * w].reshape(n_win, w)
-        vw = valid[:n_win * w].reshape(n_win, w)
-        pri = jax.random.uniform(k_lead, (n_win, w))
-        pri = jnp.where(vw, pri, -1.0)
-        lv, lslot = jax.lax.top_k(pri, cfg.leaders)
-        lgid = jnp.take_along_axis(gw, lslot, axis=1)
-        lkey = jnp.take_along_axis(kw, lslot, axis=1)
-        # join: gather feature rows across shards (DHT analogue)
-        lead_f = dense[jnp.maximum(lgid, 0)]
-        memb_f = dense[jnp.maximum(gw, 0)]
-        ok_l = lv > 0
-        sims = kernel_ops.leader_score(lead_f, memb_f, ok_l, vw,
-                                       normalized=cfg.measure == "cosine")
-        mask = ok_l[:, :, None] & vw[:, None, :]
-        mask &= lslot[:, :, None] != jnp.arange(w)[None, None, :]
-        if cfg.mode == "lsh":
-            mask &= lkey[:, :, None] == kw[:, None, :]
-        # per-window int32 partial counts; the host sums them in int64 so
-        # tera-scale comparison totals never overflow a device integer
-        comparisons = jnp.sum(mask, axis=(1, 2)).astype(jnp.int32)
-        if cfg.r1 is not None:
-            mask &= sims > cfg.r1
-        src = jnp.broadcast_to(lgid[:, :, None], sims.shape)
-        dst = jnp.broadcast_to(gw[:, None, :], sims.shape)
-        state = acc_lib.accumulate(state, src, dst, sims, mask)
-        return state, comparisons
-
-    state = jax.device_put(
-        acc_lib.EdgeAccumulator.create(n, cap),
-        acc_lib.EdgeAccumulator(nbr=slab_shard, w=slab_shard))
-    comp_per_rep, drop_per_rep = [], []
-    for rep in range(cfg.r):
-        keys, gids = sketch_phase(dense, jnp.int32(rep))
-        keys_s, gids_s, valid, dropped = distributed_sort(keys, gids, mesh,
-                                                          axis=axis)
-        state, comps = score_and_update(state, keys_s, gids_s, valid,
-                                        jnp.int32(rep))
-        comp_per_rep.append(comps)
-        drop_per_rep.append(dropped)
-
-    comp_h, drop_h = jax.device_get((comp_per_rep, drop_per_rep))
-    stats = {
-        "comparisons": int(np.sum([np.sum(np.asarray(c, np.int64))
-                                   for c in comp_h])),
-        "dropped": int(np.sum([np.sum(np.asarray(d, np.int64))
-                               for d in drop_h])),
-        "reps": cfg.r,
-    }
-    return acc_lib.to_graph(state, stats=stats)
+    DEPRECATED one-shot wrapper over
+    ``GraphBuilder(dense, cfg, mesh=mesh)`` (kept for older call sites).
+    """
+    from repro.core.builder import GraphBuilder
+    builder = GraphBuilder(dense, cfg, mesh=mesh)
+    builder.add_reps(cfg.r)
+    return builder.finalize()

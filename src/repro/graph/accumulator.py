@@ -44,13 +44,17 @@ _BIG = jnp.int32(2**31 - 1)
 
 # Host-transfer accounting: every fetch of edge payload off device goes
 # through to_graph(), so "one device->host edge transfer per build" is a
-# checkable invariant (see benchmarks/accumulator_bench.py).
-transfer_stats: Dict[str, int] = {"edge_fetches": 0, "bytes": 0}
+# checkable invariant (see benchmarks/accumulator_bench.py).  Checkpoint
+# snapshots (GraphBuilder.checkpoint) are tracked separately — they are
+# deliberate, user-requested transfers, not part of the build loop.
+transfer_stats: Dict[str, int] = {"edge_fetches": 0, "bytes": 0,
+                                  "checkpoint_fetches": 0,
+                                  "checkpoint_bytes": 0}
 
 
 def reset_transfer_stats() -> None:
-    transfer_stats["edge_fetches"] = 0
-    transfer_stats["bytes"] = 0
+    for k in transfer_stats:
+        transfer_stats[k] = 0
 
 
 @jax.tree_util.register_dataclass
@@ -79,6 +83,48 @@ class EdgeAccumulator:
         return EdgeAccumulator(
             nbr=jnp.full((n, capacity), -1, jnp.int32),
             w=jnp.full((n, capacity), -jnp.inf, jnp.float32))
+
+
+def grow(state: EdgeAccumulator, n: int,
+         capacity: Optional[int] = None) -> EdgeAccumulator:
+    """Grow the slab table to ``n`` rows (and optionally more columns).
+
+    New rows/slots start empty (-1 / -inf); existing entries are preserved
+    verbatim.  Column growth pads at the tail, which keeps every row's
+    weight-descending invariant (padding weight -inf sorts last).  Used by
+    GraphBuilder.extend (row growth for inserted points) and by uncapped
+    session builds whose repetition budget outgrows the initial worst-case
+    capacity (column growth).
+    """
+    n0, cap0 = state.nbr.shape
+    capacity = cap0 if capacity is None else capacity
+    if n < n0 or capacity < cap0:
+        raise ValueError(f"cannot shrink slabs: ({n0},{cap0})->({n},{capacity})")
+    if (n, capacity) == (n0, cap0):
+        return state
+    pad = ((0, n - n0), (0, capacity - cap0))
+    return EdgeAccumulator(
+        nbr=jnp.pad(state.nbr, pad, constant_values=-1),
+        w=jnp.pad(state.w, pad, constant_values=-jnp.inf))
+
+
+def to_host(state: EdgeAccumulator):
+    """Snapshot the slabs to host numpy arrays (checkpointing).
+
+    Tracked under ``transfer_stats['checkpoint_*']`` — NOT as a build edge
+    fetch, so the one-fetch-per-finalize invariant stays checkable.
+    """
+    import numpy as np
+    nbr, w = jax.device_get((state.nbr, state.w))
+    transfer_stats["checkpoint_fetches"] += 1
+    transfer_stats["checkpoint_bytes"] += int(nbr.nbytes) + int(w.nbytes)
+    return np.asarray(nbr), np.asarray(w)
+
+
+def from_host(nbr, w) -> EdgeAccumulator:
+    """Rebuild device-resident slabs from a host snapshot (restore)."""
+    return EdgeAccumulator(nbr=jnp.asarray(nbr, jnp.int32),
+                           w=jnp.asarray(w, jnp.float32))
 
 
 def capacity_for(degree_cap: Optional[int], n: int, *,
@@ -139,8 +185,9 @@ def accumulate(state: EdgeAccumulator, src: jax.Array, dst: jax.Array,
     node_k2 = jnp.where(keep, node_s, _BIG)
     negw2 = jnp.where(keep, negw_s, jnp.inf)
     nbr_k2 = jnp.where(keep, nbr_s, _BIG)
-    node_f, negw_f, nbr_f = jax.lax.sort((node_k2, negw2, nbr_k2),
-                                         num_keys=3)
+    iota1 = jnp.arange(m2, dtype=jnp.int32)
+    node_f, negw_f, nbr_f, p1 = jax.lax.sort(
+        (node_k2, negw2, nbr_k2, iota1), num_keys=3)
     starts = jnp.searchsorted(node_f, jnp.arange(n, dtype=jnp.int32))
     live = node_f != _BIG
     node_c = jnp.where(live, node_f, 0)
@@ -151,8 +198,35 @@ def accumulate(state: EdgeAccumulator, src: jax.Array, dst: jax.Array,
     inc_w = jnp.full((n, kin), -jnp.inf, jnp.float32).at[node_c, slot].set(
         -negw_f, mode="drop")
 
-    # 3) merge into the running slabs (Pallas on TPU, jnp ref on CPU)
-    new_nbr, new_w = kernel_ops.topk_merge(state.nbr, state.w, inc_nbr, inc_w)
+    # 2b) CPU only: nbr-ascending companion view of the same survivors, so
+    #     the merge-path slab merge needs no sort at all (the step-1 order
+    #     is already (node, nbr); a few stream-length scatters re-express
+    #     it per node row).  TPU skips this — the Pallas kernel dedups in
+    #     VMEM and never reads the companion view.
+    presorted = None
+    if jax.default_backend() != "tpu":
+        # weight-order slot of every step-1 element (kin == dropped/dead)
+        wrank1 = jnp.zeros((m2,), jnp.int32).at[p1].set(slot)
+        surv1 = (wrank1 < kin).astype(jnp.int32)
+        excl = jnp.cumsum(surv1) - surv1                 # survivors before e
+        starts1 = jnp.searchsorted(node_s, jnp.arange(n, dtype=jnp.int32))
+        node1 = jnp.where(node_s != _BIG, node_s, 0)
+        nbr_rank = excl - excl[starts1[node1]]           # rank among node's
+        slot_bn = jnp.where(surv1 == 1, nbr_rank, kin)   # survivors, by nbr
+        nbr_bn = jnp.full((n, kin), _BIG, jnp.int32).at[node1, slot_bn].set(
+            nbr_s, mode="drop")
+        negw_bn = jnp.full((n, kin), jnp.inf, jnp.float32).at[
+            node1, slot_bn].set(negw_s, mode="drop")
+        idx_bn = jnp.full((n, kin), kin, jnp.int32).at[node1, slot_bn].set(
+            wrank1, mode="drop")
+        presorted = (nbr_bn, negw_bn, idx_bn)
+
+    # 3) merge into the running slabs (Pallas on TPU; sort-free merge-path
+    #    jnp ref on CPU — both sides are weight-sorted and deduped by
+    #    construction)
+    new_nbr, new_w = kernel_ops.topk_merge(state.nbr, state.w, inc_nbr, inc_w,
+                                           sorted_inputs=True,
+                                           inc_presorted=presorted)
     return EdgeAccumulator(nbr=new_nbr, w=new_w)
 
 

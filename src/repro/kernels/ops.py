@@ -51,14 +51,28 @@ def leader_score(leaders, members, leader_ok, member_ok, *,
                                  normalized=normalized)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "sorted_inputs"))
 def topk_merge(slab_nbr, slab_w, inc_nbr, inc_w, *,
-               use_pallas: Optional[bool] = None):
-    """Per-node top-k degree-slab merge (the edge-accumulator update)."""
+               use_pallas: Optional[bool] = None,
+               sorted_inputs: bool = False,
+               inc_presorted=None):
+    """Per-node top-k degree-slab merge (the edge-accumulator update).
+
+    ``sorted_inputs=True`` asserts the accumulator-traffic preconditions
+    (rows weight-sorted descending, per-row deduped, -1/-inf tails) and
+    routes the CPU path to the merge-path formulation instead of the full
+    re-sort — see ``ref.topk_merge_sorted_ref``; ``inc_presorted`` (the
+    batch's nbr-ascending companion view produced by the accumulator's
+    bucketing stage) additionally removes the merge's dedup sort.  The
+    Pallas kernel is order-insensitive, so the TPU path is unchanged.
+    """
     use, interp = _pick(use_pallas)
     if use:
         return _tm.topk_merge(slab_nbr, slab_w, inc_nbr, inc_w,
                               interpret=interp)
+    if sorted_inputs:
+        return _ref.topk_merge_sorted_ref(slab_nbr, slab_w, inc_nbr, inc_w,
+                                          inc_presorted)
     return _ref.topk_merge_ref(slab_nbr, slab_w, inc_nbr, inc_w)
 
 

@@ -79,6 +79,110 @@ def topk_merge_ref(slab_nbr: jax.Array, slab_w: jax.Array,
     return out_nbr.astype(jnp.int32), out_w
 
 
+def topk_merge_sorted_ref(slab_nbr: jax.Array, slab_w: jax.Array,
+                          inc_nbr: jax.Array, inc_w: jax.Array,
+                          inc_presorted=None) -> tuple[jax.Array, jax.Array]:
+    """Merge-path top-k slab merge for accumulator-shaped inputs.
+
+    Preconditions (hold for all accumulator traffic, by construction):
+      * every row of both inputs is sorted by weight descending with empty
+        slots (nbr < 0, w = -inf) at the tail, finite weights on valid slots,
+      * no neighbour appears twice within one row of one input (cross-input
+        duplicates are fine — resolved here, max weight wins).
+
+    ``topk_merge_ref`` re-sorts the (n, k+kin) concatenation twice — XLA CPU
+    comparator sorts make that the k=250 build bottleneck (ROADMAP).  Here
+    each element's output slot is computed directly as
+
+        pos = rank-in-own-row + #other-row-entries-that-beat-it,
+
+    the second term found by binary search in the other row (merge-path),
+    so the heavy (n, k+kin) comparator sorts disappear.  Cross-input
+    duplicates are found with one narrow (n, kin) sort of the batch by
+    neighbour id plus a binary search per slab entry; the lighter instance
+    is masked out and positions are corrected by prefix counts of masked
+    entries.  Cost: one (n, kin) sort + O((k+kin) log) searches/gathers vs
+    two (n, k+kin) multi-key sorts.
+
+    Tie policy: cross-input equal weights between *different* neighbours
+    resolve slab-before-batch (the full re-sort resolves them nbr-ascending);
+    exact ties are measure-zero for real-valued similarities and either
+    order satisfies the top-k contract (see graph/accumulator.py).  Equal
+    weight AND equal neighbour is a duplicate: the slab instance survives,
+    matching the stable re-sort.
+
+    ``inc_presorted``, when given, is ``(nbr_bn, negw_bn, idx_bn)`` — the
+    batch's nbr-ascending companion view (neighbour ids with int32-max on
+    empty slots, negated weights with +inf on empty slots, and each slot's
+    weight-order index with ``kin`` on empty slots).  The accumulator's
+    bucketing stage already visits the batch in neighbour order, so it
+    produces this view with a few stream-length scatters (accumulate step
+    2b) and even the narrow dedup sort disappears from the merge.
+    """
+    n, k = slab_nbr.shape
+    kin = inc_nbr.shape[1]
+    big = jnp.int32(2**31 - 1)
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+
+    a_valid = slab_nbr >= 0
+    b_valid = inc_nbr >= 0
+    a_nbr = jnp.where(a_valid, slab_nbr, -1)
+    b_nbr = jnp.where(b_valid, inc_nbr, -1)
+    nega = jnp.where(a_valid, -slab_w.astype(jnp.float32), jnp.inf)
+    negb = jnp.where(b_valid, -inc_w.astype(jnp.float32), jnp.inf)
+
+    # -- cross-input dedup against the batch's nbr-ascending view (supplied
+    #    by the accumulator, else one narrow sort of the batch) --
+    if inc_presorted is not None:
+        nbr_bn, negw_bn, idx_bn = inc_presorted
+    else:
+        b_key = jnp.where(b_valid, b_nbr, big)
+        iota = jnp.broadcast_to(jnp.arange(kin, dtype=jnp.int32), (n, kin))
+        nbr_bn, negw_bn, idx_bn = jax.lax.sort((b_key, negb, iota),
+                                               num_keys=2, dimension=1)
+    pos = jax.vmap(jnp.searchsorted)(nbr_bn, a_nbr)
+    pos_c = jnp.minimum(pos, kin - 1)
+    hit = (jnp.take_along_axis(nbr_bn, pos_c, axis=1) == a_nbr) & a_valid
+    negw_hit = jnp.take_along_axis(negw_bn, pos_c, axis=1)
+    drop_a = hit & (negw_hit < nega)           # batch strictly heavier wins
+    loser_b = hit & (negw_hit >= nega)          # ties keep the slab instance
+    # mark the losing batch instance at its nbr-order slot, then permute the
+    # flags back to the batch's weight order via the sort's carried indices
+    drop_b_nbrorder = jnp.zeros((n, kin), bool).at[
+        rows, jnp.where(loser_b, pos_c, kin)].set(True, mode="drop")
+    drop_b = jnp.zeros((n, kin), bool).at[rows, idx_bn].set(
+        drop_b_nbrorder, mode="drop")
+
+    # -- merge-path: output slot = own-row rank + beaten-by count, both
+    #    corrected by the prefix count of dedup-dropped entries --
+    beats_b = jax.vmap(
+        lambda b, a: jnp.searchsorted(b, a, side="left"))(negb, nega)
+    beats_a = jax.vmap(
+        lambda a, b: jnp.searchsorted(a, b, side="right"))(nega, negb)
+    cda = jnp.concatenate(
+        [jnp.zeros((n, 1), jnp.int32),
+         jnp.cumsum(drop_a, axis=1, dtype=jnp.int32)], axis=1)
+    cdb = jnp.concatenate(
+        [jnp.zeros((n, 1), jnp.int32),
+         jnp.cumsum(drop_b, axis=1, dtype=jnp.int32)], axis=1)
+    pos_a = (jnp.arange(k, dtype=jnp.int32)[None, :] - cda[:, :k]
+             + beats_b - jnp.take_along_axis(cdb, beats_b, axis=1))
+    pos_a = jnp.where(drop_a, k, pos_a)        # k == dropped (scatter-drop)
+    pos_b = (jnp.arange(kin, dtype=jnp.int32)[None, :] - cdb[:, :kin]
+             + beats_a - jnp.take_along_axis(cda, beats_a, axis=1))
+    pos_b = jnp.where(drop_b, k, pos_b)
+
+    out_nbr = jnp.full((n, k), -1, jnp.int32)
+    out_nbr = out_nbr.at[rows, pos_a].set(a_nbr, mode="drop")
+    out_nbr = out_nbr.at[rows, pos_b].set(b_nbr, mode="drop")
+    out_w = jnp.full((n, k), -jnp.inf, jnp.float32)
+    out_w = out_w.at[rows, pos_a].set(
+        jnp.where(a_valid, slab_w.astype(jnp.float32), -jnp.inf), mode="drop")
+    out_w = out_w.at[rows, pos_b].set(
+        jnp.where(b_valid, inc_w.astype(jnp.float32), -jnp.inf), mode="drop")
+    return out_nbr, out_w
+
+
 def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
             causal: bool = True, window: int | None = None,
             scale: float | None = None) -> jax.Array:

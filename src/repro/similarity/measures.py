@@ -60,6 +60,28 @@ class PointFeatures:
             dense=g(self.dense), set_idx=g(self.set_idx),
             set_w=g(self.set_w), set_mask=g(self.set_mask))
 
+    def concat(self, other: "PointFeatures") -> "PointFeatures":
+        """Append another batch of points (GraphBuilder.extend).
+
+        Both batches must carry the same feature blocks with matching
+        trailing shapes; appended points get the next gids.
+        """
+        def cat(x, y, name):
+            if (x is None) != (y is None):
+                raise ValueError(
+                    f"cannot concat: {name} present on one side only")
+            if x is None:
+                return None
+            if x.shape[1:] != y.shape[1:]:
+                raise ValueError(f"{name} trailing shapes differ: "
+                                 f"{x.shape[1:]} vs {y.shape[1:]}")
+            return jnp.concatenate([x, y.astype(x.dtype)], axis=0)
+        return PointFeatures(
+            dense=cat(self.dense, other.dense, "dense"),
+            set_idx=cat(self.set_idx, other.set_idx, "set_idx"),
+            set_w=cat(self.set_w, other.set_w, "set_w"),
+            set_mask=cat(self.set_mask, other.set_mask, "set_mask"))
+
 
 def _normalize(x: jax.Array, eps: float = 1e-12) -> jax.Array:
     return x / jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True) + eps)

@@ -102,6 +102,55 @@ def test_topk_merge_saturates_at_capacity():
 
 
 @pytest.mark.fast
+def test_topk_merge_sorted_ref_matches_general_ref():
+    """The merge-path formulation == the re-sort oracle on inputs satisfying
+    its preconditions (rows weight-sorted desc, per-row-unique neighbours,
+    -1/-inf tails), with and without the precomputed nbr-order view —
+    including cross-input duplicates at equal and differing weights."""
+    rs = np.random.RandomState(7)
+    n, k, kin = 16, 9, 7
+
+    def rows(cols):
+        nbr = np.full((n, cols), -1, np.int32)
+        w = np.full((n, cols), -np.inf, np.float32)
+        for i in range(n):
+            nv = rs.randint(0, cols + 1)
+            nbr[i, :nv] = rs.permutation(3 * cols)[:nv]
+            w[i, :nv] = -np.sort(-rs.rand(nv).astype(np.float32))
+        return nbr, w
+
+    for _ in range(20):
+        snbr, sw = rows(k)
+        inbr, iw = rows(kin)
+        for i in range(n):        # inject cross-input duplicates
+            va, vb = np.flatnonzero(snbr[i] >= 0), np.flatnonzero(inbr[i] >= 0)
+            if va.size and vb.size:
+                a, j = rs.choice(va), rs.choice(vb)
+                if snbr[i][a] not in inbr[i]:
+                    inbr[i][j] = snbr[i][a]
+                    if rs.rand() < 0.5:
+                        iw[i][j] = sw[i][a]          # equal-weight duplicate
+                    order = np.argsort(-iw[i], kind="stable")
+                    inbr[i], iw[i] = inbr[i][order], iw[i][order]
+        args = tuple(jnp.asarray(x) for x in (snbr, sw, inbr, iw))
+        g_nbr, g_w = ref.topk_merge_ref(*args)
+        s_nbr, s_w = ref.topk_merge_sorted_ref(*args)
+        np.testing.assert_array_equal(np.asarray(g_nbr), np.asarray(s_nbr))
+        np.testing.assert_array_equal(np.asarray(g_w), np.asarray(s_w))
+        # the accumulate-fed path: companion view precomputed
+        big = jnp.int32(2**31 - 1)
+        iota = jnp.broadcast_to(jnp.arange(kin, dtype=jnp.int32), (n, kin))
+        inbr_j, iw_j = args[2], args[3]
+        pres = jax.lax.sort(
+            (jnp.where(inbr_j >= 0, inbr_j, big),
+             jnp.where(inbr_j >= 0, -iw_j, jnp.inf), iota),
+            num_keys=2, dimension=1)
+        p_nbr, p_w = ref.topk_merge_sorted_ref(*args, inc_presorted=pres)
+        np.testing.assert_array_equal(np.asarray(g_nbr), np.asarray(p_nbr))
+        np.testing.assert_array_equal(np.asarray(g_w), np.asarray(p_w))
+
+
+@pytest.mark.fast
 @pytest.mark.parametrize("n,k,kin", [(1, 4, 4), (17, 8, 8), (64, 16, 8),
                                      (5, 3, 9)])
 def test_topk_merge_kernel_matches_ref(n, k, kin):

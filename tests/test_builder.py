@@ -1,0 +1,253 @@
+"""GraphBuilder session API (core/builder.py).
+
+The api_redesign acceptance surface:
+  * the deprecated one-shot wrappers (build_graph / allpairs_graph) are
+    edge-for-edge equal to an explicit session on LSH and SortingLSH,
+  * extend() on a held-out 20% of points reaches two-hop recall within 2%
+    of a from-scratch build at equal total repetitions, paying only the
+    new-vs-all comparisons,
+  * checkpoint()/restore() round-trips are bit-exact (edges AND stats),
+  * transfer_stats records exactly one device->host edge fetch per
+    finalize() — checkpoints are accounted separately.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (GraphBuilder, HashFamilyConfig, StarsConfig,
+                        allpairs_graph, build_graph)
+from repro.data import mnist_like_points
+from repro.graph import accumulator as acc_lib
+from repro.graph import neighbor_recall
+
+
+def _edges(g):
+    return {(int(s), int(d)): float(w)
+            for s, d, w in zip(g.src, g.dst, g.w)}
+
+
+def _small():
+    return mnist_like_points(n=600, d=24, classes=6, spread=0.25, seed=0)
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("mode,m,window", [("lsh", 8, 128),
+                                           ("sorting", 16, 64)])
+def test_wrapper_equals_session(mode, m, window):
+    """The deprecated wrapper wires (r, cfg, ...) into the session exactly.
+
+    This pins the wrapper *plumbing* (both paths share the session code);
+    equivalence of the session itself against an INDEPENDENT implementation
+    is tests/test_accumulator.py::test_accumulator_matches_legacy_host_merge,
+    whose oracle re-implements the per-rep host transfer + lexsort-dedup +
+    union degree-cap from scratch."""
+    feats, _ = _small()
+    cfg = StarsConfig(mode=mode, scoring="stars",
+                      family=HashFamilyConfig("simhash", m=m),
+                      measure="cosine", r=6, window=window, leaders=8,
+                      degree_cap=20, seed=7)
+    g_wrap = build_graph(feats, cfg)
+    g_sess = GraphBuilder(feats, cfg).add_reps(cfg.r).finalize()
+    assert _edges(g_wrap) == _edges(g_sess)
+    assert g_wrap.stats == g_sess.stats
+
+
+@pytest.mark.fast
+def test_allpairs_session_matches_numpy_oracle():
+    """The 'allpairs' source against an independent dense-numpy oracle
+    (exact cosine matrix -> candidate list -> union degree-cap), plus the
+    wrapper plumbing."""
+    from repro.core.spanner import Graph
+    feats, _ = _small()
+    cap = 10
+    g_wrap = allpairs_graph(feats, "cosine", degree_cap=cap, block=256)
+    cfg = StarsConfig(source="allpairs", measure="cosine", degree_cap=cap,
+                      allpairs_block=256, r=1)
+    g_sess = GraphBuilder(feats, cfg).add_reps(1).finalize()
+    assert _edges(g_wrap) == _edges(g_sess)
+    n = feats.n
+    assert g_sess.stats["comparisons"] == n * (n - 1) // 2
+
+    # same similarity floats (the repo's cosine), INDEPENDENT accumulation:
+    # full dense matrix -> host candidate list -> numpy union degree-cap,
+    # none of the device slab/bucketing/dedup machinery involved
+    from repro.similarity.measures import cosine_pairwise
+    sims = np.asarray(cosine_pairwise(feats.dense, feats.dense))
+    iu, ju = np.triu_indices(n, k=1)
+    oracle = Graph.from_candidates(
+        n, iu, ju, sims[iu, ju], np.ones(iu.size, bool)).degree_cap(cap)
+    e_sess, e_orc = _edges(g_sess), _edges(oracle)
+    assert set(e_sess) == set(e_orc)
+    # blockwise vs full-matrix matmul reduction order shifts the last ulp
+    keys = sorted(e_sess)
+    np.testing.assert_allclose([e_sess[k] for k in keys],
+                               [e_orc[k] for k in keys], rtol=1e-6)
+
+
+@pytest.mark.fast
+def test_allpairs_source_is_one_sweep_only():
+    feats, _ = _small()
+    cfg = StarsConfig(source="allpairs", measure="cosine", degree_cap=5,
+                      allpairs_block=256)
+    builder = GraphBuilder(feats, cfg)
+    with pytest.raises(ValueError):
+        builder.add_reps(3)           # would re-score identical pairs
+    builder.add_reps()                # defaults to the single exact sweep
+    with pytest.raises(ValueError):
+        builder.add_reps()            # the sweep already happened
+
+
+@pytest.mark.fast
+def test_add_reps_is_resumable_mid_session():
+    """Two add_reps calls == one: repetition indices continue seamlessly."""
+    feats, _ = _small()
+    cfg = StarsConfig(mode="sorting", scoring="stars",
+                      family=HashFamilyConfig("simhash", m=16),
+                      measure="cosine", r=6, window=64, leaders=8,
+                      degree_cap=20, seed=3)
+    g_one = GraphBuilder(feats, cfg).add_reps(6).finalize()
+    g_two = GraphBuilder(feats, cfg).add_reps(2).add_reps(4).finalize()
+    assert _edges(g_one) == _edges(g_two)
+    assert g_one.stats == g_two.stats
+
+
+@pytest.mark.fast
+def test_checkpoint_restore_bit_exact():
+    feats, _ = _small()
+    cfg = StarsConfig(mode="sorting", scoring="stars",
+                      family=HashFamilyConfig("simhash", m=16),
+                      measure="cosine", r=6, window=64, leaders=8,
+                      degree_cap=20, seed=5)
+    builder = GraphBuilder(feats, cfg).add_reps(3)
+    ckpt = builder.checkpoint()
+    g_straight = builder.add_reps(3).finalize()
+
+    resumed = GraphBuilder.restore(feats, cfg, ckpt)
+    assert resumed.reps_done == 3
+    g_resumed = resumed.add_reps(3).finalize()
+    assert _edges(g_straight) == _edges(g_resumed)
+    assert g_straight.stats == g_resumed.stats
+
+    # numpy payloads survive a serialization round-trip unchanged
+    assert ckpt.nbr.dtype == np.int32 and ckpt.w.dtype == np.float32
+    rt = GraphBuilder.restore(feats, cfg, ckpt).checkpoint()
+    np.testing.assert_array_equal(rt.nbr, ckpt.nbr)
+    np.testing.assert_array_equal(rt.w, ckpt.w)
+
+
+@pytest.mark.fast
+def test_one_edge_fetch_per_finalize_checkpoints_separate():
+    feats, _ = _small()
+    cfg = StarsConfig(mode="sorting", scoring="stars",
+                      family=HashFamilyConfig("simhash", m=16),
+                      measure="cosine", r=4, window=64, leaders=8,
+                      degree_cap=10, seed=1)
+    acc_lib.reset_transfer_stats()
+    builder = GraphBuilder(feats, cfg).add_reps(4)
+    builder.checkpoint()
+    assert acc_lib.transfer_stats["edge_fetches"] == 0
+    assert acc_lib.transfer_stats["checkpoint_fetches"] == 1
+    builder.finalize()
+    assert acc_lib.transfer_stats["edge_fetches"] == 1
+    builder.extend(mnist_like_points(n=64, d=24, classes=4, spread=0.25,
+                                     seed=9)[0], reps=2)
+    builder.finalize()
+    assert acc_lib.transfer_stats["edge_fetches"] == 2
+
+
+@pytest.mark.parametrize("mode,m,window", [("sorting", 24, 128),
+                                           ("lsh", 8, 512)])
+def test_extend_recall_parity_vs_rebuild(mode, m, window):
+    """Acceptance: extend() on a held-out 20% reaches two-hop recall within
+    2% of a from-scratch build at equal total repetitions, while paying
+    only the new-vs-all stream (sorting) / the touched-bucket stream
+    (single-leader LSH; see _rep_lsh_stars)."""
+    feats, _ = mnist_like_points(n=2000, d=32, classes=8, spread=0.15,
+                                 seed=3)
+    R = 12
+    cfg = StarsConfig(mode=mode, scoring="stars",
+                      family=HashFamilyConfig("simhash", m=m),
+                      measure="cosine", r=R, window=window, leaders=10,
+                      degree_cap=50, seed=2)
+    n = feats.n
+    n0 = int(n * 0.8)
+
+    acc_lib.reset_transfer_stats()
+    g_full = GraphBuilder(feats, cfg).add_reps(R).finalize()
+    builder = GraphBuilder(feats.take(np.arange(n0)), cfg).add_reps(R)
+    base_comps = builder._merged_stats()["comparisons"]
+    builder.extend(feats.take(np.arange(n0, n)), reps=R)
+    g_inc = builder.finalize()
+    assert acc_lib.transfer_stats["edge_fetches"] == 2  # one per finalize
+
+    x = np.asarray(feats.dense)
+    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    sims = xn @ xn.T
+    np.fill_diagonal(sims, -np.inf)
+    queries = np.concatenate([np.arange(n0, n, 4),      # held-out points
+                              np.arange(0, n0, 16)])    # original points
+    truth = [np.argsort(-sims[q])[:10] for q in queries]
+    r_full = neighbor_recall(g_full, queries, truth, hops=2, k_cap=10)
+    r_inc = neighbor_recall(g_inc, queries, truth, hops=2, k_cap=10)
+    assert r_inc > r_full - 0.02, (r_full, r_inc)
+
+    # the extension rounds score fewer pairs than a rebuild's rounds:
+    # untouched old-old pairs are masked out of the candidate stream
+    ext_comps = g_inc.stats["comparisons"] - base_comps
+    assert ext_comps < g_full.stats["comparisons"], (
+        ext_comps, g_full.stats["comparisons"])
+    if mode == "sorting":
+        # pure new-vs-all masking: expect a substantial cut, not just <
+        assert ext_comps < 0.6 * g_full.stats["comparisons"]
+
+
+@pytest.mark.fast
+def test_extend_grows_slab_capacity_with_n():
+    """degree_cap clamps to n-1: inserting points must widen the slabs."""
+    feats, _ = mnist_like_points(n=128, d=16, classes=4, spread=0.2, seed=2)
+    cfg = StarsConfig(mode="sorting", scoring="stars",
+                      family=HashFamilyConfig("simhash", m=16),
+                      measure="cosine", r=4, window=32, leaders=4,
+                      degree_cap=20, seed=4)
+    builder = GraphBuilder(feats.take(np.arange(12)), cfg).add_reps(2)
+    assert builder.capacity == 11                      # n-1 < degree_cap
+    builder.extend(feats.take(np.arange(12, 128)), reps=2)
+    assert builder.capacity == 20                      # cap reached
+    g = builder.finalize()
+    assert g.num_edges > 0
+    assert int(np.max(np.concatenate([g.src, g.dst]))) < 128
+
+
+@pytest.mark.fast
+def test_mismatched_restore_rejected():
+    feats, _ = _small()
+    cfg = StarsConfig(mode="sorting", scoring="stars",
+                      family=HashFamilyConfig("simhash", m=16),
+                      measure="cosine", r=2, window=64, leaders=4,
+                      degree_cap=10, seed=1)
+    ckpt = GraphBuilder(feats, cfg).add_reps(1).checkpoint()
+    with pytest.raises(ValueError):
+        GraphBuilder.restore(feats.take(np.arange(100)), cfg, ckpt)
+    import dataclasses
+    with pytest.raises(ValueError):
+        GraphBuilder.restore(feats, dataclasses.replace(cfg, source="allpairs"),
+                             ckpt)
+    with pytest.raises(ValueError):          # different hash draws
+        GraphBuilder.restore(feats, dataclasses.replace(cfg, seed=99), ckpt)
+    with pytest.raises(ValueError):          # different slab sizing
+        GraphBuilder.restore(feats, dataclasses.replace(cfg, degree_cap=3),
+                             ckpt)
+
+
+@pytest.mark.fast
+def test_extend_requires_prior_reps():
+    """extend() first would silently leave the original points mutually
+    unconnected (old-old pairs are masked in extension rounds)."""
+    feats, _ = _small()
+    cfg = StarsConfig(mode="sorting", scoring="stars",
+                      family=HashFamilyConfig("simhash", m=16),
+                      measure="cosine", r=2, window=64, leaders=4,
+                      degree_cap=10, seed=1)
+    builder = GraphBuilder(feats.take(np.arange(400)), cfg)
+    with pytest.raises(ValueError):
+        builder.extend(feats.take(np.arange(400, 600)))

