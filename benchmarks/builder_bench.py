@@ -25,6 +25,15 @@ scale with insertion size *relative to bucket size*: at +20% of n with
 a rebuild's, while recall parity holds; small/continuous insertions are
 where the locality rule pays.
 
+The mesh row (``mesh_vs_single``) measures the distributed backend on
+forced virtual host devices (its subprocess sets
+``--xla_force_host_platform_device_count``): wall seconds, comparisons and
+the explicit-emit exchange volume ``all_to_all_bytes`` — the comms-side
+metric the shard_map emit makes measurable (distributed/stars_dist.py).
+Virtual CPU devices share one core, so mesh wall time is an overhead
+measure, not a speedup claim; comparisons and bytes are the
+machine-independent columns.
+
 The same numbers are dumped to BENCH_builder.json (cwd) for the CI trend
 tracker.
 """
@@ -32,6 +41,7 @@ tracker.
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import numpy as np
@@ -40,6 +50,7 @@ from benchmarks.common import algo_config, dataset, emit
 from repro.core import GraphBuilder
 from repro.graph import accumulator as acc_lib
 from repro.graph import neighbor_recall
+from repro.testing import run_forced_devices
 
 
 def incremental_vs_rebuild(ds: str = "mnist", algo: str = "sorting_stars",
@@ -94,9 +105,71 @@ def incremental_vs_rebuild(ds: str = "mnist", algo: str = "sorting_stars",
     }
 
 
+def mesh_vs_single(ds: str = "mnist", algo: str = "sorting_stars",
+                   r: int = 6, devices: int = 4) -> dict:
+    """Mesh-backend build on ``devices`` forced virtual host devices.
+
+    Spawned through ``repro.testing.run_forced_devices`` because the device
+    count must be forced before jax initializes (the same runner as
+    tests/test_mesh_parity.py); the parent process keeps the real topology.
+    Reports wall seconds for the mesh and single-device builds, the
+    (identical, asserted) comparison count, and the explicit-emit
+    all_to_all volume.
+    """
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    res = run_forced_devices(f"""
+        import json, time
+        import jax, numpy as np
+        from benchmarks.common import algo_config, dataset
+        from repro.core import GraphBuilder
+        from repro.graph import accumulator as acc_lib
+
+        feats, _ = dataset({ds!r})
+        cfg = algo_config({algo!r}, {ds!r}, r={r})
+        dense = np.asarray(feats.dense)
+        t0 = time.time()
+        g1 = GraphBuilder(feats, cfg).add_reps({r}).finalize()
+        t_single = time.time() - t0
+        mesh = jax.make_mesh(({devices},), ("data",))
+        acc_lib.reset_transfer_stats()
+        t0 = time.time()
+        g2 = GraphBuilder(dense, cfg, mesh=mesh).add_reps({r}).finalize()
+        t_mesh = time.time() - t0
+        assert g1.stats["comparisons"] == g2.stats["comparisons"]
+        e1 = {{(int(s), int(d)) for s, d in zip(g1.src, g1.dst)}}
+        e2 = {{(int(s), int(d)) for s, d in zip(g2.src, g2.dst)}}
+        print(json.dumps({{
+            "single_s": t_single, "mesh_s": t_mesh,
+            "comparisons": int(g2.stats["comparisons"]),
+            "dropped": int(g2.stats["dropped"]),
+            "edge_for_edge": e1 == e2,
+            "all_to_all_calls":
+                acc_lib.transfer_stats["all_to_all_calls"],
+            "all_to_all_bytes":
+                acc_lib.transfer_stats["all_to_all_bytes"],
+        }}))
+    """, devices=devices, timeout=1800, extra_pythonpath=[repo])
+    assert res["edge_for_edge"], "mesh build diverged from single device"
+    tag = f"[{ds}/{algo}/r{r}/mesh{devices}]"
+    emit(f"mesh_s{tag}", res["mesh_s"] * 1e6 / r, f"{res['mesh_s']:.3f}s")
+    emit(f"single_s{tag}", res["single_s"] * 1e6 / r,
+         f"{res['single_s']:.3f}s")
+    emit(f"mesh_comparisons{tag}", 0.0, res["comparisons"])
+    emit(f"mesh_a2a_bytes{tag}", 0.0, res["all_to_all_bytes"])
+    return {
+        "dataset": ds, "algo": algo, "r": r, "devices": devices,
+        "single_s": res["single_s"], "mesh_s": res["mesh_s"],
+        "comparisons": res["comparisons"], "dropped": res["dropped"],
+        "edge_for_edge": res["edge_for_edge"],
+        "all_to_all_calls": res["all_to_all_calls"],
+        "all_to_all_bytes": res["all_to_all_bytes"],
+    }
+
+
 def builder_table() -> None:
     rows = [incremental_vs_rebuild("mnist", "sorting_stars", r=10),
-            incremental_vs_rebuild("mnist", "lsh_stars", r=10)]
+            incremental_vs_rebuild("mnist", "lsh_stars", r=10),
+            mesh_vs_single("mnist", "sorting_stars", r=6, devices=4)]
     with open("BENCH_builder.json", "w") as f:
         json.dump(rows, f, indent=2)
 

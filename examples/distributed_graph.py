@@ -1,12 +1,15 @@
 """Multi-device distributed Stars build (TeraSort-analogue pipeline).
 
-Re-executes itself with 8 forced host devices, then runs the full
-distributed pipeline through the unified session API — constructing
+Forces 8 host devices (set XLA_FLAGS yourself to override), then runs the
+full distributed pipeline through the unified session API — constructing
 ``GraphBuilder(..., mesh=mesh)`` shards the feature table and the degree
 slabs row-wise over the ``data`` axis: per-shard sketching -> distributed
-sample-sort -> cross-shard feature join -> leader scoring -> sharded slab
-fold — and compares recall + comparisons against the single-device session
-plus a mid-build checkpoint/restore round-trip.
+sample-sort (multi-word keys -> the exact single-device order) ->
+cross-shard feature join -> leader scoring -> explicit all_to_all edge
+emit into the sharded slabs.  The mesh build is *edge-for-edge identical*
+to the single-device session (checked below), ``extend()`` inserts points
+with a pad-and-reshard of the grown tables, and a mid-build checkpoint
+restores bit-exactly on a DIFFERENT mesh size.
 
   PYTHONPATH=src python examples/distributed_graph.py
 """
@@ -15,13 +18,21 @@ import os
 
 if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# the forcing flag only multiplies the CPU platform; pin it so the demo
+# works the same on accelerator hosts (see repro.testing)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax
 import numpy as np
 
 from repro.core import GraphBuilder, HashFamilyConfig, StarsConfig
 from repro.data import mnist_like_points
+from repro.graph import accumulator as acc_lib
 from repro.graph import neighbor_recall
+
+
+def edge_set(g):
+    return {(int(s), int(d)) for s, d in zip(g.src, g.dst)}
 
 
 def main():
@@ -33,22 +44,35 @@ def main():
                       measure="cosine", r=15, window=128, leaders=10,
                       degree_cap=50, seed=2)
 
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    dense = np.asarray(feats.dense)
+    n0 = int(feats.n * 0.9)         # hold out 10% to insert incrementally
+    # mesh sizes follow whatever device count was forced (docstring invites
+    # overriding XLA_FLAGS): full mesh, then a reshard onto half of it
+    p = len(jax.devices())
+    p2 = max(p // 2, 1)
+    mesh8 = jax.make_mesh((p,), ("data",))
+    mesh4 = jax.make_mesh((p2,), ("data",), devices=jax.devices()[:p2])
 
-    # mesh-sharded session: same API, slabs partitioned over 'data'
-    dist = GraphBuilder(feats.dense, cfg, mesh=mesh)
+    # mesh-sharded session: same API, tables partitioned over 'data'
+    acc_lib.reset_transfer_stats()
+    dist = GraphBuilder(dense[:n0], cfg, mesh=mesh8)
     dist.add_reps(cfg.r // 3)
-    # a mid-build checkpoint is a host snapshot of the sharded slabs; the
-    # restored session re-shards it and continues bit-exactly
+    # a mid-build checkpoint is the UNPADDED host slab image; restoring it
+    # on a 4-device mesh (a reshard) continues bit-exactly
     ckpt = dist.checkpoint()
-    dist = GraphBuilder.restore(feats.dense, cfg, ckpt, mesh=mesh)
+    dist = GraphBuilder.restore(dense[:n0], cfg, ckpt, mesh=mesh4)
     dist.add_reps(cfg.r - cfg.r // 3)
+    # incremental insertion on the mesh: grow + pad-and-reshard the feature
+    # and slab tables, then score only new-vs-all candidate streams
+    dist.extend(dense[n0:], reps=cfg.r)
     g_dist = dist.finalize()
+    comms = dict(acc_lib.transfer_stats)
 
-    g_ref = GraphBuilder(feats, cfg).add_reps(cfg.r).finalize()
+    ref = GraphBuilder(feats.take(np.arange(n0)), cfg).add_reps(cfg.r)
+    ref.extend(feats.take(np.arange(n0, feats.n)), reps=cfg.r)
+    g_ref = ref.finalize()
 
-    x = np.asarray(feats.dense)
-    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    xn = dense / np.linalg.norm(dense, axis=1, keepdims=True)
     sims = xn @ xn.T
     np.fill_diagonal(sims, -np.inf)
     queries = np.arange(128)
@@ -57,10 +81,15 @@ def main():
     r_s = neighbor_recall(g_ref, queries, truth, hops=2, k_cap=10)
     print(f"single-device : edges={g_ref.num_edges:,} "
           f"comparisons={g_ref.stats['comparisons']:,} recall@10={r_s:.3f}")
-    print(f"8-device dist : edges={g_dist.num_edges:,} "
+    print(f"mesh {p}->{p2} dev : edges={g_dist.num_edges:,} "
           f"comparisons={g_dist.stats['comparisons']:,} recall@10={r_d:.3f} "
-          f"(sort drops: {g_dist.stats['dropped']}; resumed from a "
-          f"checkpoint at rep {ckpt.reps_done})")
+          f"(drops: {g_dist.stats['dropped']}; resumed from a checkpoint "
+          f"at rep {ckpt.reps_done}, then extend()ed "
+          f"{feats.n - n0} points)")
+    print(f"edge-for-edge equal: {edge_set(g_ref) == edge_set(g_dist)}")
+    print(f"explicit comms: {comms['all_to_all_calls']} all_to_all calls, "
+          f"{comms['all_to_all_bytes'] / 1e6:.1f} MB exchanged; "
+          f"{comms['edge_fetches']} device->host edge fetch")
 
 
 if __name__ == "__main__":

@@ -2,10 +2,14 @@
 # Tier-1 test wrapper: sets PYTHONPATH=src and runs the pytest suite.
 #
 #   scripts/run_tests.sh            # full tier-1 suite (the CI gate)
-#   scripts/run_tests.sh fast       # <60s quick gate (-m fast; includes the
-#                                   #   GraphBuilder session-API tests)
+#   scripts/run_tests.sh fast       # <60s quick gate (-m "fast and not
+#                                   #   dist"; includes the GraphBuilder
+#                                   #   session-API tests)
 #   scripts/run_tests.sh builder    # the session-API surface only
 #                                   #   (tests/test_builder.py + accumulator)
+#   scripts/run_tests.sh dist       # multi-device tests only (-m dist;
+#                                   #   subprocesses force 1/2/4/8 virtual
+#                                   #   host devices via XLA_FLAGS)
 #   scripts/run_tests.sh [args...]  # extra args forwarded to pytest
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -13,11 +17,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 case "${1:-}" in
   fast)
     shift
-    exec python -m pytest -q -m fast "$@"
+    exec python -m pytest -q -m "fast and not dist" "$@"
     ;;
   builder)
     shift
     exec python -m pytest -q tests/test_builder.py tests/test_accumulator.py "$@"
+    ;;
+  dist)
+    shift
+    exec python -m pytest -q -m dist tests/test_mesh_parity.py \
+      tests/test_distributed.py "$@"
     ;;
 esac
 exec python -m pytest -x -q "$@"

@@ -10,6 +10,10 @@ codebase runs unmodified on either side of the rename:
   * ``pcast``:      ``jax.lax.pcast`` marks values device-varying under the
     new shard_map type system; the legacy tracer infers replication itself,
     so the fallback is the identity.
+  * ``all_to_all``: stable under ``jax.lax`` today, but routed through here
+    so every explicit cross-shard exchange in the repo (the sample-sort
+    partition and the edge-emit of distributed/stars_dist.py) has one
+    drift point — and one place to grep for comm volume.
 """
 
 from __future__ import annotations
@@ -39,4 +43,7 @@ except AttributeError:                      # jax 0.4.x: replication is inferred
         return x
 
 
-__all__ = ["shard_map", "pcast", "axis_size"]
+all_to_all = jax.lax.all_to_all
+
+
+__all__ = ["shard_map", "pcast", "axis_size", "all_to_all"]

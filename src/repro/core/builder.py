@@ -24,9 +24,13 @@ Design points:
     ``StarsConfig.source_name``.  A source binds (features, new_from) to a
     compiled round program; the builder only sequences rounds.
   * **Backends**: single device (default) or a mesh (``mesh=`` constructor
-    argument) with slabs sharded row-wise over the ``data`` axis and the
-    distributed sample-sort pipeline of distributed/sorter.py — the former
-    ``build_graph_distributed`` path, now one code path with the rest.
+    argument) with features and slabs sharded row-wise over the ``data``
+    axis, the distributed sample-sort pipeline of distributed/sorter.py
+    and the explicit all_to_all edge emit of distributed/stars_dist.py.
+    The mesh build — including ``extend`` and ``checkpoint``/``restore``
+    across different mesh sizes — is **edge-for-edge identical** to the
+    single-device build (see ``_MeshBackend`` for the row-padding reshard
+    rule and tests/test_mesh_parity.py for the proof obligations).
   * **Incremental insertion**: ``extend`` appends rows to the feature table,
     grows the slab table (grow pads at the tail, preserving row invariants)
     and runs repetitions whose candidate streams are masked to pairs
@@ -54,7 +58,6 @@ from repro.core import lsh as lsh_lib
 from repro.core.spanner import Graph
 from repro.core.stars import StarsConfig, _prefilter_sketch, _rep_candidates
 from repro.graph import accumulator as acc_lib
-from repro.kernels import ops as kernel_ops
 from repro.similarity.measures import (PointFeatures, pairwise_similarity)
 
 FeaturesLike = Union[PointFeatures, jax.Array, np.ndarray]
@@ -197,6 +200,9 @@ class _SingleDeviceBackend:
     def grow_state(self, state, n: int, capacity: int):
         return acc_lib.grow(state, n, capacity)
 
+    def trim(self, state: acc_lib.EdgeAccumulator) -> acc_lib.EdgeAccumulator:
+        return state                # rows are never padded on one device
+
     def run_round(self, state, rep_index: int, new_from: int):
         if self._bound is None or self._bound[0] != new_from:
             self._bound = (new_from, self.source.bind(self.features, new_from))
@@ -207,22 +213,60 @@ class _SingleDeviceBackend:
         self._bound = None          # shapes changed; rebind lazily
 
 
+def _pack_words_bigendian(words: jax.Array) -> jax.Array:
+    """Pack bit-valued (n, m) hash words into ceil(m/32) uint32 sort words.
+
+    Big-endian within each word (hash word 0 at bit 31), zero padding in the
+    LOW bits of the last word — so comparing the packed words
+    lexicographically is exactly comparing the original {0,1} word sequence
+    lexicographically, which is what the single-device SortingLSH
+    ``jax.lax.sort`` over m separate word operands does.
+    """
+    n, m = words.shape
+    n_words = (m + 31) // 32
+    bits = jnp.pad(words.astype(jnp.uint32), ((0, 0), (0, n_words * 32 - m)))
+    shifts = jnp.arange(31, -1, -1, dtype=jnp.uint32)
+    return jnp.sum(bits.reshape(n, n_words, 32) << shifts,
+                   axis=-1).astype(jnp.uint32)
+
+
 class _MeshBackend:
     """Mesh-sharded build: features and slabs partitioned over ``data``.
 
-    Phases per repetition (paper §4, the former build_graph_distributed):
-    per-shard sketch -> distributed sample-sort (distributed/sorter.py) ->
-    cross-shard feature join -> leader scoring -> slab fold, with the slabs
-    sharded row-wise so a shard's emits mostly land on its own rows and XLA
-    inserts the residual scatter traffic.
+    Phases per repetition (paper §4; distributed/stars_dist.py docstring has
+    the full data path): per-shard sketch into multi-word sort keys ->
+    distributed sample-sort to the replicated global permutation
+    (sorter.distributed_argsort) -> the SAME window construction, leader
+    sampling and scoring as the single-device path (core/stars.py
+    ``_score_windows``; the feature join gathers rows across shards by gid)
+    -> explicit edge emit (stars_dist.accumulate_all_to_all): insertion
+    triples bucket by owner shard and ship in ONE all_to_all before the
+    local slab fold.  Because the permutation, PRNG draws and scoring
+    floats are identical to one device and the fold sees identical per-row
+    candidate multisets, the mesh build is edge-for-edge equal to the
+    single-device build at any shard count (tests/test_mesh_parity.py).
+
+    **Row layout / reshard rule**: the point count is padded up to
+    ``n_pad = ceil(n / p) * p`` and both the feature table and the slab
+    table are sharded in contiguous row blocks of ``n_pad / p`` — every
+    shard within one (padded) row of even.  ``extend()`` re-pads: old pad
+    rows are sliced off, the new rows appended, the table padded to the new
+    ``n_pad`` and re-placed (the pad-and-reshard step; slab rows likewise
+    via ``accumulator.grow`` + re-place).  Row ownership is always
+    ``gid // (n_pad / p)``, which is what the emit uses to route triples.
+    Checkpoints and graphs only ever see the first ``n`` rows (``trim``).
     """
 
+    SORT_CAPACITY_FACTOR = 2.0
+    EMIT_CAPACITY_FACTOR = 4.0
+
     def __init__(self, features: PointFeatures, cfg: StarsConfig, mesh):
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        if cfg.source_name not in ("lsh-stars", "sorting-stars"):
+        windowed = ("lsh-stars", "sorting-stars",
+                    "lsh-allpairs", "sorting-allpairs")
+        if cfg.source_name not in windowed:
             raise NotImplementedError(
-                f"mesh backend supports the Stars repetition sources, got "
-                f"{cfg.source_name!r}")
+                f"mesh backend supports the windowed repetition sources "
+                f"{windowed}, got {cfg.source_name!r}")
         if features.dense is None:
             raise ValueError("mesh backend requires dense features")
         if cfg.measure not in ("cosine", "dot"):
@@ -231,117 +275,171 @@ class _MeshBackend:
         self.cfg = cfg
         self.mesh = mesh
         self.axis = "data"
-        self.dense = jax.device_put(
-            features.dense, NamedSharding(mesh, P(self.axis, None)))
-        self.slab_shard = NamedSharding(mesh, P(self.axis, None))
-        self._repl = NamedSharding(mesh, P())
-        self._score = None          # bound lazily
+        self.p = mesh.shape[self.axis]
+        self.measure_fn = pairwise_similarity(cfg.measure,
+                                              alpha=cfg.mixture_alpha)
+        self._n = int(features.dense.shape[0])
+        self._place_features(jnp.asarray(features.dense))
+        self._sketches: Dict = {}   # n -> sketch_fn (new_from-independent)
+        self._bound: Dict = {}      # (n, new_from) -> score_fn
 
-        n = self.dense.shape[0]
-        dense = self.dense
-
-        @functools.partial(jax.jit,
-                           out_shardings=(NamedSharding(mesh, P(self.axis)),
-                                          NamedSharding(mesh, P(self.axis))))
-        def sketch_phase(x, rep):
-            rep_seed = jnp.asarray(rep, jnp.uint32) ^ jnp.uint32(cfg.seed)
-            words = lsh_lib.sketch(PointFeatures(dense=x), cfg.family,
-                                   rep_seed=rep_seed)
-            if cfg.mode == "lsh":
-                keys = lsh_lib.bucket_key(words, cfg.family)
-            else:
-                packed = lsh_lib.pack_bits(words.astype(bool))
-                keys = packed[:, 0]        # lexicographic prefix word
-            gids = jnp.arange(n, dtype=jnp.int32)
-            return keys, gids
-
-        self._sketch = sketch_phase
-
-        def bind_score():
-            # new-vs-all masking is deliberately absent here: extend() on
-            # the mesh backend raises NotImplementedError (resharding the
-            # grown tables is a ROADMAP follow-up), and shipping untested
-            # masking logic in the meantime would only look load-bearing.
-            w = cfg.window
-
-            @functools.partial(
-                jax.jit, donate_argnums=0,
-                out_shardings=(acc_lib.EdgeAccumulator(nbr=self.slab_shard,
-                                                       w=self.slab_shard),
-                               self._repl))
-            def score_and_update(state, keys_s, gids_s, valid, rep):
-                # the sorted sequence is longer than n (fixed-capacity sort
-                # slots with sentinel padding per shard); window ALL of it —
-                # the validity mask handles the sentinels.
-                n_win = keys_s.shape[0] // w
-                key = jax.random.fold_in(jax.random.key(cfg.seed), rep)
-                _, k_lead = jax.random.split(key)
-                kw = keys_s[:n_win * w].reshape(n_win, w)
-                gw = gids_s[:n_win * w].reshape(n_win, w)
-                vw = valid[:n_win * w].reshape(n_win, w)
-                pri = jax.random.uniform(k_lead, (n_win, w))
-                pri = jnp.where(vw, pri, -1.0)
-                lv, lslot = jax.lax.top_k(pri, cfg.leaders)
-                lgid = jnp.take_along_axis(gw, lslot, axis=1)
-                lkey = jnp.take_along_axis(kw, lslot, axis=1)
-                # join: gather feature rows across shards (DHT analogue)
-                lead_f = dense[jnp.maximum(lgid, 0)]
-                memb_f = dense[jnp.maximum(gw, 0)]
-                ok_l = lv > 0
-                sims = kernel_ops.leader_score(
-                    lead_f, memb_f, ok_l, vw,
-                    normalized=cfg.measure == "cosine")
-                mask = ok_l[:, :, None] & vw[:, None, :]
-                mask &= lslot[:, :, None] != jnp.arange(w)[None, None, :]
-                if cfg.mode == "lsh":
-                    mask &= lkey[:, :, None] == kw[:, None, :]
-                # per-window int32 partial counts; the host sums them in
-                # int64 so tera-scale totals never overflow a device integer
-                comparisons = jnp.sum(mask, axis=(1, 2)).astype(jnp.int32)
-                if cfg.r1 is not None:
-                    mask &= sims > cfg.r1
-                src = jnp.broadcast_to(lgid[:, :, None], sims.shape)
-                dst = jnp.broadcast_to(gw[:, None, :], sims.shape)
-                state = acc_lib.accumulate(state, src, dst, sims, mask)
-                return state, comparisons
-
-            return score_and_update
-
-        self._bind_score = bind_score
-
+    # -- padded row layout ---------------------------------------------- #
     @property
     def n(self) -> int:
-        return self.dense.shape[0]
+        return self._n
 
+    def _pad_rows(self, n: int) -> int:
+        return -(-n // self.p) * self.p
+
+    @property
+    def _feature_sharding(self):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return NamedSharding(self.mesh, P(self.axis, None))
+
+    @property
+    def _slab_sharding(self):
+        return acc_lib.EdgeAccumulator(nbr=self._feature_sharding,
+                                       w=self._feature_sharding)
+
+    def _place_features(self, dense: jax.Array) -> None:
+        pad = self._pad_rows(self._n) - self._n
+        if pad:
+            dense = jnp.pad(dense, ((0, pad), (0, 0)))
+        self.dense = jax.device_put(dense, self._feature_sharding)
+
+    # -- slab state ----------------------------------------------------- #
     def init_state(self, capacity: int) -> acc_lib.EdgeAccumulator:
-        return self.place_state(
-            acc_lib.EdgeAccumulator.create(self.n, capacity))
+        return jax.device_put(
+            acc_lib.EdgeAccumulator.create(self._pad_rows(self._n), capacity),
+            self._slab_sharding)
 
     def place_state(self, state: acc_lib.EdgeAccumulator):
-        return jax.device_put(
-            state, acc_lib.EdgeAccumulator(nbr=self.slab_shard,
-                                           w=self.slab_shard))
+        """Place an unpadded (n, k) state (e.g. a restored checkpoint):
+        pad rows to the mesh multiple, then shard row-blocks."""
+        return jax.device_put(acc_lib.grow(state, self._pad_rows(self._n)),
+                              self._slab_sharding)
 
     def grow_state(self, state, n: int, capacity: int):
-        return self.place_state(acc_lib.grow(state, n, capacity))
+        return jax.device_put(
+            acc_lib.grow(state, self._pad_rows(n), capacity),
+            self._slab_sharding)
+
+    def trim(self, state: acc_lib.EdgeAccumulator) -> acc_lib.EdgeAccumulator:
+        """The real rows of the padded slab table (checkpoint/finalize view:
+        what leaves the device is always the unpadded (n, k) slab image, so
+        snapshots restore bit-exactly onto ANY mesh size or one device)."""
+        if state.n == self._n:
+            return state
+        return acc_lib.EdgeAccumulator(nbr=state.nbr[:self._n],
+                                       w=state.w[:self._n])
+
+    # -- the per-repetition programs ------------------------------------ #
+    def _bind(self, new_from: int):
+        if self._n not in self._sketches:
+            self._sketches[self._n] = self._bind_sketch()
+        key = (self._n, new_from)
+        if key not in self._bound:
+            self._bound[key] = self._bind_score(new_from)
+        return self._sketches[self._n], self._bound[key]
+
+    def _bind_sketch(self):
+        cfg = self.cfg
+        n = self._n
+
+        @jax.jit
+        def sketch_phase(x, rep):
+            from repro.core.stars import _rep_keys
+            rep_seed = jnp.asarray(rep, jnp.uint32) ^ jnp.uint32(cfg.seed)
+            k_tie, _, _ = _rep_keys(cfg, rep)
+            words = lsh_lib.sketch(PointFeatures(dense=x), cfg.family,
+                                   rep_seed=rep_seed)
+            n_pad = words.shape[0]
+            gids = jnp.arange(n_pad, dtype=jnp.int32)
+            real = gids < n
+            # the SAME (n,) tiebreak draw as the single-device path, looked
+            # up per gid (pad rows get all-ones keys and gid -1: they sort
+            # to the tail and never enter the permutation)
+            tb = jax.random.bits(k_tie, (n,), jnp.uint32)
+            tb = jnp.where(real, tb[jnp.minimum(gids, n - 1)],
+                           jnp.uint32(0xFFFFFFFF))
+            if cfg.mode == "lsh":
+                bucket = lsh_lib.bucket_key(words, cfg.family)
+                kws = bucket[:, None]
+            elif cfg.family.kind in ("simhash", "mixture"):
+                bucket = jnp.zeros((n_pad,), jnp.uint32)
+                kws = _pack_words_bigendian(words)
+            else:
+                bucket = jnp.zeros((n_pad,), jnp.uint32)
+                kws = words                      # full-width lexicographic
+            keys = jnp.concatenate([kws, tb[:, None]], axis=1)
+            keys = jnp.where(real[:, None], keys, jnp.uint32(0xFFFFFFFF))
+            return keys, jnp.where(real, gids, -1), bucket
+
+        return sketch_phase
+
+    def _bind_score(self, new_from: int):
+        from repro.core import windows as win_lib
+        from repro.core.stars import (_prefilter_sketch, _rep_keys,
+                                      _score_windows)
+        cfg = self.cfg
+        n = self._n
+        w = cfg.window
+        features = PointFeatures(dense=self.dense)
+        prefilter = (
+            _prefilter_sketch(features, cfg.hamming_prefilter_bits, cfg.seed)
+            if cfg.hamming_prefilter_bits > 0 else None)
+
+        @jax.jit
+        def score_phase(perm, bucket, rep):
+            _, k_shift, k_lead = _rep_keys(cfg, rep)
+            if cfg.mode == "lsh":
+                perm_bucket = bucket[jnp.maximum(perm, 0)]
+            else:
+                perm_bucket = jnp.zeros((n,), jnp.uint32)
+            offset, n_slots = win_lib.window_layout(cfg.mode, n, w, k_shift)
+            win = win_lib._scatter_to_slots(perm, perm_bucket, offset,
+                                            n_slots, w)
+            return _score_windows(cfg, features, self.measure_fn, prefilter,
+                                  win, k_lead, new_from=new_from)
+
+        return score_phase
 
     def run_round(self, state, rep_index: int, new_from: int):
-        from repro.distributed.sorter import distributed_sort
-        if new_from:
-            raise NotImplementedError("mesh backend has no extend() rounds")
-        if self._score is None:
-            self._score = self._bind_score()
+        from repro.distributed.sorter import distributed_argsort
+        from repro.distributed.stars_dist import accumulate_all_to_all
+        sketch_fn, score_fn = self._bind(new_from)
         rep = jnp.int32(rep_index)
-        keys, gids = self._sketch(self.dense, rep)
-        keys_s, gids_s, valid, dropped = distributed_sort(
-            keys, gids, self.mesh, axis=self.axis)
-        state, comps = self._score(state, keys_s, gids_s, valid, rep)
-        return state, {"comparisons": comps, "dropped": dropped}
+        keys, gids, bucket = sketch_fn(self.dense, rep)
+        perm, drop_sort = distributed_argsort(
+            keys, gids, self.mesh, self._n, axis=self.axis,
+            capacity_factor=self.SORT_CAPACITY_FACTOR)
+        out = score_fn(perm, bucket, rep)
+        state, drop_emit = accumulate_all_to_all(
+            state, out["src"], out["dst"], out["w"], out["emit"],
+            mesh=self.mesh, axis=self.axis,
+            capacity_factor=self.EMIT_CAPACITY_FACTOR)
+        counters = {k: out[k] for k in
+                    ("comparisons", "emitted", "prefilter_ops")}
+        counters["dropped"] = jnp.concatenate(
+            [jnp.ravel(drop_sort), jnp.ravel(drop_emit)])
+        return state, counters
 
     def extend(self, new_features: PointFeatures) -> None:
-        raise NotImplementedError(
-            "extend() on the mesh backend needs a resharding step for the "
-            "grown feature/slab tables; planned follow-up (see ROADMAP)")
+        if new_features.dense is None:
+            raise ValueError("mesh backend requires dense features")
+        old_n = self._n
+        new_rows = jnp.asarray(new_features.dense, self.dense.dtype)
+        self._n = old_n + int(new_rows.shape[0])
+        pad = self._pad_rows(self._n) - self._n          # pad-and-reshard
+
+        @functools.partial(jax.jit, out_shardings=self._feature_sharding)
+        def repad(old, new):
+            table = jnp.concatenate([old[:old_n], new], axis=0)
+            return jnp.pad(table, ((0, pad), (0, 0)))
+
+        self.dense = repad(self.dense, new_rows)
+        self._sketches = {}         # shapes changed; rebind lazily
+        self._bound = {}
 
 
 # --------------------------------------------------------------------------- #
@@ -455,6 +553,11 @@ class GraphBuilder:
         LSH-Stars source instead rescores every sub-bucket a new point
         lands in (a star is that graph's only intra-bucket connectivity;
         see ``_rep_lsh_stars``) — still skipping the untouched majority.
+
+        On a mesh backend the feature and slab tables are re-padded to the
+        new ``ceil(n/p)*p`` row multiple and re-placed (the pad-and-reshard
+        step); the extension rounds then run the same masked scoring, so
+        mesh extend() remains edge-for-edge equal to single-device extend.
         """
         if self._reps_done == 0:
             raise ValueError(
@@ -516,8 +619,13 @@ class GraphBuilder:
         return stats
 
     def checkpoint(self) -> BuilderCheckpoint:
-        """Snapshot slabs + counters to host arrays (resumable builds)."""
-        nbr, w = acc_lib.to_host(self._ensure_state())
+        """Snapshot slabs + counters to host arrays (resumable builds).
+
+        The payload is always the UNPADDED (n, k) slab image (mesh backends
+        trim their row padding first), so a checkpoint taken on one mesh
+        restores bit-exactly onto any other mesh size — or a single device.
+        """
+        nbr, w = acc_lib.to_host(self._backend.trim(self._ensure_state()))
         return BuilderCheckpoint(
             n=self.n, capacity=self._capacity, reps_done=self._reps_done,
             nbr=nbr, w=w, stats=self._roll_up_counters(), cfg=self.cfg)
@@ -549,5 +657,5 @@ class GraphBuilder:
         The session stays usable: more rounds can follow, and a later
         ``finalize()`` counts as its own single fetch.
         """
-        return acc_lib.to_graph(self._ensure_state(),
+        return acc_lib.to_graph(self._backend.trim(self._ensure_state()),
                                 stats=self._roll_up_counters())

@@ -231,6 +231,13 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
                 comparisons=comp_chunks, prefilter_ops=pref_chunks)
 
 
+def _rep_keys(cfg: StarsConfig, rep_index: jax.Array):
+    """The per-repetition PRNG keys, derived ONCE here so the single-device
+    and mesh paths draw identical randomness: (k_tie, k_shift, k_lead)."""
+    key = jax.random.fold_in(jax.random.key(cfg.seed), rep_index)
+    return jax.random.split(key, 3)
+
+
 def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
                     measure_fn, prefilter, rep_index: jax.Array, *,
                     new_from: int = 0):
@@ -250,8 +257,7 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
     counters, so `stats['comparisons']` reflects the saving.
     """
     rep_seed = jnp.asarray(rep_index, jnp.uint32) ^ jnp.uint32(cfg.seed)
-    key = jax.random.fold_in(jax.random.key(cfg.seed), rep_index)
-    k_tie, k_shift, k_lead = jax.random.split(key, 3)
+    k_tie, k_shift, k_lead = _rep_keys(cfg, rep_index)
 
     words = lsh_lib.sketch(features, cfg.family, rep_seed=rep_seed)
     n = words.shape[0]
@@ -266,6 +272,24 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
     else:
         raise ValueError(f"unknown mode {cfg.mode!r}")
 
+    return _score_windows(cfg, features, measure_fn, prefilter, win, k_lead,
+                          new_from=new_from)
+
+
+def _score_windows(cfg: StarsConfig, features: PointFeatures,
+                   measure_fn, prefilter, win: win_lib.Windows,
+                   k_lead: jax.Array, *, new_from: int = 0):
+    """Score one repetition's windows into a masked candidate stream.
+
+    The scoring half of :func:`_rep_candidates`, factored out so the mesh
+    backend (core/builder.py ``_MeshBackend``) can feed it windows built
+    from the *distributed* sort permutation: given identical ``win`` /
+    ``k_lead`` inputs the emitted stream — gids, float weights, masks and
+    comparison counts — is identical to the single-device path, which is
+    what makes mesh builds edge-for-edge equal (tests/test_mesh_parity.py).
+    ``features`` may be a padded table (extra rows are never addressed:
+    every gid in a valid window slot is a real point).
+    """
     nw, w_sz = win.gid.shape
     if cfg.mode == "lsh" and cfg.scoring == "stars":
         # Paper Stars 1: ONE uniformly random leader per (sub-)bucket per

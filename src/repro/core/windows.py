@@ -70,6 +70,28 @@ def _scatter_to_slots(perm_gid: jax.Array, perm_bucket: jax.Array,
     return Windows(gid=gid, valid=gid >= 0, bucket=slots_bucket.reshape(-1, w))
 
 
+def window_layout(mode: str, n: int, window: int,
+                  shift_key: Optional[jax.Array] = None):
+    """(slot offset, padded slot count) for one repetition's window grid.
+
+    The single source of truth for how a sorted sequence of ``n`` points
+    lays out into windows: LSH mode starts at slot 0 with ceil(n/W)*W
+    slots; SortingLSH mode draws the Stars 2 random first-block size
+    r ~ [W/2, W] from ``shift_key`` (offset W - r) and pads one extra
+    window of slots.  Consumed by the sort-and-scatter constructors below
+    AND by the mesh backend's permutation-fed reconstruction
+    (core/builder.py ``_MeshBackend``) — sharing it makes the mesh
+    edge-for-edge parity structural rather than two hand-synced copies.
+    """
+    if mode == "lsh":
+        return jnp.int32(0), ((n + window - 1) // window) * window
+    if mode != "sorting":
+        raise ValueError(f"unknown mode {mode!r}")
+    r = jax.random.randint(shift_key, (), window // 2, window + 1)
+    offset = (jnp.int32(window) - r).astype(jnp.int32)
+    return offset, ((n + window - 1) // window + 1) * window
+
+
 def lsh_windows(bucket_id: jax.Array, *, window: int,
                 tiebreak: jax.Array) -> Windows:
     """Stars 1 bucketing: sort by (bucket_id, random tiebreak), window, mask.
@@ -84,9 +106,8 @@ def lsh_windows(bucket_id: jax.Array, *, window: int,
     gids = jnp.arange(n, dtype=jnp.int32)
     _, _, perm_gid = jax.lax.sort((bucket_id, tiebreak, gids), num_keys=2)
     perm_bucket = bucket_id[perm_gid]
-    n_slots = ((n + window - 1) // window) * window
-    return _scatter_to_slots(perm_gid, perm_bucket, jnp.int32(0),
-                             n_slots, window)
+    offset, n_slots = window_layout("lsh", n, window)
+    return _scatter_to_slots(perm_gid, perm_bucket, offset, n_slots, window)
 
 
 def sorting_lsh_windows(words: jax.Array, *, window: int,
@@ -106,9 +127,7 @@ def sorting_lsh_windows(words: jax.Array, *, window: int,
     out = jax.lax.sort(operands, num_keys=m + 1)
     perm_gid = out[-1]
     # Random first-block size r in [W/2, W] -> slot offset (W - r) in [0, W/2].
-    r = jax.random.randint(shift_key, (), window // 2, window + 1)
-    offset = (jnp.int32(window) - r).astype(jnp.int32)
-    n_slots = ((n + window - 1) // window + 1) * window
+    offset, n_slots = window_layout("sorting", n, window, shift_key)
     return _scatter_to_slots(perm_gid, jnp.zeros((n,), jnp.uint32),
                              offset, n_slots, window)
 

@@ -7,82 +7,137 @@ axis:
   1. local sort of each shard's keys,
   2. splitter selection: each shard contributes p quantiles; an all_gather
      + sort yields p-1 global splitters,
-  3. partition: each key is binned by splitter (searchsorted) and packed
-     into a fixed-capacity (p, cap, ...) send buffer — fixed shapes mean
-     over-capacity keys are dropped and *counted* (the same graceful
+  3. partition: each key is binned by splitter (lexicographic compare) and
+     packed into a fixed-capacity (p, cap, words) send buffer — fixed shapes
+     mean over-capacity keys are dropped and *counted* (the same graceful
      degradation as the paper's bucket-size caps; drops are zero for
      near-uniform hash keys unless cap is set adversarially small),
-  4. one all_to_all exchanges the buffers,
-  5. local merge-sort of the received keys (invalid slots carry a +inf
-     sentinel key and sort to the tail).
+  4. ONE all_to_all exchanges the stacked (keys..., payload) buffer
+     (``repro.compat.all_to_all``; bytes recorded in
+     ``accumulator.transfer_stats['all_to_all_bytes']``),
+  5. local merge-sort of the received keys (invalid slots carry all-ones
+     sentinel keys and sort to the tail).
+
+Keys may be **multi-word**: an (n, nk) uint32 matrix sorts
+lexicographically by word 0 first — this is what lets the mesh backend
+reproduce the single-device SortingLSH order exactly (packed sketch words
+as the leading keys, the random tiebreak word after them).  The payload
+rides as the FINAL sort key, so ties in every key word resolve by payload
+(ascending gid) — the same total order as ``jax.lax.sort`` with a stable
+trailing gid operand on one device.
 
 The output is a globally sorted sequence distributed shard-contiguously:
 shard i holds keys <= shard i+1's — exactly what SortingLSH windowing
-needs.  Collective cost: one tiny all_gather + one O(n/p) all_to_all,
-which is the roofline-optimal exchange for a single-pass sort.
+needs.  :func:`distributed_argsort` additionally collapses that output to
+the replicated *global permutation* (each shard scatters its payloads at
+their global ranks, then a psum replicates the result) — the windowing
+phases consume only this (n,) int32 view, never the heavy feature rows.
+
+Collective cost: one tiny all_gather + one O(n/p) all_to_all, which is the
+roofline-optimal exchange for a single-pass sort.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.compat import axis_size, shard_map
+from repro.compat import all_to_all, axis_size, shard_map
 
 SENTINEL = jnp.uint32(0xFFFFFFFF)
 
 
-def _sample_sort_shard(keys: jax.Array, payload: jax.Array, *,
-                       axis: str, capacity_factor: float
-                       ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+def _key_words(keys: jax.Array) -> Tuple[jax.Array, ...]:
+    """(n,) or (n, nk) uint32 -> tuple of (n,) word columns, most
+    significant first."""
+    if keys.ndim == 1:
+        return (keys,)
+    return tuple(keys[:, i] for i in range(keys.shape[1]))
+
+
+def _lex_less(a: Sequence[jax.Array], b: Sequence[jax.Array]) -> jax.Array:
+    """Elementwise a < b for multi-word keys (word 0 most significant)."""
+    lt = jnp.zeros(jnp.broadcast_shapes(a[0].shape, b[0].shape), bool)
+    eq = jnp.ones_like(lt)
+    for aw, bw in zip(a, b):
+        lt |= eq & (aw < bw)
+        eq &= aw == bw
+    return lt
+
+
+def _exchange_capacity(n_local: int, p: int, capacity_factor: float) -> int:
+    return int(capacity_factor * n_local / p) + 1
+
+
+def _sample_sort_shard(keys: Tuple[jax.Array, ...], payload: jax.Array, *,
+                       axis: str, capacity_factor: float):
     """Body run per shard under shard_map.
 
-    keys: (n_local,) uint32; payload: (n_local,) int32 (point ids).
-    Returns (sorted_keys (p*cap,), sorted_payload, valid, dropped_count).
+    keys: tuple of (n_local,) uint32 words (lexicographic, word 0 first);
+    payload: (n_local,) int32 (point ids; -1 marks rows to ignore).
+    Returns (sorted_keys tuple (p*cap,), sorted_payload, valid, dropped).
     """
     p = axis_size(axis)
-    n_local = keys.shape[0]
-    cap = int(capacity_factor * n_local / p) + 1
+    nk = len(keys)
+    n_local = payload.shape[0]
+    cap = _exchange_capacity(n_local, p, capacity_factor)
 
-    # 1) local sort
-    keys_s, pay_s = jax.lax.sort((keys, payload), num_keys=1)
+    # 1) local sort; the payload is the FINAL key, so equal key words
+    #    resolve deterministically by ascending id (matches a stable
+    #    single-device sort with a trailing gid operand).
+    out = jax.lax.sort((*keys, payload), num_keys=nk + 1)
+    keys_s, pay_s = out[:nk], out[-1]
 
     # 2) splitters: p local quantiles -> all_gather -> global splitters
     q_idx = (jnp.arange(p) * n_local) // p
-    local_q = keys_s[q_idx]                                  # (p,)
-    all_q = jax.lax.all_gather(local_q, axis).reshape(-1)    # (p*p,)
-    all_q = jnp.sort(all_q)
-    splitters = all_q[jnp.arange(1, p) * p]                  # (p-1,)
+    all_q = tuple(jax.lax.all_gather(kw[q_idx], axis).reshape(-1)
+                  for kw in keys_s)                          # nk x (p*p,)
+    all_q = jax.lax.sort(all_q, num_keys=nk)
+    spl_idx = jnp.arange(1, p) * p
+    splitters = tuple(q[spl_idx] for q in all_q)             # nk x (p-1,)
 
-    # 3) partition into fixed-capacity bins
-    bins = jnp.searchsorted(splitters, keys_s).astype(jnp.int32)  # sorted asc
+    # 3) partition into fixed-capacity bins: bin = #splitters < key
+    #    (lexicographic), so equal keys always land in the same bin
+    bins = jnp.sum(_lex_less(tuple(s[None, :] for s in splitters),
+                             tuple(k[:, None] for k in keys_s)),
+                   axis=1).astype(jnp.int32)                 # sorted asc
     # rank within bin: bins is non-decreasing because keys are sorted
     bin_start = jnp.searchsorted(bins, jnp.arange(p)).astype(jnp.int32)
     rank = jnp.arange(n_local, dtype=jnp.int32) - bin_start[bins]
-    keep = rank < cap
-    dropped = jnp.sum(~keep).astype(jnp.int32)[None]
-    b_idx = jnp.where(keep, bins, 0)
-    r_idx = jnp.where(keep, rank, 0)
-    send_k = jnp.full((p, cap), SENTINEL)
-    send_p = jnp.full((p, cap), jnp.int32(-1))
-    send_k = send_k.at[b_idx, r_idx].set(jnp.where(keep, keys_s, SENTINEL))
-    send_p = send_p.at[b_idx, r_idx].set(jnp.where(keep, pay_s, -1))
+    live = pay_s >= 0          # payload -1 marks padding: never shipped,
+    keep = live & (rank < cap)  # never counted as a dropped key (they sort
+    dropped = jnp.sum(live & ~keep).astype(jnp.int32)[None]   # after reals)
+    r_idx = jnp.where(keep, rank, cap)     # cap is out of bounds -> dropped
 
-    # 4) exchange
-    recv_k = jax.lax.all_to_all(send_k, axis, split_axis=0, concat_axis=0,
-                                tiled=False)
-    recv_p = jax.lax.all_to_all(send_p, axis, split_axis=0, concat_axis=0,
-                                tiled=False)
-    recv_k = recv_k.reshape(-1)
-    recv_p = recv_p.reshape(-1)
+    # 4) ONE exchange: keys and payload stacked into a (p, cap, nk+1)
+    #    uint32 buffer (payload bitcast); sentinel slots are all-ones in
+    #    every word, which doubles as payload -1.
+    vals = jnp.stack(
+        keys_s + (jax.lax.bitcast_convert_type(pay_s, jnp.uint32),),
+        axis=-1)                                             # (n_local, nk+1)
+    send = jnp.full((p, cap, nk + 1), SENTINEL)
+    send = send.at[bins, r_idx].set(vals, mode="drop")
+    recv = all_to_all(send, axis, split_axis=0, concat_axis=0, tiled=False)
+    recv = recv.reshape(-1, nk + 1)
+    recv_k = tuple(recv[:, i] for i in range(nk))
+    recv_p = jax.lax.bitcast_convert_type(recv[:, nk], jnp.int32)
 
-    # 5) local merge (sentinels sort to the tail)
-    out_k, out_p = jax.lax.sort((recv_k, recv_p), num_keys=1)
-    valid = out_k != SENTINEL
+    # 5) local merge (sentinels sort to the tail; payload again final key)
+    out = jax.lax.sort((*recv_k, recv_p), num_keys=nk + 1)
+    out_k, out_p = out[:nk], out[-1]
+    valid = out_p >= 0
     return out_k, out_p, valid, dropped
+
+
+def _record_exchange(p: int, n_local: int, nk: int,
+                     capacity_factor: float) -> None:
+    """Host-side accounting of one sort exchange's all_to_all volume."""
+    from repro.graph.accumulator import record_all_to_all
+    cap = _exchange_capacity(n_local, p, capacity_factor)
+    record_all_to_all(p * p * cap * (nk + 1) * 4)
 
 
 def distributed_sort(keys: jax.Array, payload: jax.Array,
@@ -90,15 +145,73 @@ def distributed_sort(keys: jax.Array, payload: jax.Array,
                      capacity_factor: float = 2.0):
     """Globally sort (keys, payload) sharded over ``axis``.
 
-    Returns (keys', payload', valid, dropped) with the same sharding; the
-    concatenation of shards in axis order is globally sorted.
+    ``keys``: (n,) uint32, or (n, nk) uint32 for lexicographic multi-word
+    keys (word 0 most significant).  Returns (keys', payload', valid,
+    dropped) with the same sharding and key rank; the concatenation of
+    shards in axis order is globally sorted.  Rows with payload -1 are
+    treated as invalid (they sort by their keys but come back with
+    ``valid`` False).
     """
     from jax.sharding import PartitionSpec as P
 
-    fn = functools.partial(_sample_sort_shard, axis=axis,
-                           capacity_factor=capacity_factor)
+    words = _key_words(keys)
+    nk = len(words)
+    p = mesh.shape[axis]
+    _record_exchange(p, keys.shape[0] // p, nk, capacity_factor)
+
+    def body(*args):
+        out_k, out_p, valid, dropped = _sample_sort_shard(
+            args[:nk], args[nk], axis=axis, capacity_factor=capacity_factor)
+        return (*out_k, out_p, valid, dropped)
+
+    outs = shard_map(
+        body, mesh=mesh,
+        in_specs=tuple(P(axis) for _ in range(nk + 1)),
+        out_specs=tuple(P(axis) for _ in range(nk + 3)),
+    )(*words, payload)
+    out_k = outs[0] if nk == 1 else jnp.stack(outs[:nk], axis=-1)
+    return out_k, outs[nk], outs[nk + 1], outs[nk + 2]
+
+
+def distributed_argsort(keys: jax.Array, gids: jax.Array,
+                        mesh: jax.sharding.Mesh, n_out: int, *,
+                        axis: str = "data", capacity_factor: float = 2.0):
+    """Global sort permutation of (keys, gids), replicated on every shard.
+
+    The sample-sort output is shard-contiguous; here each shard computes
+    the *global rank* of its slice (all_gather of the p valid-counts ->
+    prefix offset), scatters its payloads at those ranks into an (n_out,)
+    buffer and a psum replicates the result — an O(n) collective on int32
+    ids, never on feature rows.  Slot i of the result is the gid with
+    global rank i; -1 marks ranks that lost their element to a capacity
+    drop (``dropped`` > 0, zero for near-uniform keys).
+
+    Rows with gid -1 (padding) are excluded from the permutation entirely:
+    give them all-ones keys so they cannot displace real keys mid-stream.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    words = _key_words(keys)
+    nk = len(words)
+    p = mesh.shape[axis]
+    _record_exchange(p, gids.shape[0] // p, nk, capacity_factor)
+
+    def body(*args):
+        out_k, out_p, valid, dropped = _sample_sort_shard(
+            args[:nk], args[nk], axis=axis, capacity_factor=capacity_factor)
+        local_count = jnp.sum(valid).astype(jnp.int32)
+        counts = jax.lax.all_gather(local_count, axis)       # (p,)
+        me = jax.lax.axis_index(axis)
+        offset = jnp.sum(jnp.where(jnp.arange(p) < me, counts, 0))
+        local_rank = jnp.cumsum(valid).astype(jnp.int32) - valid
+        grank = jnp.where(valid, offset + local_rank, n_out)  # n_out: drop
+        perm = jnp.zeros((n_out,), jnp.int32).at[grank].add(
+            out_p + 1, mode="drop")
+        perm = jax.lax.psum(perm, axis)
+        return perm - 1, dropped
+
     return shard_map(
-        fn, mesh=mesh,
-        in_specs=(P(axis), P(axis)),
-        out_specs=(P(axis), P(axis), P(axis), P(axis)),
-    )(keys, payload)
+        body, mesh=mesh,
+        in_specs=tuple(P(axis) for _ in range(nk + 1)),
+        out_specs=(P(), P(axis)),
+    )(*words, gids)

@@ -1,34 +1,181 @@
 """Distributed Stars: the graph-build pipeline on a device mesh.
 
-The mesh build is now a backend of the unified session API — constructing
+The mesh build is a backend of the unified session API — constructing
 ``GraphBuilder(features, cfg, mesh=mesh)`` shards the feature table and the
 degree slabs row-wise over the ``data`` axis and runs, per repetition
 (paper §4, adapted per DESIGN.md §3):
 
-  1. sketch    — each `data` shard sketches its own points (no comms),
+  1. sketch    — each `data` shard sketches its own points (no comms) and
+                 packs the hash words + random tiebreak into multi-word
+                 sort keys,
   2. sort      — distributed sample-sort of (key, gid) pairs (sorter.py);
-                 the output windows are shard-contiguous,
-  3. join      — feature rows for window members are gathered across
+                 ``distributed_argsort`` collapses the shard-contiguous
+                 output to the replicated global permutation — the same
+                 total order as the single-device ``jax.lax.sort``,
+  3. window    — the permutation feeds the SAME window construction and
+                 leader sampling as the single-device path (core/stars.py
+                 ``_score_windows``), so the candidate stream is identical
+                 point-for-point,
+  4. join+score— feature rows for window members are gathered across
                  shards by gid (the DHT / shuffle-join analogue; XLA lowers
                  the gather to collective traffic, visible in the roofline),
-  4. score     — leaders x window similarity tiles (leader_score kernel),
-  5. emit      — masked edge candidates fold into the degree-slab
-                 accumulator (graph/accumulator.py) inside the same jit
-                 program; a shard's emit writes mostly land on its own rows
-                 and XLA inserts the residual scatter traffic.
+  5. emit      — :func:`accumulate_all_to_all` (this module) buckets each
+                 emitted (node, nbr, w) insertion triple by the shard that
+                 owns the node's slab row, ships ALL cross-shard edge
+                 traffic in ONE all_to_all, and folds the received triples
+                 into the local slab shard with the regular accumulator
+                 machinery.  No XLA-inserted scatter collectives remain on
+                 the emit path, and the exchanged bytes are recorded in
+                 ``accumulator.transfer_stats['all_to_all_bytes']``.
 
 The host never sees per-repetition edges: one slab fetch per ``finalize()``
 produces the Graph, the same single-transfer contract as the single-device
-backend.  See ``repro.core.builder._MeshBackend`` for the implementation;
-this module keeps the legacy one-shot entry point.
+backend.  Because phases 2-4 reproduce the single-device order and floats
+exactly and phase 5 routes every triple to its owning row before the same
+top-k fold, the mesh build is **edge-for-edge identical** to the
+single-device build (tests/test_mesh_parity.py).  See
+``repro.core.builder._MeshBackend`` for the driver; this module keeps the
+emit primitive and the legacy one-shot entry point.
 """
 
 from __future__ import annotations
 
-import jax
+import functools
+from typing import Tuple
 
+import jax
+import jax.numpy as jnp
+
+from repro.compat import all_to_all, shard_map
 from repro.core.spanner import Graph
 from repro.core.stars import StarsConfig
+from repro.graph import accumulator as acc_lib
+
+_U32_ONES = jnp.uint32(0xFFFFFFFF)
+
+
+def _emit_capacity(m2: int, p: int, capacity_factor: float) -> int:
+    """Per-destination-shard triple capacity of one emit exchange."""
+    return int(capacity_factor * m2 / p) + 1
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=("mesh", "axis", "capacity_factor"))
+def _emit_exchange(slab_nbr, slab_w, src, dst, w, valid, *,
+                   mesh, axis: str, capacity_factor: float):
+    """shard_map body wrapper: bucket-by-owner -> one all_to_all -> fold."""
+    from jax.sharding import PartitionSpec as P
+
+    p = mesh.shape[axis]
+    n_pad = slab_nbr.shape[0]
+    rows = n_pad // p
+
+    def emit_shard(nbr_l, w_l, src_l, dst_l, w_c, ok_c):
+        # self-loop / invalid-id exclusion happens HERE, on global ids
+        ok = ok_c & (src_l >= 0) & (dst_l >= 0) & (src_l != dst_l)
+        # one insertion triple per endpoint (same doubling as accumulate)
+        node = jnp.concatenate([src_l, dst_l]).astype(jnp.int32)
+        nbr = jnp.concatenate([dst_l, src_l]).astype(jnp.int32)
+        ww = jnp.concatenate([w_c, w_c]).astype(jnp.float32)
+        ok2 = jnp.concatenate([ok, ok])
+        m2 = node.shape[0]
+        cap_send = _emit_capacity(m2, p, capacity_factor)
+
+        # bucket by the shard owning the node's slab row (block row layout)
+        owner = jnp.where(ok2, jnp.clip(node // rows, 0, p - 1), p)
+        iota = jnp.arange(m2, dtype=jnp.int32)
+        owner_s, idx_s = jax.lax.sort((owner.astype(jnp.int32), iota),
+                                      num_keys=1)
+        start = jnp.searchsorted(owner_s, jnp.arange(p)).astype(jnp.int32)
+        rank = iota - start[jnp.clip(owner_s, 0, p - 1)]
+        live = owner_s < p
+        keep = live & (rank < cap_send)
+        dropped = jnp.sum(live & ~keep).astype(jnp.int32)[None]
+
+        node_s = node[idx_s]
+        # ship the row in the DESTINATION shard's local coordinates
+        loc = node_s - owner_s * rows
+        vals = jnp.stack(
+            [jax.lax.bitcast_convert_type(loc.astype(jnp.int32), jnp.uint32),
+             jax.lax.bitcast_convert_type(nbr[idx_s], jnp.uint32),
+             jax.lax.bitcast_convert_type(ww[idx_s], jnp.uint32)],
+            axis=-1)                                       # (m2, 3)
+        send = jnp.full((p, cap_send, 3), _U32_ONES)
+        b_idx = jnp.where(keep, owner_s, 0)
+        r_idx = jnp.where(keep, rank, cap_send)            # OOB -> dropped
+        send = send.at[b_idx, r_idx].set(vals, mode="drop")
+
+        # THE exchange: every cross-shard edge insertion of this round
+        recv = all_to_all(send, axis, split_axis=0, concat_axis=0,
+                          tiled=False)
+        recv = recv.reshape(-1, 3)
+        node_r = jax.lax.bitcast_convert_type(recv[:, 0], jnp.int32)
+        nbr_r = jax.lax.bitcast_convert_type(recv[:, 1], jnp.int32)
+        w_r = jax.lax.bitcast_convert_type(recv[:, 2], jnp.float32)
+        ok_r = (node_r >= 0) & (node_r < rows)   # sentinel loc bitcasts to -1
+
+        state = acc_lib._fold_triples(
+            acc_lib.EdgeAccumulator(nbr=nbr_l, w=w_l),
+            node_r, nbr_r, w_r, ok_r)
+        return state.nbr, state.w, dropped
+
+    return shard_map(
+        emit_shard, mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None),
+                  P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(axis, None), P(axis, None), P(axis)),
+    )(slab_nbr, slab_w, src, dst, w, valid)
+
+
+def accumulate_all_to_all(state: acc_lib.EdgeAccumulator,
+                          src: jax.Array, dst: jax.Array, w: jax.Array,
+                          valid: jax.Array, *, mesh, axis: str = "data",
+                          capacity_factor: float = 4.0
+                          ) -> Tuple[acc_lib.EdgeAccumulator, jax.Array]:
+    """Fold a candidate stream into row-sharded slabs via ONE all_to_all.
+
+    The explicit-emit replacement for relying on XLA scatter collectives:
+    each shard doubles its local stream into directed (node, nbr, w)
+    insertion triples, buckets them by the shard owning ``node``'s slab row
+    (block row layout: row i lives on shard ``i // (n_pad/p)``), and ships
+    the stacked fixed-capacity buffers in a single all_to_all.  The
+    receiving shard localizes rows and runs the normal accumulator fold
+    (``_fold_triples``) on its slab shard — per-row results depend only on
+    the per-row candidate multiset, so the sharded fold is edge-for-edge
+    identical to a single-device ``accumulate`` of the same stream.
+
+    Over-capacity triples are dropped and *counted* (returned per shard;
+    zero for near-uniform hash orders at the default ``capacity_factor``),
+    the sorter's graceful-degradation contract.  Exchange volume is
+    recorded host-side in ``transfer_stats['all_to_all_bytes']``.
+
+    Args:
+      state: EdgeAccumulator whose row count is a multiple of the axis size.
+      src/dst/w/valid: equally-shaped candidate stream (any rank).
+    Returns:
+      (new state, (p,) int32 dropped-triple counts).
+    """
+    p = mesh.shape[axis]
+    n_pad = state.nbr.shape[0]
+    if n_pad % p:
+        raise ValueError(f"slab rows {n_pad} not divisible by mesh axis {p}")
+    src = src.ravel()
+    dst = dst.ravel()
+    w = w.ravel()
+    valid = valid.ravel()
+    pad = (-src.shape[0]) % p
+    if pad:
+        src = jnp.pad(src, (0, pad), constant_values=-1)
+        dst = jnp.pad(dst, (0, pad), constant_values=-1)
+        w = jnp.pad(w, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    m2 = 2 * (src.shape[0] // p)
+    acc_lib.record_all_to_all(
+        p * p * _emit_capacity(m2, p, capacity_factor) * 3 * 4)
+    nbr, ww, dropped = _emit_exchange(
+        state.nbr, state.w, src, dst, w, valid,
+        mesh=mesh, axis=axis, capacity_factor=capacity_factor)
+    return acc_lib.EdgeAccumulator(nbr=nbr, w=ww), dropped
 
 
 def build_graph_distributed(dense: jax.Array, cfg: StarsConfig,

@@ -47,14 +47,27 @@ _BIG = jnp.int32(2**31 - 1)
 # checkable invariant (see benchmarks/accumulator_bench.py).  Checkpoint
 # snapshots (GraphBuilder.checkpoint) are tracked separately — they are
 # deliberate, user-requested transfers, not part of the build loop.
+# ``all_to_all_*`` counts the *device-to-device* buffer volume of every
+# explicit cross-shard exchange (the sample-sort partition and the mesh
+# edge emit of distributed/stars_dist.py) — the comms side of the tera-
+# scale story, measurable per build and asserted in tests.
 transfer_stats: Dict[str, int] = {"edge_fetches": 0, "bytes": 0,
                                   "checkpoint_fetches": 0,
-                                  "checkpoint_bytes": 0}
+                                  "checkpoint_bytes": 0,
+                                  "all_to_all_calls": 0,
+                                  "all_to_all_bytes": 0}
 
 
 def reset_transfer_stats() -> None:
     for k in transfer_stats:
         transfer_stats[k] = 0
+
+
+def record_all_to_all(nbytes: int) -> None:
+    """Account one explicit all_to_all exchange (total buffer bytes moved
+    across all shards; computed host-side from static shapes)."""
+    transfer_stats["all_to_all_calls"] += 1
+    transfer_stats["all_to_all_bytes"] += int(nbytes)
 
 
 @jax.tree_util.register_dataclass
@@ -152,7 +165,6 @@ def accumulate(state: EdgeAccumulator, src: jax.Array, dst: jax.Array,
     is inserted under both endpoints, so the final union over slabs contains
     an edge iff it ranks top-k for at least one endpoint.
     """
-    n, cap = state.nbr.shape
     src = src.ravel().astype(jnp.int32)
     dst = dst.ravel().astype(jnp.int32)
     w = w.ravel().astype(jnp.float32)
@@ -163,6 +175,29 @@ def accumulate(state: EdgeAccumulator, src: jax.Array, dst: jax.Array,
     nbr = jnp.concatenate([dst, src])
     ww = jnp.concatenate([w, w])
     ok2 = jnp.concatenate([ok, ok])
+    return _fold_triples(state, node, nbr, ww, ok2)
+
+
+def _fold_triples(state: EdgeAccumulator, node: jax.Array, nbr: jax.Array,
+                  ww: jax.Array, ok2: jax.Array) -> EdgeAccumulator:
+    """Fold directed (node, nbr, w) insertion triples into the slabs.
+
+    The slab-row half of :func:`accumulate` — each triple inserts ``nbr``
+    under row ``node`` only (callers wanting both endpoints double the
+    stream first, as ``accumulate`` does).  The mesh emit path
+    (distributed/stars_dist.py) calls this per shard AFTER routing every
+    triple to its owner via all_to_all, with ``node`` already localized to
+    shard-row coordinates — per-node results depend only on the per-row
+    candidate multiset, which is what makes the sharded build edge-for-edge
+    equal to the single-device one.
+    """
+    n, cap = state.nbr.shape
+    node = node.astype(jnp.int32)
+    nbr = nbr.astype(jnp.int32)
+    ww = ww.astype(jnp.float32)
+    # NB: no node != nbr check here — self-loop exclusion happens on GLOBAL
+    # ids in the caller (``node`` may be in shard-row coordinates).
+    ok2 = ok2 & (node >= 0) & (nbr >= 0)
     m2 = node.shape[0]
     kin = min(cap, m2)
 
@@ -204,7 +239,7 @@ def accumulate(state: EdgeAccumulator, src: jax.Array, dst: jax.Array,
     #     it per node row).  TPU skips this — the Pallas kernel dedups in
     #     VMEM and never reads the companion view.
     presorted = None
-    if jax.default_backend() != "tpu":
+    if not kernel_ops.pallas_by_default():
         # weight-order slot of every step-1 element (kin == dropped/dead)
         wrank1 = jnp.zeros((m2,), jnp.int32).at[p1].set(slot)
         surv1 = (wrank1 < kin).astype(jnp.int32)

@@ -21,13 +21,26 @@ from repro.kernels import simhash as _sh
 from repro.kernels import topk_merge as _tm
 
 
+def pallas_by_default() -> bool:
+    """True when the kernels lower natively (the Pallas TPU path).
+
+    Callers preparing kernel-specific side inputs key off this rather than
+    re-deriving the backend themselves: e.g. the edge accumulator only
+    builds the presorted companion view (``topk_merge``'s
+    ``inc_presorted``) for the jnp reference path — the Pallas kernel
+    dedups in VMEM and never reads it.  Also valid inside ``shard_map``
+    bodies (the mesh emit path): the default backend is a process-level
+    property, not a per-shard one.
+    """
+    return jax.default_backend() == "tpu"
+
+
 def _pick(use_pallas: Optional[bool]) -> tuple[bool, bool]:
     """Returns (use_pallas, interpret)."""
-    backend = jax.default_backend()
+    native = pallas_by_default()
     if use_pallas is None:
-        use_pallas = backend == "tpu"
-    interpret = backend != "tpu"
-    return use_pallas, interpret
+        use_pallas = native
+    return use_pallas, not native
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

@@ -1,0 +1,48 @@
+"""Shared runner for multi-device snippets on forced virtual host devices.
+
+``--xla_force_host_platform_device_count`` must be set BEFORE jax imports,
+and it only multiplies the *CPU* platform — so the snippet runs in a
+subprocess pinned to ``JAX_PLATFORMS=cpu`` (on a GPU/TPU host the flag
+would otherwise be ignored and the mesh constructors would fail), while
+the parent process keeps its real backend and device count (the dry-run
+rule).  Used by tests/test_mesh_parity.py, tests/test_distributed.py and
+benchmarks/builder_bench.py.
+
+The snippet must print a JSON object as its last stdout line; that object
+is returned.  Keep snippet indentation consistent — the whole string is
+dedented as one block (a mismatched prefix silently swallows lines into
+an enclosing definition).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from typing import Optional, Sequence
+
+SRC = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_forced_devices(code: str, devices: int = 8, *,
+                       timeout: int = 900,
+                       extra_pythonpath: Sequence[str] = (),
+                       env: Optional[dict] = None) -> dict:
+    env = dict(os.environ if env is None else env)
+    env["PYTHONPATH"] = os.pathsep.join([SRC, *extra_pythonpath])
+    env["JAX_PLATFORMS"] = "cpu"
+    prog = ("import os\n"
+            "os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={devices}'\n" +
+            textwrap.dedent(code))
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(f"forced-devices subprocess failed:\n"
+                           f"{out.stderr[-3000:]}")
+    if not out.stdout.strip():
+        raise RuntimeError("forced-devices subprocess printed nothing — "
+                           "check snippet indentation\n" + out.stderr[-1000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])

@@ -1,28 +1,18 @@
 """Multi-device tests: run in subprocesses with 8 forced host devices so
-the main test process keeps the real device count (the dry-run rule)."""
-
-import json
-import os
-import subprocess
-import sys
-import textwrap
+the main test process keeps the real device count (the dry-run rule).
+Edge-for-edge equivalence of the mesh graph build lives in
+tests/test_mesh_parity.py; this module keeps the sorter, training and
+legacy-wrapper coverage."""
 
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from repro.testing import run_forced_devices
+
+pytestmark = pytest.mark.dist
 
 
 def _run_sub(code: str) -> dict:
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    prog = ("import os\n"
-            "os.environ['XLA_FLAGS'] = "
-            "'--xla_force_host_platform_device_count=8'\n" +
-            textwrap.dedent(code))
-    out = subprocess.run([sys.executable, "-c", prog], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
+    return run_forced_devices(code, devices=8)
 
 
 def test_distributed_sort_is_globally_sorted():
