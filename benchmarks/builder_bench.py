@@ -15,6 +15,15 @@ Rows emitted (CSV via common.emit):
   builder_recall_delta                — two-hop 10-NN recall(full) minus
       recall(incremental); the acceptance bar is |delta| <= 0.02.
 
+The ``extend_stream`` row measures the LONG-session staleness story
+(GraphBuilder.refresh_reps): the same multi-batch extend() stream run
+without refresh (the old-old staleness regime), with the automatic
+decaying rescore armed (cfg.refresh_rate/refresh_fraction), and a
+from-scratch rebuild sized to comparable total comparisons — wall
+seconds, comparisons and two-hop recall for each, so the cost of bounding
+staleness (refresh comparisons) and its payoff (recall recovered toward
+the rebuild) are both visible in BENCH_builder.json.
+
 Source-dependent caveat: the windowed multi-leader sources (sorting_stars)
 mask to pure new-vs-all pairs, so extension comparisons track the inserted
 fraction (~2-3x below a rebuild at +20%).  The single-leader lsh_stars
@@ -64,7 +73,7 @@ def incremental_vs_rebuild(ds: str = "mnist", algo: str = "sorting_stars",
     # (outside both timed sections)
     base = GraphBuilder(feats.take(np.arange(n0)), cfg)
     base.add_reps(r)
-    base_comps = base._merged_stats()["comparisons"]
+    base_comps = base.stats["comparisons"]
 
     acc_lib.reset_transfer_stats()
     t0 = time.time()
@@ -102,6 +111,91 @@ def incremental_vs_rebuild(ds: str = "mnist", algo: str = "sorting_stars",
         "extend_comparisons": int(ext_comps),
         "recall_full": rec_full, "recall_incremental": rec_inc,
         "edge_fetches_per_finalize": 1,
+    }
+
+
+def extend_stream(ds: str = "mnist", algo: str = "sorting_stars",
+                  batches: int = 5, r: int = 4, rebuild_r: int = 9,
+                  window: int = 64, leaders: int = 8,
+                  refresh_rate: float = 0.5,
+                  refresh_fraction: float = 0.5) -> dict:
+    """Long extend() stream with vs without automatic staleness refresh.
+
+    ``batches`` sequential extend() calls of equal size follow an initial
+    build of the first slice, each running ``r`` masked repetitions.
+    Without refresh, old-old pairs are only ever scored by the repetitions
+    that ran while one endpoint was new — the staleness regime.  With
+    ``refresh_rate`` armed, extend() additionally runs sampled old-old
+    refresh rounds (the decaying rescore).  A from-scratch rebuild at
+    ``rebuild_r`` repetitions anchors the comparison at comparable total
+    comparisons.
+
+    The window is narrowed below the paper default (W=250 blankets our
+    container-scale n with near-full coverage per repetition, hiding
+    staleness entirely — every recall saturates at ~1.0): ``window=64``
+    puts per-repetition pair coverage in the regime where rep counts
+    matter, which is exactly where a tera-scale W=250 build lives.
+    """
+    import dataclasses
+
+    feats, _ = dataset(ds)
+    cfg = dataclasses.replace(algo_config(algo, ds, r=r),
+                              window=window, leaders=leaders)
+    n = feats.n
+    b0 = n // (batches + 1)
+    # exactly ``batches`` near-even extension slices covering [b0, n)
+    bounds = np.linspace(b0, n, batches + 1).astype(int)
+
+    def stream(c):
+        t0 = time.time()
+        bld = GraphBuilder(feats.take(np.arange(b0)), c).add_reps(r)
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            bld.extend(feats.take(np.arange(lo, hi)), reps=r)
+        g = bld.finalize()
+        return g, time.time() - t0
+
+    g_nr, t_nr = stream(cfg)
+    g_rf, t_rf = stream(dataclasses.replace(
+        cfg, refresh_rate=refresh_rate, refresh_fraction=refresh_fraction))
+    t0 = time.time()
+    g_rb = GraphBuilder(feats, cfg).add_reps(rebuild_r).finalize()
+    t_rb = time.time() - t0
+
+    x = np.asarray(feats.dense)
+    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    sims = xn @ xn.T
+    np.fill_diagonal(sims, -np.inf)
+    queries = np.arange(0, n, 7)
+    truth = [np.argsort(-sims[q])[:10] for q in queries]
+    rec = {name: neighbor_recall(g, queries, truth, hops=2, k_cap=10)
+           for name, g in (("none", g_nr), ("refresh", g_rf),
+                           ("rebuild", g_rb))}
+
+    tag = f"[{ds}/{algo}/r{r}x{batches + 1}]"
+    emit(f"stream_norefresh_s{tag}", 0.0, f"{t_nr:.3f}s")
+    emit(f"stream_refresh_s{tag}", 0.0, f"{t_rf:.3f}s")
+    emit(f"stream_rebuild_s{tag}", 0.0, f"{t_rb:.3f}s")
+    emit(f"stream_norefresh_comparisons{tag}", 0.0,
+         g_nr.stats["comparisons"])
+    emit(f"stream_refresh_comparisons{tag}", 0.0, g_rf.stats["comparisons"])
+    emit(f"stream_rebuild_comparisons{tag}", 0.0, g_rb.stats["comparisons"])
+    emit(f"stream_staleness_recall_gap{tag}", 0.0,
+         f"{rec['rebuild'] - rec['none']:+.4f}")
+    emit(f"stream_refresh_recall_gap{tag}", 0.0,
+         f"{rec['rebuild'] - rec['refresh']:+.4f}")
+    return {
+        "dataset": ds, "algo": algo, "r": r, "batches": batches,
+        "rebuild_r": rebuild_r, "refresh_rate": refresh_rate,
+        "refresh_fraction": refresh_fraction,
+        "norefresh_s": t_nr, "refresh_s": t_rf, "rebuild_s": t_rb,
+        "norefresh_comparisons": int(g_nr.stats["comparisons"]),
+        "refresh_comparisons_total": int(g_rf.stats["comparisons"]),
+        "refresh_comparisons_refresh_only":
+            int(g_rf.stats["refresh_comparisons"]),
+        "refresh_reps": int(g_rf.stats["refresh_reps"]),
+        "rebuild_comparisons": int(g_rb.stats["comparisons"]),
+        "recall_norefresh": rec["none"], "recall_refresh": rec["refresh"],
+        "recall_rebuild": rec["rebuild"],
     }
 
 
@@ -169,6 +263,7 @@ def mesh_vs_single(ds: str = "mnist", algo: str = "sorting_stars",
 def builder_table() -> None:
     rows = [incremental_vs_rebuild("mnist", "sorting_stars", r=10),
             incremental_vs_rebuild("mnist", "lsh_stars", r=10),
+            extend_stream("mnist", "sorting_stars", batches=5, r=4),
             mesh_vs_single("mnist", "sorting_stars", r=6, devices=4)]
     with open("BENCH_builder.json", "w") as f:
         json.dump(rows, f, indent=2)

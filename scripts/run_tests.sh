@@ -10,6 +10,10 @@
 #   scripts/run_tests.sh dist       # multi-device tests only (-m dist;
 #                                   #   subprocesses force 1/2/4/8 virtual
 #                                   #   host devices via XLA_FLAGS)
+#   scripts/run_tests.sh long       # long-session streaming tests only
+#                                   #   (-m long; the extend()/refresh
+#                                   #   staleness suite — minutes, kept
+#                                   #   out of the fast tier)
 #   scripts/run_tests.sh [args...]  # extra args forwarded to pytest
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -25,8 +29,12 @@ case "${1:-}" in
     ;;
   dist)
     shift
-    exec python -m pytest -q -m dist tests/test_mesh_parity.py \
+    exec python -m pytest -q -m "dist and not long" tests/test_mesh_parity.py \
       tests/test_distributed.py "$@"
+    ;;
+  long)
+    shift
+    exec python -m pytest -q -m long "$@"
     ;;
 esac
 exec python -m pytest -x -q "$@"

@@ -11,6 +11,8 @@ all of that once, as a session:
     builder.add_reps(cfg.r)                        # run repetitions
     builder.extend(new_points, reps=cfg.r)         # insert points, score
                                                    #   new-vs-all only
+    builder.refresh_reps(2, fraction=0.5)          # rescore a sampled set
+                                                   #   of old-old windows
     ckpt = builder.checkpoint()                    # slabs+counters -> host
     builder = GraphBuilder.restore(feats, cfg, ckpt)
     graph = builder.finalize()                     # THE device->host fetch
@@ -39,6 +41,17 @@ Design points:
     them — the union over all reps keeps the two-hop spanner property of a
     fresh build at equal total repetitions (verified in tests/test_builder):
     comparisons drop by the old-old fraction, recall matches within noise.
+  * **Staleness repair**: the flip side of that masking is that old points
+    never re-window against each other, so a LONG stream of extensions
+    leaves the old-old edge set reflecting only the repetitions that ran
+    while one endpoint was new.  ``refresh_reps`` runs repetitions masked
+    the *inverse* way — old-old pairs only, inside a PRNG-sampled fraction
+    of windows — and ``cfg.refresh_rate`` arms an automatic decaying
+    rescore that ``extend()`` invokes, bounding staleness geometrically in
+    session length (tests/test_refresh.py demonstrates the recall bound).
+    The watermark, refresh counters and fractional auto-refresh credit ride
+    through ``BuilderCheckpoint``, so a restored session refreshes exactly
+    like the uncheckpointed one — on any mesh size.
   * **One transfer**: edges cross device->host exactly once per
     ``finalize()`` (``accumulator.to_graph``); ``checkpoint()`` snapshots
     are accounted separately (``transfer_stats['checkpoint_*']``).
@@ -90,7 +103,9 @@ class RepetitionSource:
         self.measure_fn = pairwise_similarity(
             cfg.measure, alpha=cfg.mixture_alpha, learned_apply=learned_apply)
 
-    def bind(self, features: PointFeatures, new_from: int) -> Callable:
+    def bind(self, features: PointFeatures, new_from: int,
+             refresh_below: int = 0,
+             refresh_fraction: float = 1.0) -> Callable:
         cfg = self.cfg
         prefilter = (
             _prefilter_sketch(features, cfg.hamming_prefilter_bits, cfg.seed)
@@ -99,7 +114,9 @@ class RepetitionSource:
         @functools.partial(jax.jit, donate_argnums=0)
         def round_step(state, rep_index):
             out = _rep_candidates(cfg, features, self.measure_fn, prefilter,
-                                  rep_index, new_from=new_from)
+                                  rep_index, new_from=new_from,
+                                  refresh_below=refresh_below,
+                                  refresh_fraction=refresh_fraction)
             state = acc_lib.accumulate(state, out["src"], out["dst"],
                                        out["w"], out["emit"])
             return state, {k: out[k] for k in
@@ -125,7 +142,14 @@ class AllPairsSource:
         self.measure_fn = pairwise_similarity(
             cfg.measure, alpha=cfg.mixture_alpha, learned_apply=learned_apply)
 
-    def bind(self, features: PointFeatures, new_from: int) -> Callable:
+    def bind(self, features: PointFeatures, new_from: int,
+             refresh_below: int = 0,
+             refresh_fraction: float = 1.0) -> Callable:
+        if refresh_below > 0:
+            # unreachable through the session (refresh_reps rejects the
+            # exact source before binding), kept as a structural guard
+            raise ValueError("the exact 'allpairs' source has no sampling "
+                             "staleness to refresh")
         cfg = self.cfg
         n = features.n
         block = min(cfg.allpairs_block, max(n, 1))
@@ -185,7 +209,9 @@ class _SingleDeviceBackend:
                              f"known: {sorted(CANDIDATE_SOURCES)}")
         self.features = features
         self.source = CANDIDATE_SOURCES[name](cfg, learned_apply)
-        self._bound = None          # (new_from, compiled round program)
+        # (new_from, refresh_below, refresh_fraction) -> compiled round
+        # program; cleared on extend() (shapes change)
+        self._bound: Dict = {}
 
     @property
     def n(self) -> int:
@@ -203,14 +229,17 @@ class _SingleDeviceBackend:
     def trim(self, state: acc_lib.EdgeAccumulator) -> acc_lib.EdgeAccumulator:
         return state                # rows are never padded on one device
 
-    def run_round(self, state, rep_index: int, new_from: int):
-        if self._bound is None or self._bound[0] != new_from:
-            self._bound = (new_from, self.source.bind(self.features, new_from))
-        return self._bound[1](state, rep_index)
+    def run_round(self, state, rep_index: int, new_from: int,
+                  refresh_below: int = 0, refresh_fraction: float = 1.0):
+        key = (new_from, refresh_below, refresh_fraction)
+        if key not in self._bound:
+            self._bound[key] = self.source.bind(
+                self.features, new_from, refresh_below, refresh_fraction)
+        return self._bound[key](state, rep_index)
 
     def extend(self, new_features: PointFeatures) -> None:
         self.features = self.features.concat(new_features)
-        self._bound = None          # shapes changed; rebind lazily
+        self._bound = {}            # shapes changed; rebind lazily
 
 
 def _pack_words_bigendian(words: jax.Array) -> jax.Array:
@@ -280,8 +309,8 @@ class _MeshBackend:
                                               alpha=cfg.mixture_alpha)
         self._n = int(features.dense.shape[0])
         self._place_features(jnp.asarray(features.dense))
-        self._sketches: Dict = {}   # n -> sketch_fn (new_from-independent)
-        self._bound: Dict = {}      # (n, new_from) -> score_fn
+        self._sketches: Dict = {}   # n -> sketch_fn (mask-independent)
+        self._bound: Dict = {}      # (n, new_from, refresh...) -> score_fn
 
     # -- padded row layout ---------------------------------------------- #
     @property
@@ -334,12 +363,14 @@ class _MeshBackend:
                                        w=state.w[:self._n])
 
     # -- the per-repetition programs ------------------------------------ #
-    def _bind(self, new_from: int):
+    def _bind(self, new_from: int, refresh_below: int = 0,
+              refresh_fraction: float = 1.0):
         if self._n not in self._sketches:
             self._sketches[self._n] = self._bind_sketch()
-        key = (self._n, new_from)
+        key = (self._n, new_from, refresh_below, refresh_fraction)
         if key not in self._bound:
-            self._bound[key] = self._bind_score(new_from)
+            self._bound[key] = self._bind_score(new_from, refresh_below,
+                                                refresh_fraction)
         return self._sketches[self._n], self._bound[key]
 
     def _bind_sketch(self):
@@ -350,7 +381,7 @@ class _MeshBackend:
         def sketch_phase(x, rep):
             from repro.core.stars import _rep_keys
             rep_seed = jnp.asarray(rep, jnp.uint32) ^ jnp.uint32(cfg.seed)
-            k_tie, _, _ = _rep_keys(cfg, rep)
+            k_tie, _, _, _ = _rep_keys(cfg, rep)
             words = lsh_lib.sketch(PointFeatures(dense=x), cfg.family,
                                    rep_seed=rep_seed)
             n_pad = words.shape[0]
@@ -377,7 +408,8 @@ class _MeshBackend:
 
         return sketch_phase
 
-    def _bind_score(self, new_from: int):
+    def _bind_score(self, new_from: int, refresh_below: int = 0,
+                    refresh_fraction: float = 1.0):
         from repro.core import windows as win_lib
         from repro.core.stars import (_prefilter_sketch, _rep_keys,
                                       _score_windows)
@@ -391,7 +423,7 @@ class _MeshBackend:
 
         @jax.jit
         def score_phase(perm, bucket, rep):
-            _, k_shift, k_lead = _rep_keys(cfg, rep)
+            _, k_shift, k_lead, k_refresh = _rep_keys(cfg, rep)
             if cfg.mode == "lsh":
                 perm_bucket = bucket[jnp.maximum(perm, 0)]
             else:
@@ -400,14 +432,19 @@ class _MeshBackend:
             win = win_lib._scatter_to_slots(perm, perm_bucket, offset,
                                             n_slots, w)
             return _score_windows(cfg, features, self.measure_fn, prefilter,
-                                  win, k_lead, new_from=new_from)
+                                  win, k_lead, new_from=new_from,
+                                  refresh_below=refresh_below,
+                                  refresh_fraction=refresh_fraction,
+                                  k_refresh=k_refresh)
 
         return score_phase
 
-    def run_round(self, state, rep_index: int, new_from: int):
+    def run_round(self, state, rep_index: int, new_from: int,
+                  refresh_below: int = 0, refresh_fraction: float = 1.0):
         from repro.distributed.sorter import distributed_argsort
         from repro.distributed.stars_dist import accumulate_all_to_all
-        sketch_fn, score_fn = self._bind(new_from)
+        sketch_fn, score_fn = self._bind(new_from, refresh_below,
+                                         refresh_fraction)
         rep = jnp.int32(rep_index)
         keys, gids, bucket = sketch_fn(self.dense, rep)
         perm, drop_sort = distributed_argsort(
@@ -467,6 +504,14 @@ class BuilderCheckpoint:
     w: np.ndarray
     stats: Dict[str, int]
     cfg: StarsConfig
+    # staleness-repair state (GraphBuilder.refresh_reps): the old-old
+    # watermark, how many refresh repetitions ran, and the fractional
+    # auto-refresh credit the decaying policy has banked — carried so a
+    # restored session refreshes exactly like the uncheckpointed one would
+    # have, on any mesh size.
+    refresh_watermark: int = 0
+    refresh_reps: int = 0
+    refresh_credit: float = 0.0
 
 
 class GraphBuilder:
@@ -480,13 +525,23 @@ class GraphBuilder:
                 (the former build_graph_distributed backend).
       learned_apply: two-tower apply fn for measure='learned'.
 
-    Methods: ``add_reps`` / ``extend`` / ``checkpoint`` / ``restore`` /
-    ``finalize``; all state mutation is in-place on the session, device
-    arrays are donated between rounds.
+    Methods: ``add_reps`` / ``extend`` / ``refresh_reps`` / ``checkpoint``
+    / ``restore`` / ``finalize``; all state mutation is in-place on the
+    session, device arrays are donated between rounds.
     """
 
     def __init__(self, features: FeaturesLike, cfg: StarsConfig, *,
                  mesh=None, learned_apply: Optional[Callable] = None):
+        if cfg.refresh_rate < 0:
+            raise ValueError(f"refresh_rate must be >= 0: {cfg.refresh_rate}")
+        if cfg.refresh_rate > 0 and not cfg.refresh_fraction > 0:
+            # the auto policy would burn full sketch+sort rounds whose
+            # window sample is empty — report it at construction, exactly
+            # like the manual refresh_reps(fraction=0) path does
+            raise ValueError(
+                f"refresh_rate > 0 needs a positive refresh_fraction "
+                f"(got {cfg.refresh_fraction}): auto-refresh rounds would "
+                f"sample zero windows and repair nothing")
         self.cfg = cfg
         self._learned_apply = learned_apply
         if mesh is not None:
@@ -498,6 +553,13 @@ class GraphBuilder:
         self._reps_done = 0
         self._counters: List[Dict] = []
         self._stats_base: Dict[str, int] = {}
+        # staleness tracking: gids below the watermark are "old" — their
+        # mutual pairs stopped being scored when the watermark last moved
+        # (extend() masks them out).  refresh_reps() rescores a sampled
+        # subset; the credit accumulator drives the automatic policy.
+        self._refresh_below = 0
+        self._refresh_reps = 0
+        self._refresh_credit = 0.0
         self._capacity = cfg.slab_capacity(self.n, reps=max(cfg.r, 1))
         # Slabs are allocated lazily (first round / checkpoint / finalize):
         # restore() injects the checkpoint state instead, so resuming never
@@ -517,6 +579,21 @@ class GraphBuilder:
     @property
     def capacity(self) -> int:
         return self._capacity
+
+    @property
+    def refresh_watermark(self) -> int:
+        """Points with gid below this are "old": their mutual pairs are the
+        session's staleness exposure (0 until the first extend())."""
+        return self._refresh_below
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Running session totals (comparisons, emitted, refresh_reps, ...)
+        as host ints — the same dict a ``finalize()`` would attach to the
+        Graph at this point.  Syncs the pending per-round device counters
+        (cheap: they are rolled up every few rounds anyway), never the edge
+        slabs."""
+        return self._merged_stats()
 
     # ------------------------------------------------------------------ #
     def add_reps(self, reps: Optional[int] = None, *,
@@ -558,6 +635,15 @@ class GraphBuilder:
         new ``ceil(n/p)*p`` row multiple and re-placed (the pad-and-reshard
         step); the extension rounds then run the same masked scoring, so
         mesh extend() remains edge-for-edge equal to single-device extend.
+
+        Every extend() advances the staleness watermark to the pre-insert
+        point count, and — with ``cfg.refresh_rate`` > 0 — banks
+        ``reps * refresh_rate`` refresh credit, immediately running the
+        whole-repetition part of it as sampled old-old refresh rounds
+        (:meth:`refresh_reps`).  Long-running sessions thereby bound their
+        old-old staleness without user intervention: the unrefreshed
+        window mass decays as ``(1 - refresh_fraction)^t`` in the number
+        of refresh rounds t.
         """
         if self._reps_done == 0:
             raise ValueError(
@@ -573,16 +659,88 @@ class GraphBuilder:
             reps = self.cfg.r if reps is None else reps
         old_n = self.n
         self._backend.extend(as_point_features(new_features))
+        self._refresh_below = old_n
         self._run_rounds(reps, new_from=old_n, progress=progress)
+        # the automatic decaying-rescore policy ('allpairs' is exact per
+        # point set — it has no sampling staleness to repair)
+        if self.cfg.refresh_rate > 0 and self.cfg.source_name != "allpairs":
+            self._refresh_credit += reps * self.cfg.refresh_rate
+            auto = int(self._refresh_credit)
+            if auto:
+                self._refresh_credit -= auto
+                self._run_rounds(auto, new_from=0,
+                                 refresh_below=self._refresh_below,
+                                 refresh_fraction=self.cfg.refresh_fraction,
+                                 progress=progress)
         return self
 
-    def _run_rounds(self, reps: int, new_from: int,
+    def refresh_reps(self, reps: int = 1, *,
+                     fraction: Optional[float] = None,
+                     progress: Optional[Callable[[int], None]] = None
+                     ) -> "GraphBuilder":
+        """Run ``reps`` staleness-repair repetitions over old-old windows.
+
+        Incremental ``extend()`` masks its rounds to new-vs-all pairs, so
+        pairs among points below the watermark (everything predating the
+        most recent extension) are only ever scored by the repetitions run
+        while one of them was new — after many extensions their edge set
+        goes stale relative to the evolved corpus.  A refresh repetition is
+        the exact inverse of an extension repetition: it sketches and
+        windows ALL current points with a fresh hash draw, then scores only
+        pairs whose endpoints BOTH predate the watermark, inside a
+        PRNG-sampled ``fraction`` of windows (``cfg.refresh_fraction`` by
+        default).  Each round samples windows independently, so the
+        probability a given old-old window has gone unrefreshed decays
+        geometrically — a *decaying rescore* that bounds staleness at a
+        small fraction of rebuild cost.  Runs through the same shared
+        scoring path as every other round (core/stars.py
+        ``_score_windows``), so mesh sessions stay edge-for-edge equal to
+        single-device ones, refresh rounds included.
+
+        Refresh work is visible in ``stats['refresh_reps']`` and
+        ``stats['refresh_comparisons']`` (also counted in the
+        ``comparisons`` total) and rides through checkpoints.
+        """
+        if self.cfg.source_name == "allpairs":
+            raise ValueError("the exact 'allpairs' source scores every "
+                             "pair once — it has no sampling staleness "
+                             "to refresh")
+        if self._refresh_below <= 0:
+            raise ValueError(
+                "nothing to refresh: no extend() has run, so no old-old "
+                "pair is masked out of the repetition stream yet")
+        fraction = (self.cfg.refresh_fraction if fraction is None
+                    else fraction)
+        if not 0.0 < fraction:
+            raise ValueError(f"refresh fraction must be positive: {fraction}")
+        self._run_rounds(reps, new_from=0,
+                         refresh_below=self._refresh_below,
+                         refresh_fraction=fraction, progress=progress)
+        return self
+
+    # Per-round counters are tiny device arrays, but a long-lived session
+    # pinning one dict per repetition (plus per-shard dropped arrays on a
+    # mesh) leaks device memory linearly in session length — so they are
+    # rolled up to host ints every K rounds.  K > 1 keeps a little async
+    # dispatch pipelining between the roll-up syncs.
+    COUNTER_ROLLUP_EVERY = 8
+
+    def _run_rounds(self, reps: int, new_from: int, *,
+                    refresh_below: int = 0, refresh_fraction: float = 1.0,
                     progress: Optional[Callable[[int], None]] = None) -> None:
         self._grow(self.n, self._reps_done + reps)
         for _ in range(reps):
             self._state, counters = self._backend.run_round(
-                self._state, self._reps_done, new_from)
+                self._state, self._reps_done, new_from,
+                refresh_below=refresh_below,
+                refresh_fraction=refresh_fraction)
+            if refresh_below > 0:
+                counters = dict(counters)
+                counters["refresh_comparisons"] = counters["comparisons"]
+                self._refresh_reps += 1
             self._counters.append(counters)
+            if len(self._counters) >= self.COUNTER_ROLLUP_EVERY:
+                self._roll_up_counters()
             if progress is not None:
                 progress(self._reps_done)
             self._reps_done += 1
@@ -609,7 +767,11 @@ class GraphBuilder:
             for key, val in counters.items():
                 totals[key] = totals.get(key, 0) + int(
                     np.sum(np.asarray(val, np.int64)))
+        # session-absolute values (NOT summable across roll-ups): overwrite
+        # whatever a previous roll-up or restored checkpoint left behind
         totals["reps"] = self._reps_done
+        totals["refresh_reps"] = self._refresh_reps
+        totals.setdefault("refresh_comparisons", 0)
         return totals
 
     def _roll_up_counters(self) -> Dict[str, int]:
@@ -628,7 +790,10 @@ class GraphBuilder:
         nbr, w = acc_lib.to_host(self._backend.trim(self._ensure_state()))
         return BuilderCheckpoint(
             n=self.n, capacity=self._capacity, reps_done=self._reps_done,
-            nbr=nbr, w=w, stats=self._roll_up_counters(), cfg=self.cfg)
+            nbr=nbr, w=w, stats=self._roll_up_counters(), cfg=self.cfg,
+            refresh_watermark=self._refresh_below,
+            refresh_reps=self._refresh_reps,
+            refresh_credit=self._refresh_credit)
 
     @classmethod
     def restore(cls, features: FeaturesLike, cfg: StarsConfig,
@@ -649,6 +814,9 @@ class GraphBuilder:
             acc_lib.from_host(ckpt.nbr, ckpt.w))
         builder._reps_done = ckpt.reps_done
         builder._stats_base = dict(ckpt.stats)
+        builder._refresh_below = ckpt.refresh_watermark
+        builder._refresh_reps = ckpt.refresh_reps
+        builder._refresh_credit = ckpt.refresh_credit
         return builder
 
     def finalize(self) -> Graph:

@@ -70,6 +70,23 @@ class StarsConfig:
                  docstring); disabled when bits == 0.
       score_chunk: windows scored per lax.map step (memory knob).
       seed:      root seed; every repetition folds its index into it.
+      refresh_fraction / refresh_rate: the session staleness-repair knobs
+                 (GraphBuilder.refresh_reps).  A *refresh repetition* masks
+                 its candidate stream to a PRNG-sampled ``refresh_fraction``
+                 of windows and to old-old pairs only (the inverse of the
+                 extension rounds' new-vs-all masking), re-touching the
+                 neighborhoods incremental extend() leaves stale.
+                 ``refresh_rate`` > 0 arms the automatic policy: every
+                 ``extend()`` banks ``reps * refresh_rate`` refresh credit
+                 and runs the whole-repetition part of it immediately after
+                 the extension rounds.  Because each refresh repetition
+                 samples windows independently, the probability an old-old
+                 window has not been rescored after t refresh repetitions
+                 decays as (1 - refresh_fraction)^t — staleness is bounded
+                 geometrically in session length, at a
+                 ``refresh_rate * refresh_fraction * old_fraction^2``
+                 fraction of a rebuild's scoring cost.  0 disables the
+                 automatic policy (manual ``refresh_reps()`` still works).
 
     The accumulator's slab capacity is derived from ``degree_cap`` (the
     paper's k=250); with ``degree_cap=None`` the worst-case per-node degree
@@ -93,6 +110,8 @@ class StarsConfig:
     seed: int = 0
     source: Optional[str] = None
     allpairs_block: int = 2048
+    refresh_fraction: float = 0.25
+    refresh_rate: float = 0.0
 
     @property
     def source_name(self) -> str:
@@ -154,8 +173,24 @@ def _score_tile(measure_fn, features: PointFeatures,
     return measure_fn(fa, fb)
 
 
+def _refresh_window_sample(k_refresh: jax.Array, nw: int,
+                           fraction: float) -> jax.Array:
+    """(nw,) bool: the PRNG-sampled window subset one refresh round rescores.
+
+    Drawn from the per-repetition ``k_refresh`` stream (``_rep_keys``), so
+    the single-device and mesh backends sample identical windows — the
+    refresh analogue of the shared leader draw.  ``fraction >= 1.0`` keeps
+    every window (uniform draws live in [0, 1)), which makes a
+    full-fraction refresh round the exact complement of an extension round
+    over the same windows.
+    """
+    return jax.random.uniform(k_refresh, (nw,)) < fraction
+
+
 def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
-                   prefilter, win, *, new_from: int = 0):
+                   prefilter, win, *, new_from: int = 0,
+                   refresh_below: int = 0, refresh_fraction: float = 1.0,
+                   k_refresh: Optional[jax.Array] = None):
     """Stars 1 scoring: every member compares to its bucket's leader only.
 
     O(n) comparisons per repetition — the paper's quadratic->linear win.
@@ -169,9 +204,15 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
     locality-driven repair rule of Cluster-and-Conquer-style builders.
     Untouched buckets (the vast majority for a small insertion) are still
     skipped entirely.
+
+    ``refresh_below`` > 0 is the staleness-repair inverse (see
+    :func:`_score_windows`): only pairs with BOTH endpoints below the
+    watermark, in a ``refresh_fraction`` window sample drawn from
+    ``k_refresh``, are scored.
     """
     nw, w_sz = win.gid.shape
     use_pref = cfg.hamming_prefilter_bits > 0
+    refresh = refresh_below > 0
 
     chunk = max(1, min(cfg.score_chunk * 8, nw))
     nw_pad = ((nw + chunk - 1) // chunk) * chunk
@@ -180,10 +221,16 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
     gid = pad_w(win.gid)
     valid = pad_w(win.valid)
     bucket = pad_w(win.bucket)
+    if refresh:
+        keep_win = pad_w(_refresh_window_sample(k_refresh, nw,
+                                                refresh_fraction))
     resh = lambda x: x.reshape((nw_pad // chunk, chunk) + x.shape[1:])
 
     def score_chunk(args):
-        gid_c, valid_c, bucket_c = args                   # (chunk, W)
+        if refresh:
+            gid_c, valid_c, bucket_c, keep_c = args       # (chunk, W)
+        else:
+            gid_c, valid_c, bucket_c = args               # (chunk, W)
         prev = jnp.concatenate(
             [jnp.zeros_like(bucket_c[:, :1]) ^ jnp.uint32(0xA5A5A5A5),
              bucket_c[:, :-1]], axis=1)
@@ -203,6 +250,9 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
             seg_new = jnp.zeros((gid_c.shape[0], w_sz + 1), jnp.int32)
             seg_new = seg_new.at[rows_c, seg].max(is_new.astype(jnp.int32))
             mask &= jnp.take_along_axis(seg_new, seg, axis=1) > 0
+        if refresh:
+            rb = jnp.int32(refresh_below)
+            mask &= keep_c[:, None] & (head_gid < rb) & (gid_c < rb)
         pref_ops = jnp.zeros((), jnp.int32)
         if use_pref:
             pref_ops = jnp.sum(mask).astype(jnp.int32)
@@ -220,33 +270,50 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
         emit = mask
         if cfg.r1 is not None:
             emit &= sims > cfg.r1
+        # per-chunk int32 like 'comparisons': summed on host as int64 so
+        # tera-scale emit counts never overflow a device integer
+        emitted = jnp.sum(emit).astype(jnp.int32)
         return (head_gid.reshape(-1), gid_c.reshape(-1),
-                sims.reshape(-1), emit.reshape(-1), comparisons, pref_ops)
+                sims.reshape(-1), emit.reshape(-1), comparisons, emitted,
+                pref_ops)
 
-    outs = jax.lax.map(score_chunk, (resh(gid), resh(valid), resh(bucket)))
-    src, dst, wts, emit, comp_chunks, pref_chunks = outs
+    operands = (resh(gid), resh(valid), resh(bucket))
+    if refresh:
+        operands += (resh(keep_win),)
+    outs = jax.lax.map(score_chunk, operands)
+    src, dst, wts, emit, comp_chunks, emit_chunks, pref_chunks = outs
     src, dst, wts, emit = (x.reshape(-1) for x in (src, dst, wts, emit))
     return dict(src=src, dst=dst, w=wts, emit=emit,
-                emitted=jnp.sum(emit),
+                emitted=emit_chunks,
                 comparisons=comp_chunks, prefilter_ops=pref_chunks)
 
 
 def _rep_keys(cfg: StarsConfig, rep_index: jax.Array):
     """The per-repetition PRNG keys, derived ONCE here so the single-device
-    and mesh paths draw identical randomness: (k_tie, k_shift, k_lead)."""
+    and mesh paths draw identical randomness:
+    (k_tie, k_shift, k_lead, k_refresh).
+
+    ``k_refresh`` (the refresh-round window sample) is folded in with a
+    fixed stream id rather than widening the split, so the first three
+    draws — and with them every pre-refresh build — stay bit-identical.
+    """
     key = jax.random.fold_in(jax.random.key(cfg.seed), rep_index)
-    return jax.random.split(key, 3)
+    k_tie, k_shift, k_lead = jax.random.split(key, 3)
+    k_refresh = jax.random.fold_in(key, 0x5EF5)
+    return k_tie, k_shift, k_lead, k_refresh
 
 
 def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
                     measure_fn, prefilter, rep_index: jax.Array, *,
-                    new_from: int = 0):
+                    new_from: int = 0, refresh_below: int = 0,
+                    refresh_fraction: float = 1.0):
     """One repetition: sketch, window, score; returns the candidate stream.
 
     Returns dict with the full fixed-shape 'src','dst','w' stream plus its
     'emit' mask (the accumulator consumes the stream masked, so no device
-    compaction is needed), per-chunk 'comparisons' / 'prefilter_ops' int32
-    counts, and the scalar 'emitted'.
+    compaction is needed), and per-chunk 'comparisons' / 'emitted' /
+    'prefilter_ops' int32 counts (summed on host as int64 — a tera-scale
+    build overflows any full-stream device int32 sum).
 
     ``new_from`` > 0 masks out pairs whose endpoints BOTH predate an
     incremental extension (gid < new_from): old-old edges are already in the
@@ -255,9 +322,15 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
     LSH-Stars path rescores whole touched sub-buckets instead (see
     ``_rep_lsh_stars``).  The mask is applied before the comparison
     counters, so `stats['comparisons']` reflects the saving.
+
+    ``refresh_below`` > 0 selects the inverse mask — only OLD-OLD pairs
+    (both gids below the watermark), within a ``refresh_fraction`` sample
+    of windows — for the staleness-repair rounds of
+    ``GraphBuilder.refresh_reps``.  The two masks are mutually exclusive
+    per round.
     """
     rep_seed = jnp.asarray(rep_index, jnp.uint32) ^ jnp.uint32(cfg.seed)
-    k_tie, k_shift, k_lead = _rep_keys(cfg, rep_index)
+    k_tie, k_shift, k_lead, k_refresh = _rep_keys(cfg, rep_index)
 
     words = lsh_lib.sketch(features, cfg.family, rep_seed=rep_seed)
     n = words.shape[0]
@@ -273,22 +346,32 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
         raise ValueError(f"unknown mode {cfg.mode!r}")
 
     return _score_windows(cfg, features, measure_fn, prefilter, win, k_lead,
-                          new_from=new_from)
+                          new_from=new_from, refresh_below=refresh_below,
+                          refresh_fraction=refresh_fraction,
+                          k_refresh=k_refresh)
 
 
 def _score_windows(cfg: StarsConfig, features: PointFeatures,
                    measure_fn, prefilter, win: win_lib.Windows,
-                   k_lead: jax.Array, *, new_from: int = 0):
+                   k_lead: jax.Array, *, new_from: int = 0,
+                   refresh_below: int = 0, refresh_fraction: float = 1.0,
+                   k_refresh: Optional[jax.Array] = None):
     """Score one repetition's windows into a masked candidate stream.
 
     The scoring half of :func:`_rep_candidates`, factored out so the mesh
     backend (core/builder.py ``_MeshBackend``) can feed it windows built
     from the *distributed* sort permutation: given identical ``win`` /
-    ``k_lead`` inputs the emitted stream — gids, float weights, masks and
-    comparison counts — is identical to the single-device path, which is
-    what makes mesh builds edge-for-edge equal (tests/test_mesh_parity.py).
+    ``k_lead`` / ``k_refresh`` inputs the emitted stream — gids, float
+    weights, masks and comparison counts — is identical to the
+    single-device path, which is what makes mesh builds edge-for-edge
+    equal (tests/test_mesh_parity.py), refresh rounds included.
     ``features`` may be a padded table (extra rows are never addressed:
     every gid in a valid window slot is a real point).
+
+    ``refresh_below`` > 0 masks to OLD-OLD pairs (both gids < watermark)
+    inside a ``refresh_fraction`` PRNG sample of windows — the exact
+    inverse of the ``new_from`` extension mask, shared by both backends
+    through this one function (see GraphBuilder.refresh_reps).
     """
     nw, w_sz = win.gid.shape
     if cfg.mode == "lsh" and cfg.scoring == "stars":
@@ -298,7 +381,10 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
         # run IS a uniform random leader.  Window-initial slots start a new
         # run (= the paper's random sub-bucket split at the size cap).
         return _rep_lsh_stars(cfg, features, measure_fn, prefilter, win,
-                              new_from=new_from)
+                              new_from=new_from,
+                              refresh_below=refresh_below,
+                              refresh_fraction=refresh_fraction,
+                              k_refresh=k_refresh)
     if cfg.scoring == "stars":
         leader_slot, leader_ok = win_lib.sample_leaders(
             win, s=cfg.leaders, key=k_lead)
@@ -320,6 +406,10 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
     bucket_w = pad_w(win.bucket)
     leader_slot = pad_w(leader_slot)
     leader_ok = pad_w(leader_ok)
+    refresh = refresh_below > 0
+    if refresh:
+        keep_win = pad_w(_refresh_window_sample(k_refresh, nw,
+                                                refresh_fraction))
 
     resh = lambda x: x.reshape((nw_pad // chunk, chunk) + x.shape[1:])
     same_bucket_mode = cfg.mode == "lsh"
@@ -327,7 +417,10 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
     use_pref = cfg.hamming_prefilter_bits > 0
 
     def score_chunk(args):
-        gid_c, valid_c, bucket_c, lslot_c, lok_c = args
+        if refresh:
+            gid_c, valid_c, bucket_c, lslot_c, lok_c, keep_c = args
+        else:
+            gid_c, valid_c, bucket_c, lslot_c, lok_c = args
         lead_gid = jnp.take_along_axis(gid_c, lslot_c, axis=1)
         lead_bucket = jnp.take_along_axis(bucket_c, lslot_c, axis=1)
         mask = (lok_c[:, :, None] & valid_c[:, None, :])
@@ -342,6 +435,10 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
         if new_from > 0:
             nf = jnp.int32(new_from)
             mask &= (lead_gid[:, :, None] >= nf) | (gid_c[:, None, :] >= nf)
+        if refresh:
+            rb = jnp.int32(refresh_below)
+            mask &= keep_c[:, None, None]
+            mask &= (lead_gid[:, :, None] < rb) & (gid_c[:, None, :] < rb)
         pref_ops = jnp.zeros((), jnp.int32)
         if use_pref:
             pref_ops = jnp.sum(mask).astype(jnp.int32)
@@ -352,25 +449,28 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
         sims = _score_tile(measure_fn, features, lead_gid, gid_c,
                            measure_name=cfg.measure)
         # Per-chunk int32 counts; summed on host as Python ints so tera-scale
-        # comparison counts never overflow a device integer.
+        # comparison/emit counts never overflow a device integer.
         comparisons = jnp.sum(mask).astype(jnp.int32)
         emit = mask
         if cfg.r1 is not None:
             emit &= sims > cfg.r1
+        emitted = jnp.sum(emit).astype(jnp.int32)
         src = jnp.broadcast_to(lead_gid[:, :, None], sims.shape)
         dst = jnp.broadcast_to(gid_c[:, None, :], sims.shape)
         return (src.reshape(-1), dst.reshape(-1),
                 sims.reshape(-1).astype(jnp.float32), emit.reshape(-1),
-                comparisons, pref_ops)
+                comparisons, emitted, pref_ops)
 
-    outs = jax.lax.map(score_chunk,
-                       (resh(gid), resh(valid), resh(bucket_w),
-                        resh(leader_slot), resh(leader_ok)))
-    src, dst, wts, emit, comp_chunks, pref_chunks = outs
+    operands = (resh(gid), resh(valid), resh(bucket_w),
+                resh(leader_slot), resh(leader_ok))
+    if refresh:
+        operands += (resh(keep_win),)
+    outs = jax.lax.map(score_chunk, operands)
+    src, dst, wts, emit, comp_chunks, emit_chunks, pref_chunks = outs
 
     src, dst, wts, emit = (x.reshape(-1) for x in (src, dst, wts, emit))
     return dict(src=src, dst=dst, w=wts, emit=emit,
-                emitted=jnp.sum(emit),
+                emitted=emit_chunks,
                 comparisons=comp_chunks, prefilter_ops=pref_chunks)
 
 

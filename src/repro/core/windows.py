@@ -145,4 +145,8 @@ def sample_leaders(windows: Windows, *, s: int,
     pri = jax.random.uniform(key, (nw, w))
     pri = jnp.where(windows.valid, pri, -1.0)
     vals, slots = jax.lax.top_k(pri, s)
-    return slots.astype(jnp.int32), vals > 0.0
+    # valid slots carry uniform draws in [0, 1), invalid slots exactly -1.0:
+    # a draw of exactly 0.0 is a VALID leader, so the boundary is inclusive
+    # (`> 0.0` silently disabled that leader and could under-fill a window
+    # with >= s valid members)
+    return slots.astype(jnp.int32), vals >= 0.0

@@ -173,6 +173,160 @@ def test_mesh_extend_recall_parity_vs_rebuild():
     assert res["ext_comps"] < 0.6 * res["full_comps"], res
 
 
+@pytest.mark.parametrize("devices", [2, 4])
+def test_mesh_refresh_rounds_edge_for_edge_equal(devices):
+    """Staleness-repair rounds (GraphBuilder.refresh_reps + the automatic
+    cfg.refresh_rate policy) run through the shared scoring path, so a
+    session interleaving extend(), auto-refresh and manual refresh rounds
+    stays edge-for-edge identical between the mesh and single-device
+    backends — including the refresh counters."""
+    res = _run_sub(_COMMON + f"""
+        feats, _ = mnist_like_points(n=600, d=24, classes=6, spread=0.25,
+                                     seed=0)
+        n0 = 487                    # not divisible by any mesh size
+        cfg = StarsConfig(mode="sorting", scoring="stars",
+                          family=HashFamilyConfig("simhash", m=16),
+                          measure="cosine", r=4, window=64, leaders=8,
+                          degree_cap=20, seed=3,
+                          refresh_rate=0.5, refresh_fraction=0.5)
+        mesh = jax.make_mesh(({devices},), ("data",))
+        old = feats.take(np.arange(n0))
+        new = feats.take(np.arange(n0, 600))
+
+        b1 = GraphBuilder(old, cfg).add_reps(4)
+        b1.extend(new, reps=4)                     # + 2 auto refresh reps
+        b1.refresh_reps(2, fraction=0.7)           # + 2 manual ones
+        g1 = b1.finalize()
+        b2 = GraphBuilder(np.asarray(old.dense), cfg, mesh=mesh).add_reps(4)
+        b2.extend(np.asarray(new.dense), reps=4)
+        b2.refresh_reps(2, fraction=0.7)
+        g2 = b2.finalize()
+        print(json.dumps({{
+            "edges_equal": edges(g1) == edges(g2),
+            "n_edges": g2.num_edges,
+            "comp_single": g1.stats["comparisons"],
+            "comp_mesh": g2.stats["comparisons"],
+            "rreps_single": g1.stats["refresh_reps"],
+            "rreps_mesh": g2.stats["refresh_reps"],
+            "rcomp_single": g1.stats["refresh_comparisons"],
+            "rcomp_mesh": g2.stats["refresh_comparisons"],
+            "dropped": int(g2.stats["dropped"]),
+        }}))
+    """, devices)
+    assert res["edges_equal"], res
+    assert res["n_edges"] > 0
+    assert res["comp_single"] == res["comp_mesh"]
+    assert res["rreps_single"] == res["rreps_mesh"] == 4
+    assert res["rcomp_single"] == res["rcomp_mesh"] > 0
+    assert res["dropped"] == 0
+
+
+def test_mesh_refresh_checkpoint_bit_exact_across_reshard():
+    """A checkpoint taken AFTER refresh rounds (watermark, refresh counters
+    and fractional auto-refresh credit included) restores bit-exactly onto
+    a different mesh size or a single device, and the resumed session's
+    further refresh rounds reproduce the uncheckpointed build exactly."""
+    res = _run_sub(_COMMON + """
+        feats, _ = mnist_like_points(n=602, d=24, classes=6, spread=0.25,
+                                     seed=1)
+        cfg = StarsConfig(mode="sorting", scoring="stars",
+                          family=HashFamilyConfig("simhash", m=16),
+                          measure="cosine", r=4, window=64, leaders=8,
+                          degree_cap=20, seed=5,
+                          refresh_rate=0.3, refresh_fraction=0.5)
+        dense = np.asarray(feats.dense)
+        mesh4 = jax.make_mesh((4,), ("data",))
+        mesh2 = jax.make_mesh((2,), ("data",), devices=jax.devices()[:2])
+
+        b = GraphBuilder(dense[:500], cfg, mesh=mesh4).add_reps(3)
+        b.extend(dense[500:], reps=2)        # banks 0.6 refresh credit
+        b.refresh_reps(1)
+        ck = b.checkpoint()
+        def finish(bb):
+            bb.refresh_reps(2, fraction=0.8)
+            return bb.add_reps(2).finalize()
+        g_straight = finish(b)
+        g_mesh2 = finish(GraphBuilder.restore(dense, cfg, ck, mesh=mesh2))
+        g_single = finish(GraphBuilder.restore(feats, cfg, ck))
+        rt = GraphBuilder.restore(dense, cfg, ck, mesh=mesh2).checkpoint()
+        print(json.dumps({
+            "wm": ck.refresh_watermark,
+            "credit": ck.refresh_credit,
+            "rreps": ck.refresh_reps,
+            "mesh2_equal": edges(g_straight) == edges(g_mesh2),
+            "single_equal": edges(g_straight) == edges(g_single),
+            "stats_equal": g_straight.stats == g_mesh2.stats == g_single.stats,
+            "roundtrip_bit_exact":
+                bool(np.array_equal(rt.nbr, ck.nbr)
+                     and np.array_equal(rt.w, ck.w)
+                     and rt.refresh_watermark == ck.refresh_watermark
+                     and rt.refresh_reps == ck.refresh_reps
+                     and rt.refresh_credit == ck.refresh_credit),
+        }))
+    """, 4)
+    assert res["wm"] == 500
+    assert abs(res["credit"] - 0.6) < 1e-9
+    assert res["rreps"] == 1
+    assert res["mesh2_equal"]
+    assert res["single_equal"]
+    assert res["stats_equal"]
+    assert res["roundtrip_bit_exact"]
+
+
+@pytest.mark.long
+def test_mesh_long_session_refresh_bounds_staleness():
+    """The staleness acceptance bound on the MESH backend (mirror of
+    tests/test_refresh.py::test_long_session_refresh_bounds_staleness):
+    a 5-extension stream with auto-refresh stays within 3% two-hop recall
+    of a from-scratch mesh rebuild at comparable comparisons, while the
+    same stream without refresh degrades past that bar."""
+    res = _run_sub(_COMMON + """
+        import dataclasses
+        from repro.graph import neighbor_recall
+        feats, _ = mnist_like_points(n=1200, d=32, classes=8, spread=0.15,
+                                     seed=3)
+        n, b0, bs, rb = 1200, 200, 200, 4
+        cfg = StarsConfig(mode="sorting", scoring="stars",
+                          family=HashFamilyConfig("simhash", m=24),
+                          measure="cosine", r=rb, window=40, leaders=6,
+                          degree_cap=30, seed=2)
+        mesh = jax.make_mesh((2,), ("data",))
+        dense = np.asarray(feats.dense)
+
+        def stream(c):
+            b = GraphBuilder(dense[:b0], c, mesh=mesh).add_reps(rb)
+            for s in range(b0, n, bs):
+                b.extend(dense[s:s + bs], reps=rb)
+            return b.finalize()
+
+        g_nr = stream(cfg)
+        g_rf = stream(dataclasses.replace(cfg, refresh_rate=0.5,
+                                          refresh_fraction=0.5))
+        g_rb = GraphBuilder(dense, cfg, mesh=mesh).add_reps(9).finalize()
+
+        xn = dense / np.linalg.norm(dense, axis=1, keepdims=True)
+        sims = xn @ xn.T
+        np.fill_diagonal(sims, -np.inf)
+        queries = np.arange(0, n, 5)
+        truth = [np.argsort(-sims[q])[:10] for q in queries]
+        rec = {name: neighbor_recall(g, queries, truth, hops=2, k_cap=10)
+               for name, g in (("none", g_nr), ("refresh", g_rf),
+                               ("rebuild", g_rb))}
+        print(json.dumps({
+            "rec": rec,
+            "comp_ratio": g_rb.stats["comparisons"]
+                / g_rf.stats["comparisons"],
+            "refresh_reps": g_rf.stats["refresh_reps"],
+        }))
+    """, 2, timeout=1500)
+    assert 0.8 < res["comp_ratio"] < 1.25
+    assert res["refresh_reps"] == 10
+    rec = res["rec"]
+    assert rec["refresh"] > rec["rebuild"] - 0.03, rec
+    assert rec["none"] < rec["rebuild"] - 0.03, rec
+    assert rec["refresh"] > rec["none"] + 0.02, rec
+
+
 def test_mesh_checkpoint_restore_bit_exact_across_reshard():
     """A checkpoint holds the UNPADDED (n, k) slab image: restoring it on
     a different mesh size (p=4 -> p=2) or a single device and finishing

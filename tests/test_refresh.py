@@ -1,0 +1,346 @@
+"""Staleness repair (GraphBuilder.refresh_reps) + the PR's correctness sweep.
+
+Covered here:
+  * mask correctness: a refresh round emits ONLY old-old pairs, and at
+    fraction=1.0 the extension mask and the refresh mask exactly partition
+    a full repetition's candidate stream (sorting; the single-leader
+    LSH-Stars path instead rescores whole touched stars, so its extension
+    and refresh streams overlap but still union to the full stream),
+  * the automatic decaying-rescore policy (cfg.refresh_rate credit
+    accounting) and its guards (refresh before extend, exact 'allpairs'),
+  * checkpoint-after-refresh restores bit-exactly (watermark, refresh
+    counters and fractional auto-refresh credit ride along),
+  * the long-session acceptance bound: a >= 5-extension stream with
+    refresh stays within 3% two-hop recall of a from-scratch rebuild at
+    comparable total comparisons, while the identical stream without
+    refresh measurably degrades (tests/test_mesh_parity.py runs the same
+    scenario on the mesh backend),
+  * regression tests for the correctness sweep: the zero-priority leader
+    draw (windows.sample_leaders) and the per-chunk host-summed 'emitted'
+    counter (core/stars.py).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, HashFamilyConfig, StarsConfig
+from repro.core import windows as win_lib
+from repro.core.stars import _rep_candidates
+from repro.data import mnist_like_points
+from repro.graph import neighbor_recall
+from repro.similarity.measures import pairwise_similarity
+
+
+def _edges(g):
+    return {(int(s), int(d)): float(w)
+            for s, d, w in zip(g.src, g.dst, g.w)}
+
+
+def _small():
+    return mnist_like_points(n=600, d=24, classes=6, spread=0.25, seed=0)
+
+
+def _cfg(**kw):
+    base = dict(mode="sorting", scoring="stars",
+                family=HashFamilyConfig("simhash", m=16),
+                measure="cosine", r=4, window=64, leaders=8,
+                degree_cap=20, seed=3)
+    base.update(kw)
+    return StarsConfig(**base)
+
+
+# --------------------------------------------------------------------------- #
+# Correctness sweep regressions
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.fast
+def test_zero_priority_leader_draw_is_valid(monkeypatch):
+    """A uniform draw of exactly 0.0 is a VALID leader priority: invalid
+    slots carry -1.0, so the ok-boundary must be inclusive.  The old
+    ``vals > 0.0`` silently disabled such leaders (under-filling windows
+    with >= s valid members); forcing every draw to the boundary value
+    makes the regression deterministic."""
+    gid = jnp.array([[0, 1, 2, 3], [4, 5, -1, -1]], jnp.int32)
+    win = win_lib.Windows(gid=gid, valid=gid >= 0,
+                          bucket=jnp.zeros((2, 4), jnp.uint32))
+    monkeypatch.setattr(jax.random, "uniform",
+                        lambda key, shape: jnp.zeros(shape))
+    slots, ok = win_lib.sample_leaders(win, s=3, key=jax.random.key(0))
+    # window 0 has 4 valid members: all 3 leader slots must be enabled
+    assert bool(ok[0].all()), ok
+    # window 1 has only 2: exactly the excess slot is disabled
+    assert [bool(v) for v in ok[1]] == [True, True, False]
+    # every enabled leader slot points at a valid member
+    assert bool(win.valid[jnp.arange(2)[:, None], slots][ok].all())
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("mode,scoring,window,m,r1",
+                         [("sorting", "stars", 64, 16, 0.2),
+                          ("lsh", "stars", 128, 8, 0.5)])
+def test_emitted_counter_is_per_chunk(mode, scoring, window, m, r1):
+    """'emitted' follows the same per-chunk-int32 / host-int64 policy as
+    'comparisons' — a tera-scale build overflows any full-stream device
+    int32 sum.  The per-chunk counts must total exactly the emit mask."""
+    feats, _ = _small()
+    cfg = _cfg(mode=mode, scoring=scoring, window=window, r1=r1,
+               family=HashFamilyConfig("simhash", m=m))
+    measure_fn = pairwise_similarity(cfg.measure)
+    out = _rep_candidates(cfg, feats, measure_fn, None, jnp.int32(1))
+    assert out["emitted"].ndim >= 1, "emitted must be per-chunk, not scalar"
+    assert out["emitted"].shape == out["comparisons"].shape
+    assert out["emitted"].dtype == jnp.int32
+    total = int(np.sum(np.asarray(out["emitted"], np.int64)))
+    assert total == int(np.asarray(out["emit"]).sum())
+    # r1 thresholding makes emitted a strict subset of comparisons here
+    comps = int(np.sum(np.asarray(out["comparisons"], np.int64)))
+    assert 0 < total < comps
+
+
+@pytest.mark.fast
+def test_counter_rollup_keeps_merged_stats_identical():
+    """Counters roll up to host ints every K rounds (a thousand-rep session
+    must not pin one device-array dict per repetition); totals are
+    identical to never rolling up, at every point in the session."""
+    feats, _ = _small()
+    cfg = _cfg(refresh_rate=0.5, refresh_fraction=0.5)
+    old, new = feats.take(np.arange(400)), feats.take(np.arange(400, 600))
+
+    eager = GraphBuilder(old, cfg)
+    eager.COUNTER_ROLLUP_EVERY = 1
+    lazy = GraphBuilder(old, cfg)
+    lazy.COUNTER_ROLLUP_EVERY = 10 ** 9
+    for b in (eager, lazy):
+        b.add_reps(4).extend(new, reps=4)     # + 2 auto refresh rounds
+        b.refresh_reps(1, fraction=0.7)
+    assert len(eager._counters) == 0          # everything rolled to host
+    assert len(lazy._counters) == 11
+    assert eager._merged_stats() == lazy._merged_stats()
+    g_e, g_l = eager.finalize(), lazy.finalize()
+    assert _edges(g_e) == _edges(g_l)
+    assert g_e.stats == g_l.stats
+
+
+# --------------------------------------------------------------------------- #
+# Refresh mask correctness
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("scoring", ["stars", "allpairs"])
+def test_refresh_mask_partitions_full_stream_sorting(scoring):
+    """For the multi-leader windowed sources the refresh mask is the EXACT
+    inverse of the extension mask: at fraction=1.0 the two masked streams
+    partition the full repetition's stream (same windows, same leaders —
+    the per-rep PRNG draws are shared), and no refresh pair ever touches a
+    new point."""
+    feats, _ = _small()
+    cfg = _cfg(scoring=scoring, window=64)
+    measure_fn = pairwise_similarity(cfg.measure)
+    wm = 400
+    rep = jnp.int32(2)
+    full = _rep_candidates(cfg, feats, measure_fn, None, rep)
+    ext = _rep_candidates(cfg, feats, measure_fn, None, rep, new_from=wm)
+    ref = _rep_candidates(cfg, feats, measure_fn, None, rep,
+                          refresh_below=wm, refresh_fraction=1.0)
+    # identical fixed-shape streams: masks are comparable element-wise
+    np.testing.assert_array_equal(full["src"], ext["src"])
+    np.testing.assert_array_equal(full["src"], ref["src"])
+    e_full, e_ext, e_ref = (np.asarray(x["emit"]) for x in (full, ext, ref))
+    assert not (e_ext & e_ref).any(), "extension/refresh masks overlap"
+    np.testing.assert_array_equal(e_ext | e_ref, e_full)
+    # refresh emits old-old only (never new-new or new-old)
+    src, dst = np.asarray(ref["src"]), np.asarray(ref["dst"])
+    assert (src[e_ref] < wm).all() and (dst[e_ref] < wm).all()
+
+    # a sampled fraction is a window-subset of the full refresh stream
+    samp = _rep_candidates(cfg, feats, measure_fn, None, rep,
+                           refresh_below=wm, refresh_fraction=0.5)
+    e_samp = np.asarray(samp["emit"])
+    assert e_samp.sum() > 0
+    assert e_samp.sum() < e_ref.sum()
+    assert not (e_samp & ~e_ref).any()
+
+
+@pytest.mark.fast
+def test_refresh_mask_lsh_stars_old_old_only():
+    """The single-leader LSH-Stars extension rule rescores whole touched
+    stars (old-old pairs included), so extension and refresh streams may
+    overlap — but their union still covers the full stream and the
+    refresh side remains strictly old-old."""
+    feats, _ = _small()
+    cfg = _cfg(mode="lsh", family=HashFamilyConfig("simhash", m=8),
+               window=128)
+    measure_fn = pairwise_similarity(cfg.measure)
+    wm = 400
+    rep = jnp.int32(2)
+    full = _rep_candidates(cfg, feats, measure_fn, None, rep)
+    ext = _rep_candidates(cfg, feats, measure_fn, None, rep, new_from=wm)
+    ref = _rep_candidates(cfg, feats, measure_fn, None, rep,
+                          refresh_below=wm, refresh_fraction=1.0)
+    e_full, e_ext, e_ref = (np.asarray(x["emit"]) for x in (full, ext, ref))
+    np.testing.assert_array_equal(e_ext | e_ref, e_full)
+    src, dst = np.asarray(ref["src"]), np.asarray(ref["dst"])
+    assert (src[e_ref] < wm).all() and (dst[e_ref] < wm).all()
+    # the extension side does rescore some old-old pairs (touched stars) —
+    # that overlap is the documented Stars-1 locality rule, not a bug
+    assert e_ext.sum() + e_ref.sum() >= e_full.sum()
+
+
+@pytest.mark.fast
+def test_refresh_guards():
+    feats, _ = _small()
+    builder = GraphBuilder(feats.take(np.arange(400)), _cfg()).add_reps(2)
+    with pytest.raises(ValueError):
+        builder.refresh_reps(1)               # nothing extended yet
+    builder.extend(feats.take(np.arange(400, 600)), reps=2)
+    with pytest.raises(ValueError):
+        builder.refresh_reps(1, fraction=0.0)
+    builder.refresh_reps(1)                   # now legal
+
+    apcfg = StarsConfig(source="allpairs", measure="cosine", degree_cap=10,
+                        allpairs_block=256)
+    ap = GraphBuilder(feats.take(np.arange(400)), apcfg).add_reps(1)
+    ap.extend(feats.take(np.arange(400, 600)))
+    with pytest.raises(ValueError):
+        ap.refresh_reps(1)                    # exact source: no staleness
+
+    # an armed auto policy with an empty window sample would silently burn
+    # full rounds repairing nothing: rejected at session construction
+    with pytest.raises(ValueError):
+        GraphBuilder(feats, _cfg(refresh_rate=0.5, refresh_fraction=0.0))
+    with pytest.raises(ValueError):
+        GraphBuilder(feats, _cfg(refresh_rate=-0.1))
+
+
+@pytest.mark.fast
+def test_auto_refresh_policy_banks_fractional_credit():
+    """cfg.refresh_rate arms the decaying rescore: every extend() banks
+    reps * rate credit and immediately runs the whole-repetition part."""
+    feats, _ = _small()
+    cfg = _cfg(refresh_rate=0.3, refresh_fraction=0.5)
+    b = GraphBuilder(feats.take(np.arange(300)), cfg).add_reps(2)
+    assert b.refresh_watermark == 0
+    b.extend(feats.take(np.arange(300, 400)), reps=2)   # credit 0.6
+    assert b.refresh_watermark == 300
+    assert b._refresh_reps == 0 and b._refresh_credit == pytest.approx(0.6)
+    b.extend(feats.take(np.arange(400, 500)), reps=2)   # credit 1.2 -> 1 rep
+    assert b.refresh_watermark == 400
+    assert b._refresh_reps == 1 and b._refresh_credit == pytest.approx(0.2)
+    g = b.finalize()
+    assert g.stats["refresh_reps"] == 1
+    assert g.stats["refresh_comparisons"] > 0
+    assert g.stats["reps"] == 7                          # 2 + 2 + 2 + 1
+
+    # rate=0 (the default) never auto-refreshes
+    b0 = GraphBuilder(feats.take(np.arange(300)), _cfg()).add_reps(2)
+    b0.extend(feats.take(np.arange(300, 500)), reps=2)
+    assert b0.finalize().stats["refresh_reps"] == 0
+
+
+@pytest.mark.fast
+def test_checkpoint_after_refresh_bit_exact():
+    """Checkpointing a refreshed session and resuming is bit-identical to
+    never checkpointing: the watermark, refresh counters AND the
+    fractional auto-refresh credit ride through BuilderCheckpoint."""
+    feats, _ = _small()
+    cfg = _cfg(refresh_rate=0.3, refresh_fraction=0.5)
+    b1, b2 = feats.take(np.arange(400, 500)), feats.take(np.arange(500, 600))
+
+    def session():
+        return (GraphBuilder(feats.take(np.arange(400)), cfg)
+                .add_reps(3).extend(b1, reps=2))        # credit 0.6 banked
+
+    straight = session()
+    ck = session().checkpoint()
+    assert ck.refresh_watermark == 400
+    assert ck.refresh_credit == pytest.approx(0.6)
+    assert ck.refresh_reps == 0
+    resumed = GraphBuilder.restore(feats.take(np.arange(500)), cfg, ck)
+    assert resumed.refresh_watermark == 400
+
+    for b in (straight, resumed):
+        b.extend(b2, reps=2)              # credit 1.2 -> 1 auto refresh rep
+        b.refresh_reps(1, fraction=0.7)   # + a manual one
+    g_s, g_r = straight.finalize(), resumed.finalize()
+    assert _edges(g_s) == _edges(g_r)
+    assert g_s.stats == g_r.stats
+    assert g_s.stats["refresh_reps"] == 2
+
+    # a refreshed checkpoint round-trips bit-exactly through restore
+    rt = GraphBuilder.restore(feats.take(np.arange(500)), cfg, ck).checkpoint()
+    np.testing.assert_array_equal(rt.nbr, ck.nbr)
+    np.testing.assert_array_equal(rt.w, ck.w)
+    assert (rt.refresh_watermark, rt.refresh_reps, rt.refresh_credit) == \
+        (ck.refresh_watermark, ck.refresh_reps, ck.refresh_credit)
+
+
+@pytest.mark.fast
+def test_refresh_rounds_preserve_wrapper_stats_schema():
+    """Sessions that never refresh keep reporting the same stats dict as
+    the deprecated wrappers (refresh_* keys present, zero)."""
+    from repro.core import build_graph
+    feats, _ = _small()
+    cfg = _cfg()
+    g = build_graph(feats, cfg)
+    assert g.stats["refresh_reps"] == 0
+    assert g.stats["refresh_comparisons"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# The long-session staleness bound (the bug this PR fixes)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.long
+def test_long_session_refresh_bounds_staleness():
+    """Acceptance: across 5 sequential extend() batches, the auto-refreshed
+    stream stays within 3% two-hop recall of a from-scratch rebuild at
+    comparable total comparisons, while the SAME stream without refresh
+    degrades by more than 3% — the old-old staleness bug being fixed.
+    tests/test_mesh_parity.py runs this scenario on the mesh backend."""
+    feats, _ = mnist_like_points(n=1200, d=32, classes=8, spread=0.15,
+                                 seed=3)
+    n, b0, bs, rb = 1200, 200, 200, 4
+    cfg = StarsConfig(mode="sorting", scoring="stars",
+                      family=HashFamilyConfig("simhash", m=24),
+                      measure="cosine", r=rb, window=40, leaders=6,
+                      degree_cap=30, seed=2)
+
+    def stream(c):
+        b = GraphBuilder(feats.take(np.arange(b0)), c).add_reps(rb)
+        for s in range(b0, n, bs):
+            b.extend(feats.take(np.arange(s, s + bs)), reps=rb)
+        return b.finalize()
+
+    g_nr = stream(cfg)                                   # the buggy regime
+    g_rf = stream(dataclasses.replace(cfg, refresh_rate=0.5,
+                                      refresh_fraction=0.5))
+    g_rb = GraphBuilder(feats, cfg).add_reps(9).finalize()
+
+    # comparable total comparisons: rebuild within 25% of the refresh run
+    assert 0.8 < g_rb.stats["comparisons"] / g_rf.stats["comparisons"] < 1.25
+    assert g_rf.stats["refresh_reps"] == 10              # 2 per extension
+    assert g_rf.stats["refresh_comparisons"] > 0
+
+    x = np.asarray(feats.dense)
+    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    sims = xn @ xn.T
+    np.fill_diagonal(sims, -np.inf)
+    queries = np.arange(0, n, 5)
+    truth = [np.argsort(-sims[q])[:10] for q in queries]
+    rec = {name: neighbor_recall(g, queries, truth, hops=2, k_cap=10)
+           for name, g in (("none", g_nr), ("refresh", g_rf),
+                           ("rebuild", g_rb))}
+
+    # the staleness bound: refreshed stream within 3% of the rebuild ...
+    assert rec["refresh"] > rec["rebuild"] - 0.03, rec
+    # ... while the unrefreshed stream measurably degrades past that bar
+    assert rec["none"] < rec["rebuild"] - 0.03, rec
+    # and the refresh rounds themselves are what closed the gap
+    assert rec["refresh"] > rec["none"] + 0.02, rec
