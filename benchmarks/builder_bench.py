@@ -37,11 +37,21 @@ where the locality rule pays.
 The mesh row (``mesh_vs_single``) measures the distributed backend on
 forced virtual host devices (its subprocess sets
 ``--xla_force_host_platform_device_count``): wall seconds, comparisons and
-the explicit-emit exchange volume ``all_to_all_bytes`` — the comms-side
-metric the shard_map emit makes measurable (distributed/stars_dist.py).
+the explicit exchange volume ``all_to_all_bytes`` — the comms-side metric
+the shard_map exchanges make measurable (distributed/stars_dist.py).
+``all_to_all_bytes`` counts CROSS-SHARD buffer slices only (the p diagonal
+self-buckets of each (p, cap, ...) exchange buffer never leave their
+shard), so it is exactly 0 at p=1 and no longer over-reports by p/(p-1)x.
 Virtual CPU devices share one core, so mesh wall time is an overhead
 measure, not a speedup claim; comparisons and bytes are the
 machine-independent columns.
+
+The ``sharded_scoring`` row measures the windows-sharded scoring phase
+(the O(n*W/p) claim): per-shard scored window rows per repetition at p=1
+vs p=4 on the same build — p=4 must come in at <= 0.3x the p=1 rows
+(ceil(n_windows/4) vs n_windows) — together with the scoring-phase
+feature-fetch share of ``all_to_all_bytes``.  Comparisons stay identical
+across p by construction; what shrinks is each machine's share of them.
 
 The same numbers are dumped to BENCH_builder.json (cwd) for the CI trend
 tracker.
@@ -105,6 +115,7 @@ def incremental_vs_rebuild(ds: str = "mnist", algo: str = "sorting_stars",
     emit(f"extend_comparisons{tag}", 0.0, ext_comps)
     emit(f"builder_recall_delta{tag}", 0.0, f"{rec_full - rec_inc:+.4f}")
     return {
+        "row": f"incremental_vs_rebuild[{ds}/{algo}/r{r}/+{int(frac*100)}%]",
         "dataset": ds, "algo": algo, "r": r, "frac": frac,
         "rebuild_s": t_rebuild, "extend_s": t_extend,
         "rebuild_comparisons": int(g_full.stats["comparisons"]),
@@ -184,6 +195,7 @@ def extend_stream(ds: str = "mnist", algo: str = "sorting_stars",
     emit(f"stream_refresh_recall_gap{tag}", 0.0,
          f"{rec['rebuild'] - rec['refresh']:+.4f}")
     return {
+        "row": f"extend_stream[{ds}/{algo}/r{r}x{batches + 1}]",
         "dataset": ds, "algo": algo, "r": r, "batches": batches,
         "rebuild_r": rebuild_r, "refresh_rate": refresh_rate,
         "refresh_fraction": refresh_fraction,
@@ -251,6 +263,7 @@ def mesh_vs_single(ds: str = "mnist", algo: str = "sorting_stars",
     emit(f"mesh_comparisons{tag}", 0.0, res["comparisons"])
     emit(f"mesh_a2a_bytes{tag}", 0.0, res["all_to_all_bytes"])
     return {
+        "row": f"mesh_vs_single[{ds}/{algo}/r{r}/mesh{devices}]",
         "dataset": ds, "algo": algo, "r": r, "devices": devices,
         "single_s": res["single_s"], "mesh_s": res["mesh_s"],
         "comparisons": res["comparisons"], "dropped": res["dropped"],
@@ -260,11 +273,86 @@ def mesh_vs_single(ds: str = "mnist", algo: str = "sorting_stars",
     }
 
 
+def sharded_scoring(ds: str = "mnist", algo: str = "sorting_stars",
+                    r: int = 4, devices: int = 4) -> dict:
+    """Per-shard scoring work at p=1 vs p=devices (same build, same seed).
+
+    The windows-sharded scoring phase assigns each shard a contiguous
+    ~n_windows/p block of global window rows; this row reports the
+    per-shard scored rows per repetition on both meshes (identical total
+    comparisons asserted) plus the scoring-phase feature-fetch bytes —
+    the evidence that per-machine scoring work shrinks as machines are
+    added instead of being replicated O(n*W) everywhere.
+    """
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    res = run_forced_devices(f"""
+        import json, time
+        import jax, numpy as np
+        from benchmarks.common import algo_config, dataset
+        from repro.core import GraphBuilder
+        from repro.core.windows import shard_row_layout
+        from repro.graph import accumulator as acc_lib
+
+        feats, _ = dataset({ds!r})
+        cfg = algo_config({algo!r}, {ds!r}, r={r})
+        dense = np.asarray(feats.dense)
+        out = {{}}
+        for p in (1, {devices}):
+            mesh = jax.make_mesh((p,), ("data",),
+                                 devices=jax.devices()[:p])
+            acc_lib.reset_transfer_stats()
+            t0 = time.time()
+            b = GraphBuilder(dense, cfg, mesh=mesh)
+            # keep every per-round counter dict alive: the session rolls
+            # them up to host ints every COUNTER_ROLLUP_EVERY rounds, which
+            # would discard the per-SHARD scored_windows arrays at r >= 8
+            b.COUNTER_ROLLUP_EVERY = 10**9
+            b.add_reps({r})
+            rows = [np.asarray(c["scored_windows"]) for c in b._counters]
+            g = b.finalize()
+            wall = time.time() - t0
+            nw, rps, _ = shard_row_layout(cfg.mode, feats.n, cfg.window, p)
+            out[str(p)] = {{
+                "wall_s": wall,
+                "comparisons": int(g.stats["comparisons"]),
+                "scored_total": int(g.stats["scored_windows"]),
+                "rows_per_shard_per_rep": max(int(x.max()) for x in rows),
+                "n_windows": nw,
+                "a2a_bytes": acc_lib.transfer_stats["all_to_all_bytes"],
+            }}
+        print(json.dumps(out))
+    """, devices=devices, timeout=1800, extra_pythonpath=[repo])
+    r1, rp = res["1"], res[str(devices)]
+    assert r1["comparisons"] == rp["comparisons"]
+    assert r1["scored_total"] == rp["scored_total"] == r * r1["n_windows"]
+    tag = f"[{ds}/{algo}/r{r}/p{devices}]"
+    emit(f"sharded_rows_p1{tag}", 0.0, r1["rows_per_shard_per_rep"])
+    emit(f"sharded_rows_p{devices}{tag}", 0.0,
+         rp["rows_per_shard_per_rep"])
+    emit(f"sharded_rows_ratio{tag}", 0.0,
+         f"{rp['rows_per_shard_per_rep'] / r1['rows_per_shard_per_rep']:.3f}")
+    emit(f"sharded_a2a_bytes{tag}", 0.0, rp["a2a_bytes"])
+    return {
+        "row": f"sharded_scoring[{ds}/{algo}/r{r}/p{devices}]",
+        "dataset": ds, "algo": algo, "r": r, "devices": devices,
+        "wall_p1_s": r1["wall_s"], "wall_p_s": rp["wall_s"],
+        "comparisons": r1["comparisons"],
+        "n_windows": r1["n_windows"],
+        "rows_per_shard_p1": r1["rows_per_shard_per_rep"],
+        "rows_per_shard_p": rp["rows_per_shard_per_rep"],
+        "rows_ratio": rp["rows_per_shard_per_rep"]
+        / r1["rows_per_shard_per_rep"],
+        "a2a_bytes_p1": r1["a2a_bytes"],
+        "a2a_bytes_p": rp["a2a_bytes"],
+    }
+
+
 def builder_table() -> None:
     rows = [incremental_vs_rebuild("mnist", "sorting_stars", r=10),
             incremental_vs_rebuild("mnist", "lsh_stars", r=10),
             extend_stream("mnist", "sorting_stars", batches=5, r=4),
-            mesh_vs_single("mnist", "sorting_stars", r=6, devices=4)]
+            mesh_vs_single("mnist", "sorting_stars", r=6, devices=4),
+            sharded_scoring("mnist", "sorting_stars", r=4, devices=4)]
     with open("BENCH_builder.json", "w") as f:
         json.dump(rows, f, indent=2)
 

@@ -3,9 +3,27 @@
 Prints ``name,us_per_call,derived`` CSV rows.  See benchmarks/common.py for
 the container-scale dataset mapping and benchmarks/tables.py for the
 calibrated tera-scale model.
+
+``python -m benchmarks.run --check`` is the CI regression mode: it runs
+ONLY the builder benchmark (the session-API surface this repo's PRs keep
+touching), writes a fresh ``BENCH_builder.json`` into the cwd, and diffs
+its rows against the committed baseline ``benchmarks/BENCH_builder.json``
+— any wall-time field (``*_s``) of a row present in BOTH files that
+regresses by more than ``CHECK_MAX_RATIO``x fails the run (exit 1).  Rows
+are matched by their ``row`` key; new rows and new fields pass silently
+(they have no baseline yet), machine-independent fields (comparisons,
+bytes, counts) are reported but never gate — wall time is the only thing a
+code change can quietly ruin without a test noticing.
 """
 
+import json
+import os
+import sys
 import time
+
+CHECK_MAX_RATIO = 2.0
+_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "BENCH_builder.json")
 
 
 def main() -> None:
@@ -27,5 +45,69 @@ def main() -> None:
     print(f"# total benchmark wall time: {time.time() - t0:.1f}s")
 
 
+def check() -> int:
+    """Regression gate: fresh builder-bench rows vs the committed baseline."""
+    from benchmarks import builder_bench
+
+    if not os.path.exists(_BASELINE):
+        print(f"# no committed baseline at {_BASELINE}; nothing to check",
+              file=sys.stderr)
+        return 2
+    if os.path.abspath("BENCH_builder.json") == _BASELINE:
+        # builder_table() dumps into the cwd; from benchmarks/ that write
+        # would overwrite the committed baseline and the gate could never
+        # fail again (fresh would compare against fresh)
+        print("# refusing --check from benchmarks/: the fresh dump would "
+              "clobber the committed baseline; run from the repo root",
+              file=sys.stderr)
+        return 2
+    with open(_BASELINE) as f:
+        baseline = {row["row"]: row for row in json.load(f) if "row" in row}
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    builder_bench.builder_table()          # writes BENCH_builder.json (cwd)
+    with open("BENCH_builder.json") as f:
+        fresh = json.load(f)
+    print(f"# builder benchmark wall time: {time.time() - t0:.1f}s")
+
+    failures = []
+    compared = 0
+    for row in fresh:
+        base = baseline.get(row.get("row"))
+        if base is None:
+            print(f"# new row (no baseline): {row.get('row')}")
+            continue
+        for key, val in row.items():
+            if not key.endswith("_s") or key not in base:
+                continue
+            ref = base[key]
+            if not (isinstance(val, (int, float))
+                    and isinstance(ref, (int, float)) and ref > 0):
+                continue
+            compared += 1
+            ratio = val / ref
+            status = "FAIL" if ratio > CHECK_MAX_RATIO else "ok"
+            print(f"# check {row['row']}.{key}: {val:.3f}s vs "
+                  f"baseline {ref:.3f}s ({ratio:.2f}x) {status}")
+            if ratio > CHECK_MAX_RATIO:
+                failures.append((row["row"], key, ratio))
+    if not compared:
+        print("# check compared 0 wall-time fields — baseline rows "
+              "missing 'row' keys?", file=sys.stderr)
+        return 2
+    if failures:
+        print(f"# {len(failures)} wall-time regression(s) > "
+              f"{CHECK_MAX_RATIO}x:", file=sys.stderr)
+        for name, key, ratio in failures:
+            print(f"#   {name}.{key}: {ratio:.2f}x", file=sys.stderr)
+        return 1
+    print(f"# check passed: {compared} wall-time fields within "
+          f"{CHECK_MAX_RATIO}x of baseline")
+    return 0
+
+
 if __name__ == "__main__":
+    if "--check" in sys.argv[1:]:
+        sys.exit(check())
     main()

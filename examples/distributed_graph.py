@@ -4,9 +4,11 @@ Forces 8 host devices (set XLA_FLAGS yourself to override), then runs the
 full distributed pipeline through the unified session API — constructing
 ``GraphBuilder(..., mesh=mesh)`` shards the feature table and the degree
 slabs row-wise over the ``data`` axis: per-shard sketching -> distributed
-sample-sort (multi-word keys -> the exact single-device order) ->
-cross-shard feature join -> leader scoring -> explicit all_to_all edge
-emit into the sharded slabs.  The mesh build is *edge-for-edge identical*
+sample-sort reduce-scattered to per-shard window slot blocks (multi-word
+keys -> the exact single-device order) -> explicit owner-keyed feature
+fetch -> windows-sharded leader scoring (each shard scores only its
+~n_windows/p rows) -> explicit all_to_all edge emit into the sharded
+slabs.  The mesh build is *edge-for-edge identical*
 to the single-device session (checked below), ``extend()`` inserts points
 with a pad-and-reshard of the grown tables, and a mid-build checkpoint
 restores bit-exactly on a DIFFERENT mesh size.
@@ -88,7 +90,7 @@ def main():
           f"{feats.n - n0} points)")
     print(f"edge-for-edge equal: {edge_set(g_ref) == edge_set(g_dist)}")
     print(f"explicit comms: {comms['all_to_all_calls']} all_to_all calls, "
-          f"{comms['all_to_all_bytes'] / 1e6:.1f} MB exchanged; "
+          f"{comms['all_to_all_bytes'] / 1e6:.1f} MB cross-shard; "
           f"{comms['edge_fetches']} device->host edge fetch")
 
 

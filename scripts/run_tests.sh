@@ -14,6 +14,13 @@
 #                                   #   (-m long; the extend()/refresh
 #                                   #   staleness suite — minutes, kept
 #                                   #   out of the fast tier)
+#   scripts/run_tests.sh all        # the whole suite as sequential tiers
+#                                   #   in ONE invocation: every non-dist/
+#                                   #   non-long test (fast, builder AND
+#                                   #   unmarked modules), then dist, then
+#                                   #   long — same coverage as bare
+#                                   #   tier-1, tier-labelled output,
+#                                   #   stops at the first failing tier
 #   scripts/run_tests.sh [args...]  # extra args forwarded to pytest
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -35,6 +42,18 @@ case "${1:-}" in
   long)
     shift
     exec python -m pytest -q -m long "$@"
+    ;;
+  all)
+    shift
+    # "not dist and not long" covers the fast AND builder tiers plus every
+    # unmarked module — the union of the three stages is exactly tier-1
+    echo "== tier: fast + builder + unmarked =="
+    python -m pytest -q -m "not dist and not long" "$@"
+    echo "== tier: dist =="
+    python -m pytest -q -m "dist and not long" "$@"
+    echo "== tier: long =="
+    python -m pytest -q -m long "$@"
+    exit 0
     ;;
 esac
 exec python -m pytest -x -q "$@"

@@ -45,5 +45,26 @@ except AttributeError:                      # jax 0.4.x: replication is inferred
 
 all_to_all = jax.lax.all_to_all
 
+try:                                        # stable across 0.4.x+, but routed
+    psum_scatter = jax.lax.psum_scatter     # through here like all_to_all so
+except AttributeError:                      # every reduce-scatter (the sharded
+                                            # window-block build of
+                                            # distributed/sorter.py) has one
+                                            # drift point
 
-__all__ = ["shard_map", "pcast", "axis_size", "all_to_all"]
+    def psum_scatter(x, axis_name, *, scatter_dimension=0, tiled=False):
+        if not tiled:                       # only the tiled form is used here
+            raise NotImplementedError("compat psum_scatter fallback is "
+                                      "tiled-only")
+        full = jax.lax.psum(x, axis_name)
+        size = axis_size(axis_name)
+        idx = jax.lax.axis_index(axis_name)
+        chunk = x.shape[scatter_dimension] // size
+        start = [0] * x.ndim
+        start[scatter_dimension] = idx * chunk
+        sizes = list(x.shape)
+        sizes[scatter_dimension] = chunk
+        return jax.lax.dynamic_slice(full, start, sizes)
+
+
+__all__ = ["shard_map", "pcast", "axis_size", "all_to_all", "psum_scatter"]

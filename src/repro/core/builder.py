@@ -120,7 +120,8 @@ class RepetitionSource:
             state = acc_lib.accumulate(state, out["src"], out["dst"],
                                        out["w"], out["emit"])
             return state, {k: out[k] for k in
-                           ("comparisons", "emitted", "prefilter_ops")}
+                           ("comparisons", "emitted", "prefilter_ops",
+                            "scored_windows")}
 
         return lambda state, rep: round_step(state, jnp.int32(rep))
 
@@ -260,20 +261,43 @@ def _pack_words_bigendian(words: jax.Array) -> jax.Array:
 
 
 class _MeshBackend:
-    """Mesh-sharded build: features and slabs partitioned over ``data``.
+    """Mesh-sharded build: features, slabs AND scoring partitioned over
+    ``data``.
 
     Phases per repetition (paper §4; distributed/stars_dist.py docstring has
-    the full data path): per-shard sketch into multi-word sort keys ->
-    distributed sample-sort to the replicated global permutation
-    (sorter.distributed_argsort) -> the SAME window construction, leader
-    sampling and scoring as the single-device path (core/stars.py
-    ``_score_windows``; the feature join gathers rows across shards by gid)
-    -> explicit edge emit (stars_dist.accumulate_all_to_all): insertion
-    triples bucket by owner shard and ship in ONE all_to_all before the
-    local slab fold.  Because the permutation, PRNG draws and scoring
-    floats are identical to one device and the fold sees identical per-row
-    candidate multisets, the mesh build is edge-for-edge equal to the
-    single-device build at any shard count (tests/test_mesh_parity.py).
+    the full data path):
+
+      1. per-shard sketch into multi-word sort keys (no comms),
+      2. distributed sample-sort straight to per-shard *window slot blocks*
+         (sorter.distributed_window_blocks): every sorted element is
+         scattered at its global window slot (rank + sorting-mode shift)
+         and one reduce-scatter hands shard i exactly the contiguous
+         ~``n_windows/p`` window rows it owns
+         (``windows.shard_row_layout``) — slot-space ownership means a
+         window whose members straddle two shards' sorted output still
+         arrives whole at its single owner, with no halo exchange,
+      3. owner-keyed feature fetch (stars_dist.fetch_rows_all_to_all): each
+         shard requests the feature (+ prefilter) rows of its ~n/p window
+         slots from their home shards in one request/response all_to_all
+         pair — the scoring-phase comms term, recorded in
+         ``transfer_stats['all_to_all_bytes']`` like every other exchange,
+      4. sharded scoring: each shard runs the SAME ``_score_windows``
+         (core/stars.py) on only its rows, with a global window-row offset
+         so leader draws and refresh/extension masks are keyed identically
+         to the single-device path — per-shard scoring FLOPs are
+         O(n*W/p), not the O(n*W) a replicated grid used to pay,
+      5. explicit edge emit (stars_dist.accumulate_all_to_all): the
+         now-partial per-shard candidate streams bucket insertion triples
+         by owner shard and ship in ONE all_to_all before the local slab
+         fold; counters concatenate across shards and sum to the
+         single-device totals.
+
+    Because the sorted order, PRNG draws and scoring floats are identical
+    to one device — each global window row is scored exactly once, by
+    exactly one shard, from the same member gids and feature rows — the
+    mesh build remains edge-for-edge equal to the single-device build at
+    any shard count (tests/test_mesh_parity.py), with per-shard scored
+    window rows ≈ n_windows/p (the ``scored_windows`` counter).
 
     **Row layout / reshard rule**: the point count is padded up to
     ``n_pad = ceil(n / p) * p`` and both the feature table and the slab
@@ -282,12 +306,14 @@ class _MeshBackend:
     rows are sliced off, the new rows appended, the table padded to the new
     ``n_pad`` and re-placed (the pad-and-reshard step; slab rows likewise
     via ``accumulator.grow`` + re-place).  Row ownership is always
-    ``gid // (n_pad / p)``, which is what the emit uses to route triples.
-    Checkpoints and graphs only ever see the first ``n`` rows (``trim``).
+    ``gid // (n_pad / p)``, which is what the feature fetch and the emit
+    use to route requests and triples.  Checkpoints and graphs only ever
+    see the first ``n`` rows (``trim``).
     """
 
     SORT_CAPACITY_FACTOR = 2.0
     EMIT_CAPACITY_FACTOR = 4.0
+    FETCH_CAPACITY_FACTOR = 2.0
 
     def __init__(self, features: PointFeatures, cfg: StarsConfig, mesh):
         windowed = ("lsh-stars", "sorting-stars",
@@ -310,6 +336,8 @@ class _MeshBackend:
         self._n = int(features.dense.shape[0])
         self._place_features(jnp.asarray(features.dense))
         self._sketches: Dict = {}   # n -> sketch_fn (mask-independent)
+        self._offsets: Dict = {}    # n -> offset_fn (window shift per rep)
+        self._fetch_tables: Dict = {}   # n -> row-sharded fetch table
         self._bound: Dict = {}      # (n, new_from, refresh...) -> score_fn
 
     # -- padded row layout ---------------------------------------------- #
@@ -367,11 +395,16 @@ class _MeshBackend:
               refresh_fraction: float = 1.0):
         if self._n not in self._sketches:
             self._sketches[self._n] = self._bind_sketch()
+        if self._n not in self._offsets:
+            self._offsets[self._n] = self._bind_offset()
+        if self._n not in self._fetch_tables:
+            self._fetch_tables[self._n] = self._build_fetch_table()
         key = (self._n, new_from, refresh_below, refresh_fraction)
         if key not in self._bound:
             self._bound[key] = self._bind_score(new_from, refresh_below,
                                                 refresh_fraction)
-        return self._sketches[self._n], self._bound[key]
+        return (self._sketches[self._n], self._offsets[self._n],
+                self._fetch_tables[self._n], self._bound[key])
 
     def _bind_sketch(self):
         cfg = self.cfg
@@ -408,57 +441,138 @@ class _MeshBackend:
 
         return sketch_phase
 
+    def _bind_offset(self):
+        """Tiny per-repetition program: the window grid's slot offset.
+
+        The sorting-mode random shift (``window_layout``) must be known
+        BEFORE the sort scatters elements to their window slots
+        (``distributed_window_blocks`` owns slots, not ranks), so it is
+        computed up front from the same ``k_shift`` draw the single-device
+        path uses.
+        """
+        from repro.core import windows as win_lib
+        from repro.core.stars import _rep_keys
+        cfg = self.cfg
+        n = self._n
+
+        @jax.jit
+        def offset_phase(rep):
+            _, k_shift, _, _ = _rep_keys(cfg, rep)
+            offset, _ = win_lib.window_layout(cfg.mode, n, cfg.window,
+                                              k_shift)
+            return offset
+
+        return offset_phase
+
+    def _build_fetch_table(self):
+        """The row-sharded table the scoring-phase fetch serves rows from:
+        the padded feature table, with the packed Hamming-prefilter words
+        bitcast alongside as extra float32 columns when the prefilter is
+        armed (ONE exchange covers both)."""
+        from repro.core.stars import _prefilter_sketch
+        if self.cfg.hamming_prefilter_bits <= 0:
+            return self.dense
+        if self.dense.dtype != jnp.float32:
+            raise NotImplementedError(
+                "mesh prefilter fetch packs prefilter words next to "
+                f"float32 features; got dtype {self.dense.dtype}")
+        pref = _prefilter_sketch(PointFeatures(dense=self.dense),
+                                 self.cfg.hamming_prefilter_bits,
+                                 self.cfg.seed)
+        table = jnp.concatenate(
+            [self.dense,
+             jax.lax.bitcast_convert_type(pref, jnp.float32)], axis=1)
+        return jax.device_put(table, self._feature_sharding)
+
     def _bind_score(self, new_from: int, refresh_below: int = 0,
                     refresh_fraction: float = 1.0):
+        """The windows-sharded scoring program.
+
+        Each shard reshapes its slot block into its ~n_windows/p window
+        rows and runs the shared ``_score_windows`` on ONLY those rows —
+        feature/prefilter lookups go through local slot ids into the
+        fetched block (``member_index``), leader and refresh draws are
+        keyed by global window row (``row_offset``/``total_rows``), and
+        the emitted global-gid streams feed the emit exchange directly.
+        Per-shard scoring work is O(n*W/p); nothing O(n*W) is replicated
+        — the one replicated residue is the O(n)-elementwise global PRNG
+        draw each shard issues before slicing its rows
+        (``windows.global_row_draw``), W-fold below the scoring tiles.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
         from repro.core import windows as win_lib
-        from repro.core.stars import (_prefilter_sketch, _rep_keys,
-                                      _score_windows)
+        from repro.core.stars import _rep_keys, _score_windows
         cfg = self.cfg
         n = self._n
         w = cfg.window
-        features = PointFeatures(dense=self.dense)
-        prefilter = (
-            _prefilter_sketch(features, cfg.hamming_prefilter_bits, cfg.seed)
-            if cfg.hamming_prefilter_bits > 0 else None)
+        d = int(self.dense.shape[1])
+        nw, rps, _ = win_lib.shard_row_layout(cfg.mode, n, w, self.p)
+        axis = self.axis
+        measure_fn = self.measure_fn
+        use_pref = cfg.hamming_prefilter_bits > 0
 
-        @jax.jit
-        def score_phase(perm, bucket, rep):
-            _, k_shift, k_lead, k_refresh = _rep_keys(cfg, rep)
-            if cfg.mode == "lsh":
-                perm_bucket = bucket[jnp.maximum(perm, 0)]
-            else:
-                perm_bucket = jnp.zeros((n,), jnp.uint32)
-            offset, n_slots = win_lib.window_layout(cfg.mode, n, w, k_shift)
-            win = win_lib._scatter_to_slots(perm, perm_bucket, offset,
-                                            n_slots, w)
-            return _score_windows(cfg, features, self.measure_fn, prefilter,
-                                  win, k_lead, new_from=new_from,
-                                  refresh_below=refresh_below,
-                                  refresh_fraction=refresh_fraction,
-                                  k_refresh=k_refresh)
+        def score_shard(gid_blk, bucket_blk, tab_blk, ok_blk, rep):
+            row0 = jax.lax.axis_index(axis) * rps
+            # a counted fetch drop invalidates its slot (graceful, like a
+            # sort drop); the bucket value stays so the surviving slots'
+            # run structure is untouched
+            gid_grid = jnp.where(ok_blk, gid_blk, -1).reshape(rps, w)
+            win = win_lib.Windows(gid=gid_grid, valid=gid_grid >= 0,
+                                  bucket=bucket_blk.reshape(rps, w))
+            feats = PointFeatures(dense=tab_blk[:, :d])
+            pref = (jax.lax.bitcast_convert_type(tab_blk[:, d:], jnp.uint32)
+                    if use_pref else None)
+            _, _, k_lead, k_refresh = _rep_keys(cfg, rep)
+            member_index = jnp.arange(rps * w, dtype=jnp.int32).reshape(
+                rps, w)
+            out = _score_windows(cfg, feats, measure_fn, pref, win, k_lead,
+                                 new_from=new_from,
+                                 refresh_below=refresh_below,
+                                 refresh_fraction=refresh_fraction,
+                                 k_refresh=k_refresh, row_offset=row0,
+                                 total_rows=nw, member_index=member_index)
+            return (out["src"], out["dst"], out["w"], out["emit"],
+                    out["comparisons"], out["emitted"],
+                    out["prefilter_ops"], out["scored_windows"][None])
 
-        return score_phase
+        return jax.jit(shard_map(
+            score_shard, mesh=self.mesh,
+            in_specs=(P(axis), P(axis), P(axis, None), P(axis), P()),
+            out_specs=tuple(P(axis) for _ in range(8))))
 
     def run_round(self, state, rep_index: int, new_from: int,
                   refresh_below: int = 0, refresh_fraction: float = 1.0):
-        from repro.distributed.sorter import distributed_argsort
-        from repro.distributed.stars_dist import accumulate_all_to_all
-        sketch_fn, score_fn = self._bind(new_from, refresh_below,
-                                         refresh_fraction)
+        from repro.core import windows as win_lib
+        from repro.distributed.sorter import distributed_window_blocks
+        from repro.distributed.stars_dist import (accumulate_all_to_all,
+                                                  fetch_rows_all_to_all)
+        sketch_fn, offset_fn, fetch_table, score_fn = self._bind(
+            new_from, refresh_below, refresh_fraction)
         rep = jnp.int32(rep_index)
-        keys, gids, bucket = sketch_fn(self.dense, rep)
-        perm, drop_sort = distributed_argsort(
-            keys, gids, self.mesh, self._n, axis=self.axis,
-            capacity_factor=self.SORT_CAPACITY_FACTOR)
-        out = score_fn(perm, bucket, rep)
+        keys, gids, _bucket = sketch_fn(self.dense, rep)
+        _, _, total_slots = win_lib.shard_row_layout(
+            self.cfg.mode, self._n, self.cfg.window, self.p)
+        blk_gid, blk_bucket, drop_sort = distributed_window_blocks(
+            keys, gids, self.mesh, slot_offset=offset_fn(rep),
+            total_slots=total_slots, axis=self.axis,
+            capacity_factor=self.SORT_CAPACITY_FACTOR,
+            bucket_word=0 if self.cfg.mode == "lsh" else None)
+        rows, rows_ok, drop_fetch = fetch_rows_all_to_all(
+            fetch_table, blk_gid, mesh=self.mesh, axis=self.axis,
+            capacity_factor=self.FETCH_CAPACITY_FACTOR)
+        (src, dst, wts, emit, comparisons, emitted, pref_ops,
+         scored) = score_fn(blk_gid, blk_bucket, rows, rows_ok, rep)
         state, drop_emit = accumulate_all_to_all(
-            state, out["src"], out["dst"], out["w"], out["emit"],
+            state, src, dst, wts, emit,
             mesh=self.mesh, axis=self.axis,
             capacity_factor=self.EMIT_CAPACITY_FACTOR)
-        counters = {k: out[k] for k in
-                    ("comparisons", "emitted", "prefilter_ops")}
+        counters = {"comparisons": comparisons, "emitted": emitted,
+                    "prefilter_ops": pref_ops, "scored_windows": scored}
         counters["dropped"] = jnp.concatenate(
-            [jnp.ravel(drop_sort), jnp.ravel(drop_emit)])
+            [jnp.ravel(drop_sort), jnp.ravel(drop_fetch),
+             jnp.ravel(drop_emit)])
         return state, counters
 
     def extend(self, new_features: PointFeatures) -> None:
@@ -476,6 +590,8 @@ class _MeshBackend:
 
         self.dense = repad(self.dense, new_rows)
         self._sketches = {}         # shapes changed; rebind lazily
+        self._offsets = {}
+        self._fetch_tables = {}
         self._bound = {}
 
 

@@ -173,24 +173,51 @@ def _score_tile(measure_fn, features: PointFeatures,
     return measure_fn(fa, fb)
 
 
-def _refresh_window_sample(k_refresh: jax.Array, nw: int,
-                           fraction: float) -> jax.Array:
+def _refresh_window_sample(k_refresh: jax.Array, nw: int, fraction: float,
+                           row_offset=0,
+                           total_rows: Optional[int] = None) -> jax.Array:
     """(nw,) bool: the PRNG-sampled window subset one refresh round rescores.
 
     Drawn from the per-repetition ``k_refresh`` stream (``_rep_keys``), so
     the single-device and mesh backends sample identical windows — the
-    refresh analogue of the shared leader draw.  ``fraction >= 1.0`` keeps
+    refresh analogue of the shared leader draw.  Like the leader draw, the
+    uniform is issued at the GLOBAL row count and row-sliced
+    (``windows.global_row_draw``), so a shard scoring rows
+    [row_offset, row_offset + nw) of a ``total_rows`` grid samples exactly
+    the windows the single-device path would.  ``fraction >= 1.0`` keeps
     every window (uniform draws live in [0, 1)), which makes a
     full-fraction refresh round the exact complement of an extension round
     over the same windows.
     """
-    return jax.random.uniform(k_refresh, (nw,)) < fraction
+    draw = win_lib.global_row_draw(
+        lambda rows: jax.random.uniform(k_refresh, (rows,)), nw,
+        row_offset, total_rows, fill=2.0)        # overflow rows never kept
+    return draw < fraction
+
+
+def _scored_rows(nw: int, row_offset, total_rows: Optional[int]) -> jax.Array:
+    """How many REAL global window rows this scoring call owns.
+
+    Each global window row is owned by exactly one scoring call (the whole
+    grid on one device; a contiguous row slice per shard on the mesh), so
+    summing this counter across calls of one repetition gives exactly
+    ``n_windows`` — the invariant tests/test_mesh_parity.py asserts, and
+    the per-shard work measure behind the sharded-scoring bench row
+    (overflow rows of an uneven partition are not counted: they hold no
+    points and score nothing).
+    """
+    if total_rows is None:
+        return jnp.int32(nw)
+    r0 = jnp.asarray(row_offset, jnp.int32)
+    return jnp.clip(jnp.minimum(r0 + nw, total_rows) - r0, 0, nw)
 
 
 def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
                    prefilter, win, *, new_from: int = 0,
                    refresh_below: int = 0, refresh_fraction: float = 1.0,
-                   k_refresh: Optional[jax.Array] = None):
+                   k_refresh: Optional[jax.Array] = None,
+                   row_offset=0, total_rows: Optional[int] = None,
+                   member_index: Optional[jax.Array] = None):
     """Stars 1 scoring: every member compares to its bucket's leader only.
 
     O(n) comparisons per repetition — the paper's quadratic->linear win.
@@ -209,6 +236,10 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
     :func:`_score_windows`): only pairs with BOTH endpoints below the
     watermark, in a ``refresh_fraction`` window sample drawn from
     ``k_refresh``, are scored.
+
+    ``row_offset`` / ``total_rows`` / ``member_index`` have the same
+    row-slice semantics as :func:`_score_windows` (the windows-sharded
+    mesh scoring phase).
     """
     nw, w_sz = win.gid.shape
     use_pref = cfg.hamming_prefilter_bits > 0
@@ -221,16 +252,17 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
     gid = pad_w(win.gid)
     valid = pad_w(win.valid)
     bucket = pad_w(win.bucket)
+    fidx = pad_w(win.gid if member_index is None else member_index)
     if refresh:
-        keep_win = pad_w(_refresh_window_sample(k_refresh, nw,
-                                                refresh_fraction))
+        keep_win = pad_w(_refresh_window_sample(
+            k_refresh, nw, refresh_fraction, row_offset, total_rows))
     resh = lambda x: x.reshape((nw_pad // chunk, chunk) + x.shape[1:])
 
     def score_chunk(args):
         if refresh:
-            gid_c, valid_c, bucket_c, keep_c = args       # (chunk, W)
+            gid_c, valid_c, bucket_c, fidx_c, keep_c = args   # (chunk, W)
         else:
-            gid_c, valid_c, bucket_c = args               # (chunk, W)
+            gid_c, valid_c, bucket_c, fidx_c = args           # (chunk, W)
         prev = jnp.concatenate(
             [jnp.zeros_like(bucket_c[:, :1]) ^ jnp.uint32(0xA5A5A5A5),
              bucket_c[:, :-1]], axis=1)
@@ -240,8 +272,15 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
         head_slot = jax.lax.cummax(
             jnp.where(is_head, slot_ids, 0), axis=1)      # (chunk, W)
         head_gid = jnp.take_along_axis(gid_c, head_slot, axis=1)
+        head_fidx = jnp.take_along_axis(fidx_c, head_slot, axis=1)
+        head_ok = jnp.take_along_axis(valid_c, head_slot, axis=1)
 
-        mask = valid_c & (head_slot != slot_ids)          # leaders skip self
+        # leaders skip self; an INVALID head disables its whole run — a
+        # no-op on contiguous grids (a valid member never follows an
+        # invalid head: pad runs are bucket-separated), load-bearing when
+        # a mesh fetch drop invalidates a head slot mid-run (the member
+        # would otherwise score against the zeroed fetched row)
+        mask = valid_c & head_ok & (head_slot != slot_ids)
         if new_from > 0:
             nf = jnp.int32(new_from)
             is_new = valid_c & (gid_c >= nf)
@@ -257,12 +296,12 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
         if use_pref:
             pref_ops = jnp.sum(mask).astype(jnp.int32)
             ham = lsh_lib.hamming_pairwise(
-                prefilter[jnp.maximum(head_gid, 0)][..., None, :],
-                prefilter[jnp.maximum(gid_c, 0)][..., None, :])[..., 0, 0]
+                prefilter[jnp.maximum(head_fidx, 0)][..., None, :],
+                prefilter[jnp.maximum(fidx_c, 0)][..., None, :])[..., 0, 0]
             mask &= ham <= cfg.hamming_prefilter_max
         # row-wise member-vs-own-leader similarity: (chunk*W, 1, 1) tiles
-        a = head_gid.reshape(-1, 1)
-        b = gid_c.reshape(-1, 1)
+        a = head_fidx.reshape(-1, 1)
+        b = fidx_c.reshape(-1, 1)
         sims = _score_tile(measure_fn, features, a, b,
                            measure_name=cfg.measure)[:, 0, 0]
         sims = sims.reshape(gid_c.shape).astype(jnp.float32)
@@ -277,7 +316,7 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
                 sims.reshape(-1), emit.reshape(-1), comparisons, emitted,
                 pref_ops)
 
-    operands = (resh(gid), resh(valid), resh(bucket))
+    operands = (resh(gid), resh(valid), resh(bucket), resh(fidx))
     if refresh:
         operands += (resh(keep_win),)
     outs = jax.lax.map(score_chunk, operands)
@@ -285,7 +324,8 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
     src, dst, wts, emit = (x.reshape(-1) for x in (src, dst, wts, emit))
     return dict(src=src, dst=dst, w=wts, emit=emit,
                 emitted=emit_chunks,
-                comparisons=comp_chunks, prefilter_ops=pref_chunks)
+                comparisons=comp_chunks, prefilter_ops=pref_chunks,
+                scored_windows=_scored_rows(nw, row_offset, total_rows))
 
 
 def _rep_keys(cfg: StarsConfig, rep_index: jax.Array):
@@ -355,16 +395,18 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
                    measure_fn, prefilter, win: win_lib.Windows,
                    k_lead: jax.Array, *, new_from: int = 0,
                    refresh_below: int = 0, refresh_fraction: float = 1.0,
-                   k_refresh: Optional[jax.Array] = None):
+                   k_refresh: Optional[jax.Array] = None,
+                   row_offset=0, total_rows: Optional[int] = None,
+                   member_index: Optional[jax.Array] = None):
     """Score one repetition's windows into a masked candidate stream.
 
     The scoring half of :func:`_rep_candidates`, factored out so the mesh
     backend (core/builder.py ``_MeshBackend``) can feed it windows built
-    from the *distributed* sort permutation: given identical ``win`` /
-    ``k_lead`` / ``k_refresh`` inputs the emitted stream — gids, float
-    weights, masks and comparison counts — is identical to the
-    single-device path, which is what makes mesh builds edge-for-edge
-    equal (tests/test_mesh_parity.py), refresh rounds included.
+    from the *distributed* sort: given identical window / ``k_lead`` /
+    ``k_refresh`` inputs the emitted stream — gids, float weights, masks
+    and comparison counts — is identical to the single-device path, which
+    is what makes mesh builds edge-for-edge equal
+    (tests/test_mesh_parity.py), refresh rounds included.
     ``features`` may be a padded table (extra rows are never addressed:
     every gid in a valid window slot is a real point).
 
@@ -372,6 +414,22 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
     inside a ``refresh_fraction`` PRNG sample of windows — the exact
     inverse of the ``new_from`` extension mask, shared by both backends
     through this one function (see GraphBuilder.refresh_reps).
+
+    **Row-sliced (windows-sharded) mode** — the mesh backend scores only
+    its own ~``n_windows/p`` rows per shard instead of replicating the
+    whole grid: ``win`` is then a contiguous row slice, ``row_offset``
+    (static or traced) its first GLOBAL window row and ``total_rows`` the
+    global row count.  Every PRNG draw (leaders, refresh sample) is issued
+    at the global shape and row-sliced, so draws are keyed by global
+    window row exactly as on one device.  ``member_index``, when given,
+    is a (rows, W) index grid used for feature/prefilter gathers INSTEAD
+    of ``win.gid`` — the mesh passes local slot ids into a slot-aligned
+    feature block fetched by one explicit owner-keyed all_to_all
+    (distributed/stars_dist.fetch_rows_all_to_all), so scoring never
+    touches the global feature table.  Emitted src/dst are always global
+    gids.  The returned ``scored_windows`` counts the real global rows
+    this call owns (summing to ``n_windows`` across one repetition's
+    calls).
     """
     nw, w_sz = win.gid.shape
     if cfg.mode == "lsh" and cfg.scoring == "stars":
@@ -384,10 +442,13 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
                               new_from=new_from,
                               refresh_below=refresh_below,
                               refresh_fraction=refresh_fraction,
-                              k_refresh=k_refresh)
+                              k_refresh=k_refresh, row_offset=row_offset,
+                              total_rows=total_rows,
+                              member_index=member_index)
     if cfg.scoring == "stars":
         leader_slot, leader_ok = win_lib.sample_leaders(
-            win, s=cfg.leaders, key=k_lead)
+            win, s=cfg.leaders, key=k_lead,
+            row_offset=row_offset, total_rows=total_rows)
     elif cfg.scoring == "allpairs":
         leader_slot = jnp.broadcast_to(jnp.arange(w_sz, dtype=jnp.int32),
                                        (nw, w_sz))
@@ -404,12 +465,13 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
     gid = pad_w(win.gid)
     valid = pad_w(win.valid)
     bucket_w = pad_w(win.bucket)
+    fidx = pad_w(win.gid if member_index is None else member_index)
     leader_slot = pad_w(leader_slot)
     leader_ok = pad_w(leader_ok)
     refresh = refresh_below > 0
     if refresh:
-        keep_win = pad_w(_refresh_window_sample(k_refresh, nw,
-                                                refresh_fraction))
+        keep_win = pad_w(_refresh_window_sample(
+            k_refresh, nw, refresh_fraction, row_offset, total_rows))
 
     resh = lambda x: x.reshape((nw_pad // chunk, chunk) + x.shape[1:])
     same_bucket_mode = cfg.mode == "lsh"
@@ -418,10 +480,11 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
 
     def score_chunk(args):
         if refresh:
-            gid_c, valid_c, bucket_c, lslot_c, lok_c, keep_c = args
+            gid_c, valid_c, bucket_c, fidx_c, lslot_c, lok_c, keep_c = args
         else:
-            gid_c, valid_c, bucket_c, lslot_c, lok_c = args
+            gid_c, valid_c, bucket_c, fidx_c, lslot_c, lok_c = args
         lead_gid = jnp.take_along_axis(gid_c, lslot_c, axis=1)
+        lead_fidx = jnp.take_along_axis(fidx_c, lslot_c, axis=1)
         lead_bucket = jnp.take_along_axis(bucket_c, lslot_c, axis=1)
         mask = (lok_c[:, :, None] & valid_c[:, None, :])
         # exclude self-comparison (slot identity, robust to duplicate gids)
@@ -443,10 +506,10 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
         if use_pref:
             pref_ops = jnp.sum(mask).astype(jnp.int32)
             ham = lsh_lib.hamming_pairwise(
-                prefilter[jnp.maximum(lead_gid, 0)],
-                prefilter[jnp.maximum(gid_c, 0)])
+                prefilter[jnp.maximum(lead_fidx, 0)],
+                prefilter[jnp.maximum(fidx_c, 0)])
             mask &= ham <= cfg.hamming_prefilter_max
-        sims = _score_tile(measure_fn, features, lead_gid, gid_c,
+        sims = _score_tile(measure_fn, features, lead_fidx, fidx_c,
                            measure_name=cfg.measure)
         # Per-chunk int32 counts; summed on host as Python ints so tera-scale
         # comparison/emit counts never overflow a device integer.
@@ -461,7 +524,7 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
                 sims.reshape(-1).astype(jnp.float32), emit.reshape(-1),
                 comparisons, emitted, pref_ops)
 
-    operands = (resh(gid), resh(valid), resh(bucket_w),
+    operands = (resh(gid), resh(valid), resh(bucket_w), resh(fidx),
                 resh(leader_slot), resh(leader_ok))
     if refresh:
         operands += (resh(keep_win),)
@@ -471,7 +534,8 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
     src, dst, wts, emit = (x.reshape(-1) for x in (src, dst, wts, emit))
     return dict(src=src, dst=dst, w=wts, emit=emit,
                 emitted=emit_chunks,
-                comparisons=comp_chunks, prefilter_ops=pref_chunks)
+                comparisons=comp_chunks, prefilter_ops=pref_chunks,
+                scored_windows=_scored_rows(nw, row_offset, total_rows))
 
 
 # --------------------------------------------------------------------------- #

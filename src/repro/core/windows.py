@@ -31,6 +31,17 @@ from repro.core import hashing
 
 INVALID = jnp.int32(-1)
 
+# Bucket id carried by padding slots (gid -1).  Pad slots used to inherit
+# bucket 0 — a *real* folded bucket id — so the validity mask was the only
+# thing standing between a pad slot and a phantom same-bucket match with a
+# genuine bucket-0 point (tests/test_windows.py
+# test_pad_slot_bucket_aliasing_forced_collision forces the collision).
+# The sentinel makes the separation structural; the
+# single-device scatter and the mesh slot blocks (distributed/sorter.py
+# ``distributed_window_blocks``) share this constant so the two paths build
+# bit-identical bucket grids.
+PAD_BUCKET = jnp.uint32(0xFFFFFFFF)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -41,7 +52,8 @@ class Windows:
       gid:    (n_windows, W) int32 original point ids; -1 on padding slots.
       valid:  (n_windows, W) bool.
       bucket: (n_windows, W) uint32 folded bucket id (LSH mode) or zeros
-              (sorting mode, where the window itself is the bucket).
+              (sorting mode, where the window itself is the bucket);
+              ``PAD_BUCKET`` on padding slots in either mode.
     """
 
     gid: jax.Array
@@ -62,7 +74,7 @@ def _scatter_to_slots(perm_gid: jax.Array, perm_bucket: jax.Array,
     """Place the sorted sequence into padded slots starting at ``offset``."""
     n = perm_gid.shape[0]
     slots_gid = jnp.full((n_slots,), INVALID)
-    slots_bucket = jnp.zeros((n_slots,), jnp.uint32)
+    slots_bucket = jnp.full((n_slots,), PAD_BUCKET)
     pos = offset + jnp.arange(n, dtype=jnp.int32)
     slots_gid = slots_gid.at[pos].set(perm_gid)
     slots_bucket = slots_bucket.at[pos].set(perm_bucket)
@@ -84,12 +96,59 @@ def window_layout(mode: str, n: int, window: int,
     edge-for-edge parity structural rather than two hand-synced copies.
     """
     if mode == "lsh":
-        return jnp.int32(0), ((n + window - 1) // window) * window
+        return jnp.int32(0), window_slot_count(mode, n, window)
     if mode != "sorting":
         raise ValueError(f"unknown mode {mode!r}")
     r = jax.random.randint(shift_key, (), window // 2, window + 1)
     offset = (jnp.int32(window) - r).astype(jnp.int32)
-    return offset, ((n + window - 1) // window + 1) * window
+    return offset, window_slot_count(mode, n, window)
+
+
+def window_slot_count(mode: str, n: int, window: int) -> int:
+    """Static padded slot count of one repetition's window grid.
+
+    The key-independent half of :func:`window_layout`: the slot count only
+    depends on (mode, n, W) — the random SortingLSH shift moves the
+    ``offset`` within the fixed grid, never its size — so shard layouts can
+    be computed before any per-repetition key exists.
+    """
+    if mode == "lsh":
+        return ((n + window - 1) // window) * window
+    if mode != "sorting":
+        raise ValueError(f"unknown mode {mode!r}")
+    return ((n + window - 1) // window + 1) * window
+
+
+def shard_row_layout(mode: str, n: int, window: int,
+                     p: int) -> Tuple[int, int, int]:
+    """Static window-row partition of one repetition's grid over ``p`` shards.
+
+    Maps a shard's block to its global window-row range for the
+    windows-sharded mesh scoring phase (core/builder.py ``_MeshBackend``):
+    shard ``i`` owns the contiguous global rows
+    ``[i * rows_per_shard, (i + 1) * rows_per_shard)`` — i.e. the global
+    slots ``[i * rows_per_shard * W, ...)`` of the grid this module's
+    constructors scatter into.  Returns
+    ``(n_windows, rows_per_shard, padded_slots)`` where ``n_windows`` is
+    the real global row count (``window_slot_count / W``), ``rows_per_shard
+    = ceil(n_windows / p)`` and ``padded_slots = p * rows_per_shard * W``
+    (>= the real slot count; overflow rows beyond ``n_windows`` hold no
+    points and score nothing).
+
+    Ownership is defined in *slot* space, after the sorting-mode shift is
+    applied (slot = global sort rank + offset, see ``window_layout``), so a
+    window whose members straddle two shards' sample-sort output blocks
+    still has exactly ONE owner and arrives whole: the sorter's
+    reduce-scatter (``distributed_window_blocks``) routes every member to
+    the shard owning its slot, which plays the role of halo rows at block
+    boundaries without any second boundary exchange.
+    """
+    if p < 1:
+        raise ValueError(f"shard count must be >= 1: {p}")
+    n_slots = window_slot_count(mode, n, window)
+    n_windows = n_slots // window
+    rows_per_shard = -(-n_windows // p)
+    return n_windows, rows_per_shard, p * rows_per_shard * window
 
 
 def lsh_windows(bucket_id: jax.Array, *, window: int,
@@ -132,9 +191,45 @@ def sorting_lsh_windows(words: jax.Array, *, window: int,
                              offset, n_slots, window)
 
 
-def sample_leaders(windows: Windows, *, s: int,
-                   key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def global_row_draw(draw, nw: int, row_offset,
+                    total_rows: Optional[int], fill) -> jax.Array:
+    """Slice rows [row_offset, row_offset + nw) out of a globally-shaped
+    PRNG draw.
+
+    ``draw(rows)`` must be a pure function of its row count (e.g. a uniform
+    over one captured key): the draw is ALWAYS issued at the global row
+    count ``total_rows`` (or ``nw`` when ``total_rows`` is None — the
+    single-device case, where the slice is the whole grid) so the stream a
+    given global window row receives is independent of how rows are
+    partitioned across shards.  Overflow rows past ``total_rows`` (the
+    padded tail of an uneven partition) read ``fill``, which callers choose
+    to mean "invalid".  ``row_offset`` may be traced (dynamic_slice keeps
+    shapes static); the ``nw``-row pad guarantees the slice never clamps
+    while any real row is in range.
+    """
+    if total_rows is None:
+        return draw(nw)
+    full = draw(total_rows)
+    full = jnp.pad(full, ((0, nw),) + ((0, 0),) * (full.ndim - 1),
+                   constant_values=fill)
+    start = (jnp.asarray(row_offset, jnp.int32),) \
+        + (jnp.int32(0),) * (full.ndim - 1)
+    return jax.lax.dynamic_slice(full, start, (nw,) + full.shape[1:])
+
+
+def sample_leaders(windows: Windows, *, s: int, key: jax.Array,
+                   row_offset=0, total_rows: Optional[int] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
     """Sample up to ``s`` uniformly random leaders per window.
+
+    ``windows`` may be a contiguous row slice of a larger grid (the
+    windows-sharded mesh scoring phase): ``total_rows`` is then the GLOBAL
+    row count and ``row_offset`` (static or traced) the slice's first
+    global row.  The priority draw is always shaped by the global grid and
+    sliced, so every shard's rows see exactly the draw the single-device
+    path would give them — the leader sample is keyed by global window row,
+    not by who scores it.  The draw is O(total slots) elementwise; the
+    top-k selection (the superlinear part) runs on the slice only.
 
     Returns:
       leader_slot: (n_windows, s) int32 slot index within the window.
@@ -142,7 +237,9 @@ def sample_leaders(windows: Windows, *, s: int,
                    s valid points (excess leader slots are disabled).
     """
     nw, w = windows.gid.shape
-    pri = jax.random.uniform(key, (nw, w))
+    pri = global_row_draw(
+        lambda rows: jax.random.uniform(key, (rows, w)), nw,
+        row_offset, total_rows, fill=-1.0)
     pri = jnp.where(windows.valid, pri, -1.0)
     vals, slots = jax.lax.top_k(pri, s)
     # valid slots carry uniform draws in [0, 1), invalid slots exactly -1.0:

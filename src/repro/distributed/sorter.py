@@ -28,24 +28,35 @@ trailing gid operand on one device.
 
 The output is a globally sorted sequence distributed shard-contiguously:
 shard i holds keys <= shard i+1's — exactly what SortingLSH windowing
-needs.  :func:`distributed_argsort` additionally collapses that output to
-the replicated *global permutation* (each shard scatters its payloads at
-their global ranks, then a psum replicates the result) — the windowing
-phases consume only this (n,) int32 view, never the heavy feature rows.
+needs.  Two consumers build on it:
 
-Collective cost: one tiny all_gather + one O(n/p) all_to_all, which is the
+  * :func:`distributed_window_blocks` — the mesh build's scoring input:
+    every sorted element is scattered at its window SLOT (global rank +
+    sorting-mode shift) and a reduce-scatter hands each shard the
+    contiguous slot block of the ~n_windows/p window rows it will score
+    (``windows.shard_row_layout``), buckets riding along.  Nothing O(n)
+    is replicated, and slot-space ownership delivers boundary-straddling
+    windows whole to their one owner.
+  * :func:`distributed_argsort` — the replicated *global permutation*
+    (each shard scatters its payloads at their global ranks, then a psum
+    replicates the result); kept for consumers that genuinely need the
+    full (n,) view.
+
+Collective cost: one tiny all_gather + one O(n/p) all_to_all (recorded as
+cross-shard slices in ``transfer_stats['all_to_all_bytes']``), plus the
+O(slots/p)-per-shard reduce-scatter (or psum) of int32 ids — the
 roofline-optimal exchange for a single-pass sort.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.compat import all_to_all, axis_size, shard_map
+from repro.compat import all_to_all, axis_size, psum_scatter, shard_map
 
 SENTINEL = jnp.uint32(0xFFFFFFFF)
 
@@ -68,8 +79,24 @@ def _lex_less(a: Sequence[jax.Array], b: Sequence[jax.Array]) -> jax.Array:
     return lt
 
 
-def _exchange_capacity(n_local: int, p: int, capacity_factor: float) -> int:
-    return int(capacity_factor * n_local / p) + 1
+def exchange_capacity(n_local: int, p: int, capacity_factor: float) -> int:
+    """Per-destination-shard slot capacity of one fixed-shape exchange.
+
+    Exact integer arithmetic — ``int(capacity_factor * n_local / p) + 1``
+    rounds through a float64 product, which at tera-scale ``n_local``
+    (>= 2^53 / factor) can land BELOW the true value and silently
+    under-size the exchange (extra counted drops where the configured
+    headroom should have absorbed the imbalance).  ``as_integer_ratio``
+    is exact for every binary float, so ``num * n_local // (den * p)``
+    reproduces floor(factor * n_local / p) at any scale.  Shared by the
+    sample-sort partition, the feature fetch and the edge emit
+    (stars_dist._emit_capacity).
+    """
+    num, den = float(capacity_factor).as_integer_ratio()
+    return num * n_local // (den * p) + 1
+
+
+_exchange_capacity = exchange_capacity      # internal call sites / back-compat
 
 
 def _sample_sort_shard(keys: Tuple[jax.Array, ...], payload: jax.Array, *,
@@ -134,10 +161,18 @@ def _sample_sort_shard(keys: Tuple[jax.Array, ...], payload: jax.Array, *,
 
 def _record_exchange(p: int, n_local: int, nk: int,
                      capacity_factor: float) -> None:
-    """Host-side accounting of one sort exchange's all_to_all volume."""
+    """Host-side accounting of one sort exchange's all_to_all volume.
+
+    Counts ``p * (p - 1)`` buffer slices — the p diagonal self-buckets of
+    the (p, cap, words) send buffer stay on their own shard and never
+    cross the interconnect, so including them (as this used to, p * p)
+    over-reported cross-shard traffic by p/(p-1)x (2x at p=2).
+    ``transfer_stats['all_to_all_bytes']`` is cross-shard bytes ONLY,
+    and is exactly 0 on a 1-shard mesh.
+    """
     from repro.graph.accumulator import record_all_to_all
-    cap = _exchange_capacity(n_local, p, capacity_factor)
-    record_all_to_all(p * p * cap * (nk + 1) * 4)
+    cap = exchange_capacity(n_local, p, capacity_factor)
+    record_all_to_all(p * (p - 1) * cap * (nk + 1) * 4)
 
 
 def distributed_sort(keys: jax.Array, payload: jax.Array,
@@ -171,6 +206,87 @@ def distributed_sort(keys: jax.Array, payload: jax.Array,
     )(*words, payload)
     out_k = outs[0] if nk == 1 else jnp.stack(outs[:nk], axis=-1)
     return out_k, outs[nk], outs[nk + 1], outs[nk + 2]
+
+
+def distributed_window_blocks(keys: jax.Array, gids: jax.Array,
+                              mesh: jax.sharding.Mesh, *,
+                              slot_offset: jax.Array, total_slots: int,
+                              axis: str = "data",
+                              capacity_factor: float = 2.0,
+                              bucket_word: Optional[int] = None):
+    """Sample-sort (keys, gids) and hand each shard its OWN window slot block.
+
+    The windows-sharded successor of :func:`distributed_argsort`: instead
+    of collapsing the sort to a replicated (n,) permutation that every
+    shard then re-expands into the full window grid, each sorted element
+    is scattered at its window SLOT (global sort rank + ``slot_offset`` —
+    the same position ``windows._scatter_to_slots`` gives it on one
+    device) and a single reduce-scatter leaves shard i holding exactly the
+    contiguous ``total_slots / p`` slot block of the window rows it will
+    score (``windows.shard_row_layout``).  Because ownership is decided in
+    slot space AFTER the sorting-mode shift, a window whose members come
+    from several shards' sorted output arrives whole at its one owner —
+    no halo exchange, no window ever straddles two owners unscored.
+
+    ``bucket_word`` names the key word carrying the folded LSH bucket id
+    (the LSH-mode sort key IS the bucket), which rides the same
+    reduce-scatter so the owner can rebuild bucket runs; empty slots come
+    back as gid -1 with the ``windows.PAD_BUCKET`` sentinel in either
+    mode.
+
+    Collective cost per repetition: the sample sort's one all_to_all
+    (recorded, cross-shard slices only) plus two O(total_slots) int32
+    reduce-scatters — the replicated-permutation psum this replaces moved
+    the same order of id bytes, so the win is the O(n*W/p) scoring, not
+    this exchange.  Over-capacity sort drops surface exactly as in
+    ``distributed_argsort``: the slot stays empty and the drop is counted.
+
+    Returns ``(block_gid, block_bucket, dropped)``: (total_slots,) int32 /
+    uint32 sharded over ``axis`` (shard i owns slots
+    ``[i * total_slots/p, ...)``), and (p,) int32 dropped-key counts.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.windows import PAD_BUCKET
+
+    words = _key_words(keys)
+    nk = len(words)
+    p = mesh.shape[axis]
+    if total_slots % p:
+        raise ValueError(f"total_slots {total_slots} not divisible by {p}")
+    _record_exchange(p, gids.shape[0] // p, nk, capacity_factor)
+
+    def body(offset, *args):
+        out_k, out_p, valid, dropped = _sample_sort_shard(
+            args[:nk], args[nk], axis=axis, capacity_factor=capacity_factor)
+        local_count = jnp.sum(valid).astype(jnp.int32)
+        counts = jax.lax.all_gather(local_count, axis)       # (p,)
+        me = jax.lax.axis_index(axis)
+        rank0 = jnp.sum(jnp.where(jnp.arange(p) < me, counts, 0))
+        local_rank = jnp.cumsum(valid).astype(jnp.int32) - valid
+        # dropped/invalid rows aim out of bounds -> mode="drop"
+        slot = jnp.where(valid, offset + rank0 + local_rank,
+                         jnp.int32(total_slots))
+        gbuf = jnp.zeros((total_slots,), jnp.int32).at[slot].add(
+            out_p + 1, mode="drop")
+        block_gid = psum_scatter(gbuf, axis, scatter_dimension=0,
+                                 tiled=True) - 1
+        if bucket_word is None:
+            block_bucket = jnp.where(block_gid >= 0, jnp.uint32(0),
+                                     PAD_BUCKET)
+        else:
+            bw = jnp.where(valid, out_k[bucket_word], jnp.uint32(0))
+            bbuf = jnp.zeros((total_slots,), jnp.uint32).at[slot].add(
+                bw, mode="drop")
+            bsum = psum_scatter(bbuf, axis, scatter_dimension=0, tiled=True)
+            block_bucket = jnp.where(block_gid >= 0, bsum, PAD_BUCKET)
+        return block_gid, block_bucket, dropped
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(),) + tuple(P(axis) for _ in range(nk + 1)),
+        out_specs=(P(axis), P(axis), P(axis)),
+    )(jnp.asarray(slot_offset, jnp.int32), *words, gids)
 
 
 def distributed_argsort(keys: jax.Array, gids: jax.Array,

@@ -8,34 +8,45 @@ degree slabs row-wise over the ``data`` axis and runs, per repetition
   1. sketch    — each `data` shard sketches its own points (no comms) and
                  packs the hash words + random tiebreak into multi-word
                  sort keys,
-  2. sort      — distributed sample-sort of (key, gid) pairs (sorter.py);
-                 ``distributed_argsort`` collapses the shard-contiguous
-                 output to the replicated global permutation — the same
-                 total order as the single-device ``jax.lax.sort``,
-  3. window    — the permutation feeds the SAME window construction and
-                 leader sampling as the single-device path (core/stars.py
-                 ``_score_windows``), so the candidate stream is identical
-                 point-for-point,
-  4. join+score— feature rows for window members are gathered across
-                 shards by gid (the DHT / shuffle-join analogue; XLA lowers
-                 the gather to collective traffic, visible in the roofline),
+  2. sort      — distributed sample-sort of (key, gid) pairs straight to
+                 per-shard WINDOW SLOT BLOCKS
+                 (sorter.distributed_window_blocks): one reduce-scatter in
+                 window-slot space hands each shard the contiguous
+                 ~n_windows/p rows it owns — the same total order as the
+                 single-device ``jax.lax.sort``, never replicated,
+  3. window    — each shard reshapes its slot block into ITS window rows;
+                 leader sampling and refresh masks are keyed by global
+                 window row (core/stars.py ``_score_windows`` row-slice
+                 mode), so draws match the single-device path exactly,
+  4. join+score— :func:`fetch_rows_all_to_all` (this module) fetches the
+                 feature (+ prefilter) rows of each shard's window slots
+                 from their owner shards in one explicit request/response
+                 all_to_all pair (the DHT / shuffle-join analogue, now a
+                 metered exchange instead of an XLA-inserted gather), and
+                 each shard scores ONLY its ~n_windows/p rows — per-shard
+                 scoring FLOPs are O(n*W/p),
   5. emit      — :func:`accumulate_all_to_all` (this module) buckets each
                  emitted (node, nbr, w) insertion triple by the shard that
                  owns the node's slab row, ships ALL cross-shard edge
                  traffic in ONE all_to_all, and folds the received triples
                  into the local slab shard with the regular accumulator
-                 machinery.  No XLA-inserted scatter collectives remain on
-                 the emit path, and the exchanged bytes are recorded in
-                 ``accumulator.transfer_stats['all_to_all_bytes']``.
+                 machinery.  No XLA-inserted scatter/gather collectives
+                 remain on the emit or feature-join paths, and every
+                 all_to_all exchange's cross-shard bytes are recorded in
+                 ``accumulator.transfer_stats['all_to_all_bytes']``
+                 (off-diagonal slices only — exactly 0 at p=1; the sort's
+                 O(4 bytes/point) id reduce-scatter stays unrecorded, like
+                 the replicated-permutation psum it replaced).
 
 The host never sees per-repetition edges: one slab fetch per ``finalize()``
 produces the Graph, the same single-transfer contract as the single-device
-backend.  Because phases 2-4 reproduce the single-device order and floats
-exactly and phase 5 routes every triple to its owning row before the same
+backend.  Because phases 2-4 reproduce the single-device order, draws and
+floats exactly — every global window row is scored exactly once, by one
+shard — and phase 5 routes every triple to its owning row before the same
 top-k fold, the mesh build is **edge-for-edge identical** to the
 single-device build (tests/test_mesh_parity.py).  See
 ``repro.core.builder._MeshBackend`` for the driver; this module keeps the
-emit primitive and the legacy one-shot entry point.
+fetch + emit primitives and the legacy one-shot entry point.
 """
 
 from __future__ import annotations
@@ -49,14 +60,20 @@ import jax.numpy as jnp
 from repro.compat import all_to_all, shard_map
 from repro.core.spanner import Graph
 from repro.core.stars import StarsConfig
+from repro.distributed.sorter import exchange_capacity
 from repro.graph import accumulator as acc_lib
 
 _U32_ONES = jnp.uint32(0xFFFFFFFF)
 
 
 def _emit_capacity(m2: int, p: int, capacity_factor: float) -> int:
-    """Per-destination-shard triple capacity of one emit exchange."""
-    return int(capacity_factor * m2 / p) + 1
+    """Per-destination-shard triple capacity of one emit exchange.
+
+    Delegates to :func:`repro.distributed.sorter.exchange_capacity` — the
+    exact-integer sizing shared by every fixed-shape exchange (the float
+    product it replaces could under-size tera-scale buffers).
+    """
+    return exchange_capacity(m2, p, capacity_factor)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1),
@@ -127,6 +144,110 @@ def _emit_exchange(slab_nbr, slab_w, src, dst, w, valid, *,
     )(slab_nbr, slab_w, src, dst, w, valid)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "axis", "capacity_factor"))
+def _fetch_exchange(table, gids, *, mesh, axis: str, capacity_factor: float):
+    """shard_map body wrapper: request rows by owner -> two all_to_alls."""
+    from jax.sharding import PartitionSpec as P
+
+    p = mesh.shape[axis]
+    rows = table.shape[0] // p              # feature rows per owner shard
+    d = table.shape[1]
+
+    def fetch_shard(table_l, gid_l):
+        s = gid_l.shape[0]
+        cap = exchange_capacity(s, p, capacity_factor)
+        live = gid_l >= 0
+        owner = jnp.where(live, jnp.clip(gid_l // rows, 0, p - 1), p)
+        iota = jnp.arange(s, dtype=jnp.int32)
+        owner_s, idx_s = jax.lax.sort((owner.astype(jnp.int32), iota),
+                                      num_keys=1)
+        start = jnp.searchsorted(owner_s, jnp.arange(p)).astype(jnp.int32)
+        rank = iota - start[jnp.clip(owner_s, 0, p - 1)]
+        live_s = owner_s < p
+        keep = live_s & (rank < cap)
+        dropped = jnp.sum(live_s & ~keep).astype(jnp.int32)[None]
+
+        # request rows in the OWNER's local coordinates
+        loc = gid_l[idx_s] - owner_s * rows
+        b_idx = jnp.where(keep, owner_s, 0)
+        r_idx = jnp.where(keep, rank, cap)             # OOB -> dropped
+        send_req = jnp.full((p, cap), -1, jnp.int32).at[b_idx, r_idx].set(
+            jnp.where(keep, loc, -1), mode="drop")
+        recv_req = all_to_all(send_req, axis, split_axis=0, concat_axis=0,
+                              tiled=False)             # (p, cap) asks for me
+        ok_req = (recv_req >= 0) & (recv_req < rows)
+        resp = table_l[jnp.clip(recv_req, 0, rows - 1)]
+        resp = jnp.where(ok_req[..., None], resp, 0)   # (p, cap, d)
+        recv_rows = all_to_all(resp, axis, split_axis=0, concat_axis=0,
+                               tiled=False)            # answers, my layout
+        got = recv_rows[b_idx, jnp.where(keep, rank, 0)]
+        out = jnp.zeros((s, d), table_l.dtype).at[idx_s].set(
+            jnp.where(keep[:, None], got, 0))
+        ok = jnp.zeros((s,), bool).at[idx_s].set(keep)
+        return out, ok, dropped
+
+    return shard_map(
+        fetch_shard, mesh=mesh,
+        in_specs=(P(axis, None), P(axis)),
+        out_specs=(P(axis, None), P(axis), P(axis)),
+    )(table, gids)
+
+
+def fetch_rows_all_to_all(table: jax.Array, gids: jax.Array, *, mesh,
+                          axis: str = "data", capacity_factor: float = 2.0):
+    """Gather ``table`` rows for per-shard gid lists via explicit exchanges.
+
+    The owner-keyed feature fetch of the windows-sharded scoring phase
+    (core/builder.py ``_MeshBackend``): each shard holds the gids of the
+    window slots it will score (``sorter.distributed_window_blocks``) and
+    needs those points' feature rows, which live wherever the row-block
+    layout put them (gid // (n_pad/p)).  Same bucket-by-owner + fixed
+    capacity + single all_to_all pattern as :func:`accumulate_all_to_all`,
+    doubled into a request/response pair:
+
+      1. bucket my gids by owner shard, localize, ship the (p, cap) int32
+         request buffer in one all_to_all,
+      2. every owner gathers the asked-for rows from its local table block
+         and ships the (p, cap, d) response back in a second all_to_all
+         (the answers land aligned with my request slots),
+      3. scatter responses back to slot order.
+
+    This makes the scoring-phase feature join an explicit, metered
+    exchange instead of an XLA-inserted gather collective: both buffers
+    are recorded in ``transfer_stats['all_to_all_bytes']`` (cross-shard
+    slices only — the diagonal never moves).  Per shard the volume is
+    O(slots/p * d): each shard fetches features for its ~n/p window slots
+    ONCE per repetition, the distributed analogue of the single-device
+    path reading each member row once per window it appears in.
+
+    Over-capacity requests are dropped and counted, and the affected slot
+    comes back with ``ok`` False — the scorer invalidates it (a counted,
+    graceful comparison loss, never a garbage similarity).  Zero drops at
+    the default factor: slot owners are hash-random, so per-owner request
+    counts concentrate at slots/p with 2x headroom.
+
+    Args:
+      table: (n_pad, d) row-sharded table (features, or features with
+        packed prefilter words bitcast alongside); n_pad % p == 0.
+      gids:  (S,) int32 global ids per slot, -1 for empty slots; sharded.
+    Returns:
+      (rows (S, d) slot-aligned, ok (S,) bool, dropped (p,) int32).
+    """
+    p = mesh.shape[axis]
+    if table.shape[0] % p:
+        raise ValueError(f"table rows {table.shape[0]} not divisible by "
+                         f"mesh axis {p}")
+    if gids.shape[0] % p:
+        raise ValueError(f"slot count {gids.shape[0]} not divisible by "
+                         f"mesh axis {p}")
+    cap = exchange_capacity(gids.shape[0] // p, p, capacity_factor)
+    acc_lib.record_all_to_all(p * (p - 1) * cap * 4)               # requests
+    acc_lib.record_all_to_all(p * (p - 1) * cap * table.shape[1] * 4)
+    return _fetch_exchange(table, gids, mesh=mesh, axis=axis,
+                           capacity_factor=capacity_factor)
+
+
 def accumulate_all_to_all(state: acc_lib.EdgeAccumulator,
                           src: jax.Array, dst: jax.Array, w: jax.Array,
                           valid: jax.Array, *, mesh, axis: str = "data",
@@ -170,8 +291,10 @@ def accumulate_all_to_all(state: acc_lib.EdgeAccumulator,
         w = jnp.pad(w, (0, pad))
         valid = jnp.pad(valid, (0, pad))
     m2 = 2 * (src.shape[0] // p)
+    # p*(p-1) slices: the p diagonal self-buckets of the send buffer never
+    # cross the interconnect (all_to_all_bytes is cross-shard-only)
     acc_lib.record_all_to_all(
-        p * p * _emit_capacity(m2, p, capacity_factor) * 3 * 4)
+        p * (p - 1) * _emit_capacity(m2, p, capacity_factor) * 3 * 4)
     nbr, ww, dropped = _emit_exchange(
         state.nbr, state.w, src, dst, w, valid,
         mesh=mesh, axis=axis, capacity_factor=capacity_factor)

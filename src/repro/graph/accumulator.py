@@ -48,9 +48,14 @@ _BIG = jnp.int32(2**31 - 1)
 # snapshots (GraphBuilder.checkpoint) are tracked separately — they are
 # deliberate, user-requested transfers, not part of the build loop.
 # ``all_to_all_*`` counts the *device-to-device* buffer volume of every
-# explicit cross-shard exchange (the sample-sort partition and the mesh
-# edge emit of distributed/stars_dist.py) — the comms side of the tera-
-# scale story, measurable per build and asserted in tests.
+# explicit exchange (the sample-sort partition, the scoring-phase feature
+# fetch and the mesh edge emit of distributed/stars_dist.py) — the comms
+# side of the tera-scale story, measurable per build and asserted in
+# tests.  ``all_to_all_bytes`` is CROSS-SHARD volume only: each (p, cap,
+# ...) exchange buffer's p diagonal self-buckets stay on their own shard,
+# so recorders count p*(p-1) slices — the stat is exactly 0 on a 1-shard
+# mesh, and no longer over-reports interconnect traffic by p/(p-1)x
+# (``all_to_all_calls`` still counts every exchange, diagonal included).
 transfer_stats: Dict[str, int] = {"edge_fetches": 0, "bytes": 0,
                                   "checkpoint_fetches": 0,
                                   "checkpoint_bytes": 0,
@@ -64,8 +69,9 @@ def reset_transfer_stats() -> None:
 
 
 def record_all_to_all(nbytes: int) -> None:
-    """Account one explicit all_to_all exchange (total buffer bytes moved
-    across all shards; computed host-side from static shapes)."""
+    """Account one explicit all_to_all exchange (CROSS-SHARD buffer bytes
+    moved, i.e. the p*(p-1) off-diagonal slices; computed host-side from
+    static shapes — callers exclude their diagonal self-buckets)."""
     transfer_stats["all_to_all_calls"] += 1
     transfer_stats["all_to_all_bytes"] += int(nbytes)
 

@@ -41,6 +41,32 @@ def test_distributed_sort_is_globally_sorted():
     assert res["kept"] == res["n"]
 
 
+def test_distributed_argsort_replicates_global_permutation():
+    """distributed_argsort (the replicated-permutation view kept for
+    consumers that need the full (n,) order — the mesh build itself now
+    consumes per-shard window blocks) returns exactly the host argsort,
+    on every shard, with gid tiebreaks for equal keys."""
+    res = _run_sub("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.sorter import distributed_argsort
+        mesh = jax.make_mesh((8,), ("data",))
+        n = 8 * 256
+        rs = np.random.RandomState(1)
+        # few distinct values -> plenty of ties for the gid tiebreak
+        keys = jnp.asarray(rs.randint(0, 64, n, dtype=np.uint32))
+        gids = jnp.arange(n, dtype=jnp.int32)
+        perm, dropped = distributed_argsort(keys, gids, mesh, n)
+        expect = np.argsort(np.asarray(keys), kind="stable")
+        print(json.dumps({
+            "equal": bool((np.asarray(perm) == expect).all()),
+            "dropped": int(np.sum(np.asarray(dropped))),
+        }))
+    """)
+    assert res["equal"]
+    assert res["dropped"] == 0
+
+
 def test_distributed_stars_matches_single_device_recall():
     res = _run_sub("""
         import json

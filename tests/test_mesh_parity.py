@@ -1,21 +1,31 @@
 """Mesh-backend equivalence suite: the distributed build is not "close to"
 the single-device build — it is edge-for-edge IDENTICAL, at every shard
 count, because the mesh pipeline reproduces the single-device sort order,
-PRNG draws and scoring floats exactly and routes every edge insertion to
-its owning slab row through one explicit all_to_all
+PRNG draws and scoring floats exactly, scores every global window row on
+exactly ONE shard (the windows-sharded scoring phase), and routes every
+edge insertion to its owning slab row through one explicit all_to_all
 (distributed/stars_dist.py).
 
 Tests spawn subprocesses with ``--xla_force_host_platform_device_count``
 so the main pytest process keeps the real device count (the same pattern
 as tests/test_distributed.py).  Covered:
 
-  * add_reps + finalize parity for 1, 2 and 4 forced devices, on both
-    'lsh-stars' and 'sorting-stars' (edges AND comparison counts),
-  * mesh extend(): edge-for-edge equal to single-device extend, and
-    two-hop recall within 2% of a from-scratch mesh rebuild,
+  * add_reps + finalize parity for 1, 2 and 4 forced devices, on all four
+    windowed sources (edges AND comparison counts),
+  * mesh extend() AND refresh rounds: edge-for-edge equal to the
+    single-device incremental build for all four sources at 1/2/4
+    devices, and two-hop recall within 2% of a from-scratch mesh rebuild,
+  * windows-sharded scoring: per-shard scored-window counts cover every
+    global window row exactly once (sum == n_windows, max <=
+    ceil(n_windows / p)), and the per-shard slot blocks assemble to the
+    exact single-device window grid even when a window's members straddle
+    two shards' sample-sort output blocks (the boundary-window case),
   * invariants: one device->host edge fetch per finalize(), the explicit
-    emit's all_to_all accounting (two exchanges per repetition: sort +
-    emit), no reliance on XLA scatter collectives for slab updates,
+    all_to_all accounting (four exchange buffers per repetition: sort +
+    feature request + feature response + emit) with
+    ``all_to_all_bytes`` counting CROSS-SHARD slices only (exactly 0 on a
+    1-shard mesh), no reliance on XLA scatter/gather collectives for slab
+    updates or the scoring-phase feature join,
   * checkpoint/restore bit-exact across a reshard (mesh p=4 -> p=2 ->
     single device).
 """
@@ -58,6 +68,7 @@ def test_mesh_build_edge_for_edge_equals_single_device(devices):
                 ("sorting", "stars", 16, 64, 6),
                 ("lsh", "allpairs", 8, 64, 3),
                 ("sorting", "allpairs", 16, 32, 3)]
+        from repro.core.windows import shard_row_layout
         for mode, scoring, m, window, reps in grid:
             cfg = StarsConfig(mode=mode, scoring=scoring,
                               family=HashFamilyConfig("simhash", m=m),
@@ -68,11 +79,15 @@ def test_mesh_build_edge_for_edge_equals_single_device(devices):
             g2 = GraphBuilder(feats.dense, cfg, mesh=mesh)\\
                 .add_reps(reps).finalize()
             ts = acc_lib.transfer_stats
+            nw, _, _ = shard_row_layout(mode, feats.n, window, {devices})
             out[f"{{mode}}-{{scoring}}"] = {{
                 "edges_equal": edges(g1) == edges(g2),
                 "n_edges": g2.num_edges,
                 "comp_single": g1.stats["comparisons"],
                 "comp_mesh": g2.stats["comparisons"],
+                "scored_single": g1.stats["scored_windows"],
+                "scored_mesh": g2.stats["scored_windows"],
+                "n_windows": nw,
                 "dropped": int(g2.stats["dropped"]),
                 "edge_fetches": ts["edge_fetches"],
                 "a2a_calls": ts["all_to_all_calls"],
@@ -88,46 +103,76 @@ def test_mesh_build_edge_for_edge_equals_single_device(devices):
         assert r["n_edges"] > 0
         assert r["comp_single"] == r["comp_mesh"]
         assert r["dropped"] == 0
-        # ONE device->host edge fetch; explicit comms: one sort exchange
-        # plus one emit exchange per repetition, bytes accounted
+        # every global window row scored exactly once per repetition, on
+        # both backends (the windows-sharded coverage invariant)
+        assert r["scored_single"] == r["scored_mesh"] \
+            == r["reps"] * r["n_windows"]
+        # ONE device->host edge fetch; explicit comms: sort + feature
+        # request + feature response + emit buffers per repetition, with
+        # bytes counting cross-shard slices ONLY (0 on a 1-shard mesh)
         assert r["edge_fetches"] == 1
-        assert r["a2a_calls"] == 2 * r["reps"]
-        assert r["a2a_bytes"] > 0
+        assert r["a2a_calls"] == 4 * r["reps"]
+        if devices > 1:
+            assert r["a2a_bytes"] > 0
+        else:
+            assert r["a2a_bytes"] == 0
 
 
-@pytest.mark.parametrize("devices", [2, 4])
-def test_mesh_extend_edge_for_edge_equals_single_device(devices):
-    """extend() no longer raises on the mesh: growing + rescoring the
-    resharded tables reproduces the single-device incremental build
-    exactly, with an insertion size chosen so the padded row count (and so
-    the row->shard map) changes mid-session."""
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_mesh_extend_and_refresh_edge_for_edge_equals_single_device(devices):
+    """Incremental sessions on the mesh — extend() (pad-and-reshard +
+    masked new-vs-all rounds), the automatic cfg.refresh_rate policy and
+    manual refresh_reps() — reproduce the single-device build exactly for
+    ALL FOUR windowed sources at 1/2/4 devices, refresh counters included.
+    The insertion size is chosen so the padded row count (and so the
+    row->shard map) changes mid-session."""
     res = _run_sub(_COMMON + f"""
         feats, _ = mnist_like_points(n=600, d=24, classes=6, spread=0.25,
                                      seed=0)
         n0 = 487                    # not divisible by any mesh size
-        cfg = StarsConfig(mode="sorting", scoring="stars",
-                          family=HashFamilyConfig("simhash", m=16),
-                          measure="cosine", r=4, window=64, leaders=8,
-                          degree_cap=20, seed=3)
         mesh = jax.make_mesh(({devices},), ("data",))
         old = feats.take(np.arange(n0))
         new = feats.take(np.arange(n0, 600))
-        b1 = GraphBuilder(old, cfg).add_reps(4)
-        b1.extend(new, reps=4)
-        g1 = b1.finalize()
-        b2 = GraphBuilder(np.asarray(old.dense), cfg, mesh=mesh).add_reps(4)
-        b2.extend(np.asarray(new.dense), reps=4)
-        g2 = b2.finalize()
-        print(json.dumps({{
-            "edges_equal": edges(g1) == edges(g2),
-            "comp_single": g1.stats["comparisons"],
-            "comp_mesh": g2.stats["comparisons"],
-            "dropped": int(g2.stats["dropped"]),
-        }}))
+        out = {{}}
+        grid = [("lsh", "stars", 8, 128), ("sorting", "stars", 16, 64),
+                ("lsh", "allpairs", 8, 64), ("sorting", "allpairs", 16, 32)]
+        for mode, scoring, m, window in grid:
+            cfg = StarsConfig(mode=mode, scoring=scoring,
+                              family=HashFamilyConfig("simhash", m=m),
+                              measure="cosine", r=3, window=window,
+                              leaders=8, degree_cap=20, seed=3,
+                              refresh_rate=0.5, refresh_fraction=0.5)
+            b1 = GraphBuilder(old, cfg).add_reps(3)
+            b1.extend(new, reps=3)             # + auto refresh rounds
+            b1.refresh_reps(2, fraction=0.7)   # + manual ones
+            g1 = b1.finalize()
+            b2 = GraphBuilder(np.asarray(old.dense), cfg, mesh=mesh)\\
+                .add_reps(3)
+            b2.extend(np.asarray(new.dense), reps=3)
+            b2.refresh_reps(2, fraction=0.7)
+            g2 = b2.finalize()
+            out[f"{{mode}}-{{scoring}}"] = {{
+                "edges_equal": edges(g1) == edges(g2),
+                "n_edges": g2.num_edges,
+                "comp_single": g1.stats["comparisons"],
+                "comp_mesh": g2.stats["comparisons"],
+                "rreps_single": g1.stats["refresh_reps"],
+                "rreps_mesh": g2.stats["refresh_reps"],
+                "rcomp_single": g1.stats["refresh_comparisons"],
+                "rcomp_mesh": g2.stats["refresh_comparisons"],
+                "dropped": int(g2.stats["dropped"]),
+            }}
+        print(json.dumps(out))
     """, devices)
-    assert res["edges_equal"], res
-    assert res["comp_single"] == res["comp_mesh"]
-    assert res["dropped"] == 0
+    for source in ("lsh-stars", "sorting-stars",
+                   "lsh-allpairs", "sorting-allpairs"):
+        r = res[source]
+        assert r["edges_equal"], (source, r)
+        assert r["n_edges"] > 0
+        assert r["comp_single"] == r["comp_mesh"]
+        assert r["rreps_single"] == r["rreps_mesh"] == 3
+        assert r["rcomp_single"] == r["rcomp_mesh"] > 0
+        assert r["dropped"] == 0
 
 
 def test_mesh_extend_recall_parity_vs_rebuild():
@@ -173,52 +218,116 @@ def test_mesh_extend_recall_parity_vs_rebuild():
     assert res["ext_comps"] < 0.6 * res["full_comps"], res
 
 
-@pytest.mark.parametrize("devices", [2, 4])
-def test_mesh_refresh_rounds_edge_for_edge_equal(devices):
-    """Staleness-repair rounds (GraphBuilder.refresh_reps + the automatic
-    cfg.refresh_rate policy) run through the shared scoring path, so a
-    session interleaving extend(), auto-refresh and manual refresh rounds
-    stays edge-for-edge identical between the mesh and single-device
-    backends — including the refresh counters."""
-    res = _run_sub(_COMMON + f"""
-        feats, _ = mnist_like_points(n=600, d=24, classes=6, spread=0.25,
+def test_window_blocks_match_single_device_grid_across_block_boundaries():
+    """The sorter's per-shard window slot blocks assemble to EXACTLY the
+    single-device window grid — including the boundary-window (halo) case:
+    with n/p not a multiple of W, windows routinely straddle two shards'
+    sample-sort output blocks, and slot-space ownership must still deliver
+    every such window whole (gids AND buckets, pad slots carrying the
+    sentinel) to its one owner."""
+    res = _run_sub("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import windows as win_lib
+        from repro.core.builder import _MeshBackend
+        from repro.core import StarsConfig, HashFamilyConfig
+        from repro.core.windows import PAD_BUCKET, shard_row_layout
+        from repro.data import mnist_like_points
+        from repro.distributed.sorter import distributed_window_blocks
+        from repro.similarity.measures import PointFeatures
+
+        p, n, w = 4, 302, 64        # blocks of ~75.5 ranks: every shard
+        feats, _ = mnist_like_points(n=n, d=16, classes=5,   # boundary
+                                     spread=0.25, seed=0)   # splits a window
+        mesh = jax.make_mesh((p,), ("data",))
+        out = {}
+        for mode in ("sorting", "lsh"):
+            cfg = StarsConfig(mode=mode, scoring="stars",
+                              family=HashFamilyConfig("simhash", m=8),
+                              measure="cosine", r=1, window=w, leaders=4,
+                              degree_cap=10, seed=7)
+            be = _MeshBackend(PointFeatures(dense=feats.dense), cfg, mesh)
+            sketch_fn, offset_fn, _, _ = be._bind(0)
+            rep = jnp.int32(0)
+            keys, gids, bucket = sketch_fn(be.dense, rep)
+            nw, rps, total_slots = shard_row_layout(mode, n, w, p)
+            blk_gid, blk_bucket, dropped = distributed_window_blocks(
+                keys, gids, mesh, slot_offset=offset_fn(rep),
+                total_slots=total_slots, axis="data", capacity_factor=2.0,
+                bucket_word=0 if mode == "lsh" else None)
+            # single-device reference grid from the same sketch draw
+            from repro.core.stars import _rep_keys, _rep_candidates
+            keys_h = np.asarray(keys)[:n]
+            gids_h = np.asarray(gids)[:n]
+            # word-0-first lexicographic with gid as the final tiebreak —
+            # the exact total order the distributed sample sort produces
+            order = sorted(range(n), key=lambda i: (tuple(keys_h[i]),
+                                                    gids_h[i]))
+            perm = jnp.asarray(gids_h[np.asarray(order)], jnp.int32)
+            if mode == "lsh":
+                perm_bucket = jnp.asarray(np.asarray(keys_h)[order, 0],
+                                          jnp.uint32)
+            else:
+                perm_bucket = jnp.zeros((n,), jnp.uint32)
+            ref = win_lib._scatter_to_slots(
+                perm, perm_bucket, offset_fn(rep), total_slots, w)
+            grid_gid = np.asarray(blk_gid).reshape(-1, w)
+            grid_bucket = np.asarray(blk_bucket).reshape(-1, w)
+            ref_gid = np.asarray(ref.gid)
+            ref_bucket = np.asarray(ref.bucket)
+            out[mode] = {
+                "gid_equal": bool((grid_gid == ref_gid).all()),
+                "bucket_equal": bool((grid_bucket == ref_bucket).all()),
+                "pad_sentinel": bool(
+                    (grid_bucket[grid_gid < 0] == int(PAD_BUCKET)).all()),
+                "n_pad_slots": int((grid_gid < 0).sum()),
+                "dropped": int(np.asarray(dropped).sum()),
+                "n_windows": nw, "rows_per_shard": rps,
+            }
+        print(json.dumps(out))
+    """, 4)
+    for mode in ("sorting", "lsh"):
+        r = res[mode]
+        assert r["gid_equal"], (mode, r)
+        assert r["bucket_equal"], (mode, r)
+        assert r["pad_sentinel"], (mode, r)
+        assert r["n_pad_slots"] > 0          # the grid HAS pad slots
+        assert r["dropped"] == 0
+        # the static partition covers n_windows with ceil(n_windows/p)
+        # rows per shard (a trailing shard may own only overflow rows)
+        assert r["rows_per_shard"] == -(-r["n_windows"] // 4), r
+
+
+def test_per_shard_scored_window_counts_partition_the_grid():
+    """Each shard scores ~n_windows/p rows and every global window row is
+    scored exactly once: the per-shard ``scored_windows`` counters sum to
+    n_windows per repetition with the per-shard maximum at
+    ceil(n_windows / p) — the O(n*W/p) work bound behind the
+    windows-sharded scoring phase."""
+    res = _run_sub(_COMMON + """
+        from repro.core.windows import shard_row_layout
+        feats, _ = mnist_like_points(n=602, d=24, classes=6, spread=0.25,
                                      seed=0)
-        n0 = 487                    # not divisible by any mesh size
+        p = 4
+        mesh = jax.make_mesh((p,), ("data",))
         cfg = StarsConfig(mode="sorting", scoring="stars",
                           family=HashFamilyConfig("simhash", m=16),
-                          measure="cosine", r=4, window=64, leaders=8,
-                          degree_cap=20, seed=3,
-                          refresh_rate=0.5, refresh_fraction=0.5)
-        mesh = jax.make_mesh(({devices},), ("data",))
-        old = feats.take(np.arange(n0))
-        new = feats.take(np.arange(n0, 600))
-
-        b1 = GraphBuilder(old, cfg).add_reps(4)
-        b1.extend(new, reps=4)                     # + 2 auto refresh reps
-        b1.refresh_reps(2, fraction=0.7)           # + 2 manual ones
-        g1 = b1.finalize()
-        b2 = GraphBuilder(np.asarray(old.dense), cfg, mesh=mesh).add_reps(4)
-        b2.extend(np.asarray(new.dense), reps=4)
-        b2.refresh_reps(2, fraction=0.7)
-        g2 = b2.finalize()
-        print(json.dumps({{
-            "edges_equal": edges(g1) == edges(g2),
-            "n_edges": g2.num_edges,
-            "comp_single": g1.stats["comparisons"],
-            "comp_mesh": g2.stats["comparisons"],
-            "rreps_single": g1.stats["refresh_reps"],
-            "rreps_mesh": g2.stats["refresh_reps"],
-            "rcomp_single": g1.stats["refresh_comparisons"],
-            "rcomp_mesh": g2.stats["refresh_comparisons"],
-            "dropped": int(g2.stats["dropped"]),
-        }}))
-    """, devices)
-    assert res["edges_equal"], res
-    assert res["n_edges"] > 0
-    assert res["comp_single"] == res["comp_mesh"]
-    assert res["rreps_single"] == res["rreps_mesh"] == 4
-    assert res["rcomp_single"] == res["rcomp_mesh"] > 0
-    assert res["dropped"] == 0
+                          measure="cosine", r=2, window=64, leaders=8,
+                          degree_cap=20, seed=3)
+        b = GraphBuilder(feats.dense, cfg, mesh=mesh).add_reps(2)
+        nw, rps, _ = shard_row_layout("sorting", feats.n, 64, p)
+        per_round = [np.asarray(c["scored_windows"]).tolist()
+                     for c in b._counters]
+        print(json.dumps({"per_round": per_round, "nw": nw, "rps": rps,
+                          "total": b.stats["scored_windows"]}))
+    """, 4)
+    nw, rps = res["nw"], res["rps"]
+    assert rps == -(-nw // 4)
+    for counts in res["per_round"]:
+        assert len(counts) == 4
+        assert sum(counts) == nw             # exactly once, no overlap
+        assert max(counts) <= rps            # ~n_windows/p per shard
+    assert res["total"] == 2 * nw
 
 
 def test_mesh_refresh_checkpoint_bit_exact_across_reshard():

@@ -1,0 +1,155 @@
+"""Sort-and-window machinery unit tests (core/windows.py).
+
+Regression focus: pad-slot bucket aliasing.  Window grids carry a bucket
+id per slot; padding slots (gid -1) used to carry bucket 0 — a REAL folded
+bucket id — on the single-device path, and the mesh path's old
+``bucket[max(perm, 0)]`` lookup handed them point 0's bucket.  Either way,
+a pad slot could alias a genuine bucket and the validity mask was the ONLY
+thing standing between that and a phantom same-bucket match against a
+nonexistent point (gid -1, whose "features" are row 0's).  The
+forced-collision test below proves the mask was load-bearing by switching
+it off; the fix gives pad slots the ``PAD_BUCKET`` sentinel on both paths
+(``_scatter_to_slots`` and ``sorter.distributed_window_blocks``), making
+the separation structural — defense in depth, not a behavior change.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import windows as win_lib
+from repro.core.stars import StarsConfig, _rep_keys, _score_windows
+from repro.core.windows import PAD_BUCKET
+from repro.similarity.measures import PointFeatures, pairwise_similarity
+
+pytestmark = pytest.mark.fast
+
+
+def _lsh_cfg(scoring: str) -> StarsConfig:
+    return StarsConfig(mode="lsh", scoring=scoring, measure="cosine",
+                       window=4, leaders=2, degree_cap=8, seed=0)
+
+
+def _score(cfg, win, feats):
+    measure_fn = pairwise_similarity(cfg.measure)
+    _, _, k_lead, k_refresh = _rep_keys(cfg, jnp.int32(0))
+    return _score_windows(cfg, feats, measure_fn, None, win, k_lead,
+                          k_refresh=k_refresh)
+
+
+def test_pad_slots_carry_sentinel_bucket():
+    """lsh_windows / sorting_lsh_windows give every padding slot gid -1
+    AND the PAD_BUCKET sentinel — never a real bucket id."""
+    n, w = 6, 4
+    bucket = jnp.zeros((n,), jnp.uint32)       # all points in bucket 0
+    tiebreak = jnp.arange(n, dtype=jnp.uint32)
+    win = win_lib.lsh_windows(bucket, window=w, tiebreak=tiebreak)
+    gid = np.asarray(win.gid).ravel()
+    bkt = np.asarray(win.bucket).ravel()
+    assert (gid < 0).sum() == 2                # 6 points in 8 slots
+    assert (bkt[gid < 0] == int(PAD_BUCKET)).all()
+    assert (bkt[gid >= 0] == 0).all()
+
+    words = jnp.zeros((n, 2), jnp.uint32)
+    win_s = win_lib.sorting_lsh_windows(words, window=w,
+                                        shift_key=jax.random.key(1),
+                                        tiebreak=tiebreak)
+    gid_s = np.asarray(win_s.gid).ravel()
+    bkt_s = np.asarray(win_s.bucket).ravel()
+    assert (bkt_s[gid_s < 0] == int(PAD_BUCKET)).all()
+    assert (bkt_s[gid_s >= 0] == 0).all()
+
+
+@pytest.mark.parametrize("scoring", ["allpairs", "stars"])
+def test_pad_slot_bucket_aliasing_forced_collision(scoring):
+    """Force the pre-fix collision — pad slots sharing a REAL bucket id —
+    and show the validity mask was the only protection: with the mask
+    switched off, the aliased grid scores phantom pairs against gid -1,
+    while the sentinel grid scores none.
+
+    Grid under test: 6 real points, all in folded bucket 0, window 4 ->
+    window row 1 holds 2 real bucket-0 points followed by 2 pad slots.
+    Pre-fix, those pads carried bucket 0 too (the scatter's zeros init; on
+    the mesh, point 0's bucket via ``bucket[max(perm, 0)]``), i.e. exactly
+    this "aliased" grid.
+    """
+    cfg = _lsh_cfg(scoring)
+    n, w = 6, 4
+    feats = PointFeatures(dense=jax.random.normal(jax.random.key(2),
+                                                  (n, 8), jnp.float32))
+    bucket = jnp.zeros((n,), jnp.uint32)
+    tiebreak = jnp.arange(n, dtype=jnp.uint32)
+    win = win_lib.lsh_windows(bucket, window=w, tiebreak=tiebreak)
+
+    aliased = win_lib.Windows(gid=win.gid, valid=win.valid,
+                              bucket=jnp.where(win.gid >= 0, win.bucket,
+                                               jnp.uint32(0)))
+
+    def comparisons(w_):
+        return int(np.sum(np.asarray(_score(cfg, w_, feats)["comparisons"],
+                                     np.int64)))
+
+    # with the mask ON, sentinel and aliased grids agree (the mask holds
+    # the line today — that equality is what kept the bug latent)
+    base = comparisons(win)
+    assert comparisons(aliased) == base
+
+    # switch the mask off (mark every slot valid): the aliased grid now
+    # "same-bucket"-matches REAL points against pad slots — phantom pairs
+    # with one gid -1 endpoint scored against point 0's features.  The
+    # sentinel grid can at most pair pads with pads (PAD == PAD, an
+    # artifact of disabling the mask): a pad slot can never reach a real
+    # bucket, which is the structural fix.
+    unmasked = lambda w_: win_lib.Windows(
+        gid=w_.gid, valid=jnp.ones_like(w_.valid), bucket=w_.bucket)
+    assert comparisons(unmasked(aliased)) > comparisons(unmasked(win)), (
+        "expected phantom same-bucket matches from aliased pad buckets")
+
+    def mixed_real_pad_pairs(w_):
+        out = _score(cfg, w_, feats)
+        emit = np.asarray(out["emit"])
+        src, dst = np.asarray(out["src"]), np.asarray(out["dst"])
+        return int(((src[emit] < 0) ^ (dst[emit] < 0)).sum())
+
+    assert mixed_real_pad_pairs(unmasked(aliased)) > 0, (
+        "aliased pad buckets should phantom-match real points")
+    assert mixed_real_pad_pairs(unmasked(win)) == 0, (
+        "sentinel pad buckets must never same-bucket-match a real bucket")
+
+
+def test_shard_row_layout_partitions_every_grid():
+    """shard_row_layout covers the slot grid exactly: p * rows_per_shard
+    rows >= n_windows, rows_per_shard == ceil(n_windows / p), padded slot
+    count a multiple of p * W."""
+    for mode in ("lsh", "sorting"):
+        for n in (1, 7, 250, 251, 602, 4000):
+            for w_sz in (4, 64, 250):
+                for p in (1, 2, 4, 8):
+                    nw, rps, slots = win_lib.shard_row_layout(
+                        mode, n, w_sz, p)
+                    assert nw == win_lib.window_slot_count(
+                        mode, n, w_sz) // w_sz
+                    assert rps == -(-nw // p)
+                    assert slots == p * rps * w_sz
+                    assert slots >= win_lib.window_slot_count(mode, n, w_sz)
+
+
+def test_global_row_draw_slices_match_full_draw():
+    """A shard slicing rows [r0, r0+k) out of the global draw sees exactly
+    the rows the single-device draw produces — for every offset, including
+    the clamped all-overflow tail."""
+    key = jax.random.key(3)
+    total, w_sz = 7, 5
+    draw = lambda rows: jax.random.uniform(key, (rows, w_sz))
+    full = np.asarray(win_lib.global_row_draw(draw, total, 0, None, -1.0))
+    for k in (2, 3):
+        for r0 in range(0, total + k):
+            got = np.asarray(win_lib.global_row_draw(draw, k, r0, total,
+                                                     -1.0))
+            for j in range(k):
+                row = r0 + j
+                if row < total:
+                    assert (got[j] == full[row]).all(), (k, r0, j)
+                else:
+                    assert (got[j] == -1.0).all(), (k, r0, j)
