@@ -1,51 +1,74 @@
-"""Roofline summary rows from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Comms-roofline rows: wire bytes per similarity comparison.
 
-Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and emits one
-row per (arch x shape) single-pod cell: the three roofline terms, the
-dominant one, and the MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+The paper's cost model makes similarity comparisons the unit of work; the
+mesh backend's observable comms cost is the metered all_to_all volume
+(``graph/accumulator.transfer_stats`` — WIRE bytes: bit-packed sort keys,
+packed emit triples, bf16 weights when ``exact_weights=False``).  Their
+ratio — bytes moved across the interconnect per comparison paid — is the
+machine-independent roofline of the distributed build: at a given
+interconnect bandwidth B and per-comparison FLOP cost, a build is
+comms-bound exactly when bytes/comparison exceeds B / comparison-rate, so
+driving the ratio down (the PR-6 packing diet) is what moves the mesh from
+comms-bound toward the compute roofline.
+
+Rows are computed from the builder bench dump: a fresh ``BENCH_builder.json``
+in the cwd when one exists (i.e. this module runs after
+``builder_bench.builder_table()`` inside ``benchmarks.run``), else the
+committed baseline next to this file — so the table works standalone
+without re-running the ~2-minute mesh benches.  Regression gating of the
+ratio lives in ``benchmarks/run.py --check`` (CHECK_MAX_BYTES_RATIO).
 """
 
 from __future__ import annotations
 
-import glob
 import json
 import os
 
 from benchmarks.common import emit
 
-ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                   "artifacts", "dryrun")
+_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "BENCH_builder.json")
 
 
-def load_cells(mesh="pod16x16"):
-    cells = []
-    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
-        with open(path) as f:
-            cells.append(json.load(f))
-    return cells
+def _load_rows():
+    """Fresh cwd dump if present (same run), else the committed baseline."""
+    fresh = os.path.abspath("BENCH_builder.json")
+    for path in ([fresh] if fresh != _BASELINE else []) + [_BASELINE]:
+        if os.path.exists(path):
+            with open(path) as f:
+                return json.load(f), path
+    return [], None
 
 
 def roofline_table():
-    cells = load_cells()
-    if not cells:
-        emit("roofline/missing_artifacts", 0.0,
-             "run python -m repro.launch.dryrun --all first")
+    rows, path = _load_rows()
+    if not rows:
+        emit("roofline/missing_bench", 0.0,
+             "run python -m benchmarks.run (builder bench) first")
         return
-    for rec in cells:
-        name = f"roofline/{rec['arch']}/{rec['shape']}"
-        if rec["status"] == "SKIP":
-            emit(name + "/status", 0.0, "SKIP(full-attention@500k)")
+    src = "baseline" if os.path.abspath(path) == _BASELINE else "fresh"
+    found = 0
+    for rec in rows:
+        name = rec.get("row", "")
+        # comparisons_first, when present, is the count matching the
+        # metered byte window (sharded row: bytes cover the first r
+        # reps only) — pairing totals with it would halve the ratio
+        comps = rec.get("comparisons_first", rec.get("comparisons"))
+        nbytes = rec.get("all_to_all_bytes", rec.get("a2a_bytes_p"))
+        if not comps or nbytes is None:
             continue
-        if rec["status"] != "OK" or "roofline" not in rec:
-            emit(name + "/status", 0.0, rec["status"])
-            continue
-        r = rec["roofline"]
-        dom = rec["dominant"]
-        step_s = max(r.values())
-        emit(name + "/compute_s", 0.0, f"{r['compute_s']:.3e}")
-        emit(name + "/memory_s", 0.0, f"{r['memory_s']:.3e}")
-        emit(name + "/collective_s", 0.0, f"{r['collective_s']:.3e}")
-        emit(name + "/dominant", step_s * 1e6, dom)
-        if rec.get("model_flops_ratio"):
-            emit(name + "/model_flops_ratio", 0.0,
-                 round(rec["model_flops_ratio"], 4))
+        found += 1
+        tag = f"roofline/{name}"
+        emit(tag + "/wire_bytes", 0.0, int(nbytes))
+        emit(tag + "/comparisons", 0.0, int(comps))
+        emit(tag + "/bytes_per_comparison", 0.0,
+             f"{nbytes / comps:.3f}")
+        if "devices" in rec:
+            # per-device share: what each link actually carries
+            emit(tag + "/bytes_per_comparison_per_device", 0.0,
+                 f"{nbytes / comps / rec['devices']:.3f}")
+    if not found:
+        emit("roofline/missing_bench", 0.0,
+             f"no mesh rows with byte counters in {os.path.basename(path)}")
+    else:
+        emit("roofline/source", 0.0, f"{src}:{os.path.basename(path)}")

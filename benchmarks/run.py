@@ -9,11 +9,16 @@ ONLY the builder benchmark (the session-API surface this repo's PRs keep
 touching), writes a fresh ``BENCH_builder.json`` into the cwd, and diffs
 its rows against the committed baseline ``benchmarks/BENCH_builder.json``
 — any wall-time field (``*_s``) of a row present in BOTH files that
-regresses by more than ``CHECK_MAX_RATIO``x fails the run (exit 1).  Rows
-are matched by their ``row`` key; new rows and new fields pass silently
-(they have no baseline yet), machine-independent fields (comparisons,
-bytes, counts) are reported but never gate — wall time is the only thing a
-code change can quietly ruin without a test noticing.
+regresses by more than ``CHECK_MAX_RATIO``x fails the run (exit 1), and
+any ``bytes_per_comparison`` field (wire all_to_all bytes per similarity
+comparison — the machine-independent comms-efficiency metric of the
+bit-packed exchange formats) that grows by more than
+``CHECK_MAX_BYTES_RATIO``x fails likewise.  Rows are matched by their
+``row`` key; new rows and new fields pass silently (they have no baseline
+yet); other machine-independent fields (comparisons, raw bytes, counts)
+are reported but never gate — wall time and wire width are the two things
+a code change can quietly ruin without a test noticing (parity tests pin
+WHAT is exchanged, not how many bytes it costs on the wire).
 """
 
 import json
@@ -22,6 +27,10 @@ import sys
 import time
 
 CHECK_MAX_RATIO = 2.0
+# wire-width ratios are deterministic given shapes/config (no machine
+# noise), so the gate is much tighter than the wall-time one: anything
+# above +25% means a format change fattened the wire, not jitter
+CHECK_MAX_BYTES_RATIO = 1.25
 _BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          "BENCH_builder.json")
 
@@ -79,7 +88,13 @@ def check() -> int:
             print(f"# new row (no baseline): {row.get('row')}")
             continue
         for key, val in row.items():
-            if not key.endswith("_s") or key not in base:
+            if key.endswith("_s"):
+                limit, unit = CHECK_MAX_RATIO, "s"
+            elif "bytes_per_comparison" in key:
+                limit, unit = CHECK_MAX_BYTES_RATIO, "B/cmp"
+            else:
+                continue
+            if key not in base:
                 continue
             ref = base[key]
             if not (isinstance(val, (int, float))
@@ -87,23 +102,24 @@ def check() -> int:
                 continue
             compared += 1
             ratio = val / ref
-            status = "FAIL" if ratio > CHECK_MAX_RATIO else "ok"
-            print(f"# check {row['row']}.{key}: {val:.3f}s vs "
-                  f"baseline {ref:.3f}s ({ratio:.2f}x) {status}")
-            if ratio > CHECK_MAX_RATIO:
+            status = "FAIL" if ratio > limit else "ok"
+            print(f"# check {row['row']}.{key}: {val:.3f}{unit} vs "
+                  f"baseline {ref:.3f}{unit} ({ratio:.2f}x, limit "
+                  f"{limit}x) {status}")
+            if ratio > limit:
                 failures.append((row["row"], key, ratio))
     if not compared:
-        print("# check compared 0 wall-time fields — baseline rows "
+        print("# check compared 0 gated fields — baseline rows "
               "missing 'row' keys?", file=sys.stderr)
         return 2
     if failures:
-        print(f"# {len(failures)} wall-time regression(s) > "
-              f"{CHECK_MAX_RATIO}x:", file=sys.stderr)
+        print(f"# {len(failures)} gated regression(s):", file=sys.stderr)
         for name, key, ratio in failures:
             print(f"#   {name}.{key}: {ratio:.2f}x", file=sys.stderr)
         return 1
-    print(f"# check passed: {compared} wall-time fields within "
-          f"{CHECK_MAX_RATIO}x of baseline")
+    print(f"# check passed: {compared} gated fields (wall time <= "
+          f"{CHECK_MAX_RATIO}x, bytes/comparison <= "
+          f"{CHECK_MAX_BYTES_RATIO}x of baseline)")
     return 0
 
 

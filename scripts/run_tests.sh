@@ -10,6 +10,10 @@
 #   scripts/run_tests.sh dist       # multi-device tests only (-m dist;
 #                                   #   subprocesses force 1/2/4/8 virtual
 #                                   #   host devices via XLA_FLAGS)
+#   scripts/run_tests.sh kernels    # Pallas kernel oracle sweeps only
+#                                   #   (-m kernels; interpret-mode parity
+#                                   #   for every kernel incl. the fused
+#                                   #   window_score hot path)
 #   scripts/run_tests.sh long       # long-session streaming tests only
 #                                   #   (-m long; the extend()/refresh
 #                                   #   staleness suite — minutes, kept
@@ -42,6 +46,10 @@ case "${1:-}" in
   long)
     shift
     exec python -m pytest -q -m long "$@"
+    ;;
+  kernels)
+    shift
+    exec python -m pytest -q -m kernels "$@"
     ;;
   all)
     shift

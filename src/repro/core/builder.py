@@ -112,18 +112,20 @@ class RepetitionSource:
             if cfg.hamming_prefilter_bits > 0 else None)
 
         @functools.partial(jax.jit, donate_argnums=0)
-        def round_step(state, rep_index):
+        def round_step(state, rep_index, probs):
             out = _rep_candidates(cfg, features, self.measure_fn, prefilter,
                                   rep_index, new_from=new_from,
                                   refresh_below=refresh_below,
-                                  refresh_fraction=refresh_fraction)
+                                  refresh_fraction=refresh_fraction,
+                                  refresh_probs=probs)
             state = acc_lib.accumulate(state, out["src"], out["dst"],
                                        out["w"], out["emit"])
             return state, {k: out[k] for k in
                            ("comparisons", "emitted", "prefilter_ops",
                             "scored_windows")}
 
-        return lambda state, rep: round_step(state, jnp.int32(rep))
+        return lambda state, rep, probs=None: round_step(
+            state, jnp.int32(rep), probs)
 
 
 class AllPairsSource:
@@ -172,8 +174,8 @@ class AllPairsSource:
                 keep &= sims > r1
             return acc_lib.accumulate(state, aa, bb, sims, keep)
 
-        def round_step(state, rep):
-            del rep                                  # the sweep is exact
+        def round_step(state, rep, probs=None):
+            del rep, probs                           # the sweep is exact
             for a0 in range(0, n, block):
                 for b0 in range(a0, n, block):
                     if new_from > 0 and b0 + block <= new_from:
@@ -231,33 +233,27 @@ class _SingleDeviceBackend:
         return state                # rows are never padded on one device
 
     def run_round(self, state, rep_index: int, new_from: int,
-                  refresh_below: int = 0, refresh_fraction: float = 1.0):
+                  refresh_below: int = 0, refresh_fraction: float = 1.0,
+                  refresh_probs=None):
         key = (new_from, refresh_below, refresh_fraction)
         if key not in self._bound:
             self._bound[key] = self.source.bind(
                 self.features, new_from, refresh_below, refresh_fraction)
-        return self._bound[key](state, rep_index)
+        return self._bound[key](state, rep_index, refresh_probs)
 
     def extend(self, new_features: PointFeatures) -> None:
         self.features = self.features.concat(new_features)
         self._bound = {}            # shapes changed; rebind lazily
 
 
-def _pack_words_bigendian(words: jax.Array) -> jax.Array:
-    """Pack bit-valued (n, m) hash words into ceil(m/32) uint32 sort words.
-
-    Big-endian within each word (hash word 0 at bit 31), zero padding in the
-    LOW bits of the last word — so comparing the packed words
-    lexicographically is exactly comparing the original {0,1} word sequence
-    lexicographically, which is what the single-device SortingLSH
-    ``jax.lax.sort`` over m separate word operands does.
-    """
-    n, m = words.shape
-    n_words = (m + 31) // 32
-    bits = jnp.pad(words.astype(jnp.uint32), ((0, 0), (0, n_words * 32 - m)))
-    shifts = jnp.arange(31, -1, -1, dtype=jnp.uint32)
-    return jnp.sum(bits.reshape(n, n_words, 32) << shifts,
-                   axis=-1).astype(jnp.uint32)
+def _refresh_window_count(cfg: StarsConfig, n: int) -> int:
+    """Global window-row count of the current grid — the length of the
+    per-row refresh probability vector (``GraphBuilder._refresh_probs``)
+    and of the host-side refresh-age ledger.  The same ``n_windows`` that
+    ``windows.shard_row_layout`` reports, derivable without a mesh."""
+    from repro.core import windows as win_lib
+    return (win_lib.window_slot_count(cfg.mode, n, cfg.window)
+            // cfg.window)
 
 
 class _MeshBackend:
@@ -312,7 +308,11 @@ class _MeshBackend:
     """
 
     SORT_CAPACITY_FACTOR = 2.0
-    EMIT_CAPACITY_FACTOR = 4.0
+    # emit triples bucket by hash-random owner: per-destination counts
+    # concentrate hard around m2/p, so 2x headroom is already ~12 sigma at
+    # bench scale (the 4x it replaced paid double the wire for no fewer
+    # drops — measured zero at both)
+    EMIT_CAPACITY_FACTOR = 2.0
     FETCH_CAPACITY_FACTOR = 2.0
 
     def __init__(self, features: PointFeatures, cfg: StarsConfig, mesh):
@@ -407,8 +407,26 @@ class _MeshBackend:
                 self._fetch_tables[self._n], self._bound[key])
 
     def _bind_sketch(self):
+        """The per-shard sketch into BIT-PACKED sort keys.
+
+        The sort key is the big-endian field stream (hash fields, top
+        ``TIEBREAK_BITS`` of the random tiebreak, zero pad, gid) packed to
+        ``ceil(bits/32)`` words (``sorter.pack_bit_fields``) — the wire
+        carries only the bits the order actually uses instead of one full
+        int32 word per hash word plus a payload word.  The trailing gid
+        field doubles as the sort payload AND the tiebreak-of-last-resort
+        (``distributed_window_blocks`` ``payload_bits`` mode), matching the
+        single-device stable sort's ascending-gid tie resolution; its width
+        ``int(n).bit_length()`` keeps the all-ones sentinel value out of
+        the real gid range.  Pad rows carry all-ones words: they sort
+        strictly after every real key (real keys differ in the gid field
+        at least) and decode to gid -1.
+        """
+        from repro.core.stars import TIEBREAK_BITS
+        from repro.distributed.sorter import pack_bit_fields
         cfg = self.cfg
         n = self._n
+        gid_bits = int(n).bit_length()
 
         @jax.jit
         def sketch_phase(x, rep):
@@ -428,14 +446,25 @@ class _MeshBackend:
                            jnp.uint32(0xFFFFFFFF))
             if cfg.mode == "lsh":
                 bucket = lsh_lib.bucket_key(words, cfg.family)
-                kws = bucket[:, None]
+                # full-width leading field: key word 0 IS the bucket id,
+                # which distributed_window_blocks(bucket_word=0) relies on
+                fields, widths = [bucket], [32]
             elif cfg.family.kind in ("simhash", "mixture"):
                 bucket = jnp.zeros((n_pad,), jnp.uint32)
-                kws = _pack_words_bigendian(words)
+                m = words.shape[1]
+                fields = [words[:, j].astype(jnp.uint32) for j in range(m)]
+                widths = [1] * m                 # one BIT per hash word
             else:
                 bucket = jnp.zeros((n_pad,), jnp.uint32)
-                kws = words                      # full-width lexicographic
-            keys = jnp.concatenate([kws, tb[:, None]], axis=1)
+                m = words.shape[1]
+                fields = [words[:, j] for j in range(m)]
+                widths = [32] * m                # full-width lexicographic
+            tie = tb >> jnp.uint32(32 - TIEBREAK_BITS)
+            pad = (-(sum(widths) + TIEBREAK_BITS + gid_bits)) % 32
+            fields += [tie, jnp.zeros((n_pad,), jnp.uint32),
+                       gids.astype(jnp.uint32)]
+            widths += [TIEBREAK_BITS, pad, gid_bits]
+            keys = pack_bit_fields(fields, widths)
             keys = jnp.where(real[:, None], keys, jnp.uint32(0xFFFFFFFF))
             return keys, jnp.where(real, gids, -1), bucket
 
@@ -508,13 +537,20 @@ class _MeshBackend:
         n = self._n
         w = cfg.window
         d = int(self.dense.shape[1])
+        p = self.p
         nw, rps, _ = win_lib.shard_row_layout(cfg.mode, n, w, self.p)
         axis = self.axis
         measure_fn = self.measure_fn
         use_pref = cfg.hamming_prefilter_bits > 0
+        # refresh rounds carry a replicated per-global-row keep-probability
+        # vector (the age-weighted sample, GraphBuilder._refresh_probs)
+        has_probs = refresh_below > 0
 
-        def score_shard(gid_blk, bucket_blk, tab_blk, ok_blk, rep):
-            row0 = jax.lax.axis_index(axis) * rps
+        def score_shard(gid_blk, bucket_blk, tab_blk, ok_blk, rep, *rest):
+            probs = rest[0] if has_probs else None
+            # round-robin row striping (windows.shard_row_permutation):
+            # this shard's block holds global window rows i, i + p, ...
+            row0 = jax.lax.axis_index(axis)
             # a counted fetch drop invalidates its slot (graceful, like a
             # sort drop); the bucket value stays so the surviving slots'
             # run structure is untouched
@@ -532,48 +568,127 @@ class _MeshBackend:
                                  refresh_below=refresh_below,
                                  refresh_fraction=refresh_fraction,
                                  k_refresh=k_refresh, row_offset=row0,
-                                 total_rows=nw, member_index=member_index)
+                                 total_rows=nw, stride=p,
+                                 member_index=member_index,
+                                 refresh_probs=probs)
             return (out["src"], out["dst"], out["w"], out["emit"],
                     out["comparisons"], out["emitted"],
                     out["prefilter_ops"], out["scored_windows"][None])
 
         return jax.jit(shard_map(
             score_shard, mesh=self.mesh,
-            in_specs=(P(axis), P(axis), P(axis, None), P(axis), P()),
+            in_specs=(P(axis), P(axis), P(axis, None), P(axis), P())
+            + ((P(),) if has_probs else ()),
             out_specs=tuple(P(axis) for _ in range(8))))
 
-    def run_round(self, state, rep_index: int, new_from: int,
-                  refresh_below: int = 0, refresh_fraction: float = 1.0):
+    def _sort_round(self, rep):
+        """sketch + distributed sort of one repetition -> slot blocks."""
         from repro.core import windows as win_lib
         from repro.distributed.sorter import distributed_window_blocks
-        from repro.distributed.stars_dist import (accumulate_all_to_all,
-                                                  fetch_rows_all_to_all)
-        sketch_fn, offset_fn, fetch_table, score_fn = self._bind(
-            new_from, refresh_below, refresh_fraction)
-        rep = jnp.int32(rep_index)
+        sketch_fn = self._sketches[self._n]
+        offset_fn = self._offsets[self._n]
         keys, gids, _bucket = sketch_fn(self.dense, rep)
         _, _, total_slots = win_lib.shard_row_layout(
             self.cfg.mode, self._n, self.cfg.window, self.p)
-        blk_gid, blk_bucket, drop_sort = distributed_window_blocks(
+        return distributed_window_blocks(
             keys, gids, self.mesh, slot_offset=offset_fn(rep),
             total_slots=total_slots, axis=self.axis,
             capacity_factor=self.SORT_CAPACITY_FACTOR,
-            bucket_word=0 if self.cfg.mode == "lsh" else None)
+            bucket_word=0 if self.cfg.mode == "lsh" else None,
+            payload_bits=int(self._n).bit_length(),
+            window=self.cfg.window)
+
+    def _probs_arg(self, refresh_below: int, refresh_fraction: float,
+                   refresh_probs):
+        """The score program's refresh-probability operand (refresh rounds
+        only); a missing vector falls back to the uniform sample."""
+        if refresh_below <= 0:
+            return ()
+        if refresh_probs is None:
+            refresh_probs = jnp.full(
+                (_refresh_window_count(self.cfg, self._n),),
+                refresh_fraction, jnp.float32)
+        return (jnp.asarray(refresh_probs, jnp.float32),)
+
+    def run_round(self, state, rep_index: int, new_from: int,
+                  refresh_below: int = 0, refresh_fraction: float = 1.0,
+                  refresh_probs=None):
+        from repro.distributed.stars_dist import (accumulate_all_to_all,
+                                                  fetch_rows_all_to_all)
+        _, _, fetch_table, score_fn = self._bind(
+            new_from, refresh_below, refresh_fraction)
+        rep = jnp.int32(rep_index)
+        blk_gid, blk_bucket, drop_sort = self._sort_round(rep)
         rows, rows_ok, drop_fetch = fetch_rows_all_to_all(
             fetch_table, blk_gid, mesh=self.mesh, axis=self.axis,
             capacity_factor=self.FETCH_CAPACITY_FACTOR)
+        probs = self._probs_arg(refresh_below, refresh_fraction,
+                                refresh_probs)
         (src, dst, wts, emit, comparisons, emitted, pref_ops,
-         scored) = score_fn(blk_gid, blk_bucket, rows, rows_ok, rep)
+         scored) = score_fn(blk_gid, blk_bucket, rows, rows_ok, rep, *probs)
         state, drop_emit = accumulate_all_to_all(
             state, src, dst, wts, emit,
             mesh=self.mesh, axis=self.axis,
-            capacity_factor=self.EMIT_CAPACITY_FACTOR)
+            capacity_factor=self.EMIT_CAPACITY_FACTOR,
+            exact_weights=self.cfg.exact_weights)
         counters = {"comparisons": comparisons, "emitted": emitted,
                     "prefilter_ops": pref_ops, "scored_windows": scored}
         counters["dropped"] = jnp.concatenate(
             [jnp.ravel(drop_sort), jnp.ravel(drop_fetch),
              jnp.ravel(drop_emit)])
         return state, counters
+
+    def run_round_pair(self, state, rep_index: int, new_from: int,
+                       refresh_below: int = 0, refresh_fraction: float = 1.0,
+                       refresh_probs=(None, None)):
+        """Two consecutive repetitions sharing one fetch and one emit.
+
+        The sorts stay per-repetition (each needs its own hash draw and
+        splitters), but the feature fetch batches both repetitions' slot
+        gids into ONE request/response pair and the edge emit ships both
+        candidate streams in ONE exchange
+        (``fetch_rows_all_to_all`` / ``accumulate_all_to_all`` tuple
+        mode) — 5 all_to_all launches per pair instead of 8.  Scoring is
+        per repetition with the SAME bound program as ``run_round``, and
+        the coalesced fold is order-equivalent to two sequential folds
+        (per-row top-k of a multiset union), so pairing changes no edge.
+
+        Returns ``(state, counters_a, counters_b)`` — per-repetition
+        counter dicts, so the session's per-round stats stream (and the
+        per-round bench readers) see the same granularity as unpaired
+        rounds; the shared fetch/emit drop counts ride with the first.
+        """
+        from repro.distributed.stars_dist import (accumulate_all_to_all,
+                                                  fetch_rows_all_to_all)
+        _, _, fetch_table, score_fn = self._bind(
+            new_from, refresh_below, refresh_fraction)
+        rep_a, rep_b = jnp.int32(rep_index), jnp.int32(rep_index + 1)
+        gid_a, bucket_a, drop_sort_a = self._sort_round(rep_a)
+        gid_b, bucket_b, drop_sort_b = self._sort_round(rep_b)
+        (rows_a, rows_b), (ok_a, ok_b), drop_fetch = fetch_rows_all_to_all(
+            fetch_table, (gid_a, gid_b), mesh=self.mesh, axis=self.axis,
+            capacity_factor=self.FETCH_CAPACITY_FACTOR)
+        probs_a = self._probs_arg(refresh_below, refresh_fraction,
+                                  refresh_probs[0])
+        probs_b = self._probs_arg(refresh_below, refresh_fraction,
+                                  refresh_probs[1])
+        out_a = score_fn(gid_a, bucket_a, rows_a, ok_a, rep_a, *probs_a)
+        out_b = score_fn(gid_b, bucket_b, rows_b, ok_b, rep_b, *probs_b)
+        state, drop_emit = accumulate_all_to_all(
+            state, (out_a[0], out_b[0]), (out_a[1], out_b[1]),
+            (out_a[2], out_b[2]), (out_a[3], out_b[3]),
+            mesh=self.mesh, axis=self.axis,
+            capacity_factor=self.EMIT_CAPACITY_FACTOR,
+            exact_weights=self.cfg.exact_weights)
+        counters_a = {"comparisons": out_a[4], "emitted": out_a[5],
+                      "prefilter_ops": out_a[6], "scored_windows": out_a[7],
+                      "dropped": jnp.concatenate(
+                          [jnp.ravel(drop_sort_a), jnp.ravel(drop_fetch),
+                           jnp.ravel(drop_emit)])}
+        counters_b = {"comparisons": out_b[4], "emitted": out_b[5],
+                      "prefilter_ops": out_b[6], "scored_windows": out_b[7],
+                      "dropped": jnp.ravel(drop_sort_b)}
+        return state, counters_a, counters_b
 
     def extend(self, new_features: PointFeatures) -> None:
         if new_features.dense is None:
@@ -628,6 +743,9 @@ class BuilderCheckpoint:
     refresh_watermark: int = 0
     refresh_reps: int = 0
     refresh_credit: float = 0.0
+    # per-global-window-row refresh ages (rounds since last sampled) — the
+    # age-weighted refresh bias's memory; None until a refresh round runs
+    refresh_age: Optional[np.ndarray] = None
 
 
 class GraphBuilder:
@@ -676,6 +794,7 @@ class GraphBuilder:
         self._refresh_below = 0
         self._refresh_reps = 0
         self._refresh_credit = 0.0
+        self._refresh_age: Optional[np.ndarray] = None
         self._capacity = cfg.slab_capacity(self.n, reps=max(cfg.r, 1))
         # Slabs are allocated lazily (first round / checkpoint / finalize):
         # restore() injects the checkpoint state instead, so resuming never
@@ -845,21 +964,86 @@ class GraphBuilder:
                     refresh_below: int = 0, refresh_fraction: float = 1.0,
                     progress: Optional[Callable[[int], None]] = None) -> None:
         self._grow(self.n, self._reps_done + reps)
-        for _ in range(reps):
-            self._state, counters = self._backend.run_round(
-                self._state, self._reps_done, new_from,
-                refresh_below=refresh_below,
-                refresh_fraction=refresh_fraction)
-            if refresh_below > 0:
-                counters = dict(counters)
-                counters["refresh_comparisons"] = counters["comparisons"]
-                self._refresh_reps += 1
-            self._counters.append(counters)
-            if len(self._counters) >= self.COUNTER_ROLLUP_EVERY:
-                self._roll_up_counters()
-            if progress is not None:
-                progress(self._reps_done)
-            self._reps_done += 1
+        refresh = refresh_below > 0
+        pair_fn = getattr(self._backend, "run_round_pair", None)
+        done = 0
+        while done < reps:
+            rep0 = self._reps_done
+            if pair_fn is not None and reps - done >= 2:
+                # coalesced repetition pair (mesh backend): the refresh
+                # probability vectors are computed SEQUENTIALLY — the
+                # second round's bias sees the first round's host-side
+                # age advance, exactly as two unpaired rounds would
+                probs = (self._next_refresh_probs(rep0, refresh_fraction)
+                         if refresh else None,
+                         self._next_refresh_probs(rep0 + 1, refresh_fraction)
+                         if refresh else None)
+                self._state, counters_a, counters_b = pair_fn(
+                    self._state, rep0, new_from,
+                    refresh_below=refresh_below,
+                    refresh_fraction=refresh_fraction,
+                    refresh_probs=probs)
+                self._note_round(counters_a, refresh, progress)
+                self._note_round(counters_b, refresh, progress)
+                done += 2
+            else:
+                probs = (self._next_refresh_probs(rep0, refresh_fraction)
+                         if refresh else None)
+                self._state, counters = self._backend.run_round(
+                    self._state, rep0, new_from,
+                    refresh_below=refresh_below,
+                    refresh_fraction=refresh_fraction,
+                    refresh_probs=probs)
+                self._note_round(counters, refresh, progress)
+                done += 1
+
+    def _note_round(self, counters: Dict, refresh: bool,
+                    progress: Optional[Callable[[int], None]]) -> None:
+        if refresh:
+            counters = dict(counters)
+            counters["refresh_comparisons"] = counters["comparisons"]
+            self._refresh_reps += 1
+        self._counters.append(counters)
+        if len(self._counters) >= self.COUNTER_ROLLUP_EVERY:
+            self._roll_up_counters()
+        if progress is not None:
+            progress(self._reps_done)
+        self._reps_done += 1
+
+    def _next_refresh_probs(self, rep_index: int,
+                            fraction: float) -> np.ndarray:
+        """Per-global-window-row keep probabilities of ONE refresh round,
+        advancing the host age ledger past it.
+
+        The age-weighted sampling bias: a window's keep probability scales
+        with ``1 + rounds-since-last-sampled``, normalized so the expected
+        sampled mass stays ``fraction`` of the grid — windows the uniform
+        sample kept missing become increasingly likely, tightening the
+        geometric staleness-decay tail without extra rounds.  The ledger
+        advance replays the round's keep draw on the host (the SAME
+        ``k_refresh`` uniform the device issues, ``_rep_keys``), so ages
+        reflect exactly the windows the device round sampled — identically
+        on every backend, which keeps mesh and single-device sessions
+        drawing identical refresh samples.  At ``fraction >= 1.0`` every
+        window is kept and the bias degenerates to uniform.
+        """
+        from repro.core.stars import _rep_keys
+        nw = _refresh_window_count(self.cfg, self.n)
+        ages = self._refresh_age
+        if ages is None:
+            ages = np.zeros(nw, np.int64)
+        elif ages.shape[0] < nw:        # extend() grew the grid: new rows
+            ages = np.concatenate(      # start fresh (age 0)
+                [ages, np.zeros(nw - ages.shape[0], np.int64)])
+        if fraction >= 1.0:
+            probs = np.full(nw, fraction, np.float32)
+        else:
+            weight = 1.0 + ages.astype(np.float64)
+            probs = (fraction * weight / weight.mean()).astype(np.float32)
+        k_refresh = _rep_keys(self.cfg, jnp.int32(rep_index))[3]
+        draw = np.asarray(jax.random.uniform(k_refresh, (nw,)))
+        self._refresh_age = np.where(draw < probs, 0, ages + 1)
+        return probs
 
     def _grow(self, n: int, reps_total: int) -> None:
         cap = max(self._capacity,
@@ -909,7 +1093,9 @@ class GraphBuilder:
             nbr=nbr, w=w, stats=self._roll_up_counters(), cfg=self.cfg,
             refresh_watermark=self._refresh_below,
             refresh_reps=self._refresh_reps,
-            refresh_credit=self._refresh_credit)
+            refresh_credit=self._refresh_credit,
+            refresh_age=(None if self._refresh_age is None
+                         else self._refresh_age.copy()))
 
     @classmethod
     def restore(cls, features: FeaturesLike, cfg: StarsConfig,
@@ -933,6 +1119,8 @@ class GraphBuilder:
         builder._refresh_below = ckpt.refresh_watermark
         builder._refresh_reps = ckpt.refresh_reps
         builder._refresh_credit = ckpt.refresh_credit
+        builder._refresh_age = (None if ckpt.refresh_age is None
+                                else np.asarray(ckpt.refresh_age, np.int64))
         return builder
 
     def finalize(self) -> Graph:

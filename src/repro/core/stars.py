@@ -51,6 +51,15 @@ from repro.graph import accumulator as acc_lib
 from repro.kernels import ops as kernel_ops
 from repro.similarity.measures import PointFeatures
 
+# Random sort-tiebreak resolution, in bits.  The tiebreak only has to
+# randomize the relative order of equal-sketch points; 20 bits make a
+# same-window collision (which still resolves deterministically, by gid)
+# vanishingly rare while letting the mesh wire format pack the tiebreak
+# into 20 bits instead of a full word (core/builder.py ``_bind_sketch``).
+# The single-device path truncates its draw to the SAME top bits so both
+# backends sort identical keys.
+TIEBREAK_BITS = 20
+
 
 @dataclasses.dataclass(frozen=True)
 class StarsConfig:
@@ -112,6 +121,13 @@ class StarsConfig:
     allpairs_block: int = 2048
     refresh_fraction: float = 0.25
     refresh_rate: float = 0.0
+    # Mesh wire precision for emitted edge weights: True ships float32
+    # (edge-for-edge identical to single-device — the parity default);
+    # False quantizes in-flight weights to bf16, halving the emit
+    # exchange's dominant word at a <1% two-hop-recall cost
+    # (tests/test_mesh_parity.py exercises both).  Single-device builds
+    # never ship weights, so the flag only affects the mesh backend.
+    exact_weights: bool = True
 
     @property
     def source_name(self) -> str:
@@ -175,41 +191,55 @@ def _score_tile(measure_fn, features: PointFeatures,
 
 def _refresh_window_sample(k_refresh: jax.Array, nw: int, fraction: float,
                            row_offset=0,
-                           total_rows: Optional[int] = None) -> jax.Array:
+                           total_rows: Optional[int] = None,
+                           stride: int = 1,
+                           probs: Optional[jax.Array] = None) -> jax.Array:
     """(nw,) bool: the PRNG-sampled window subset one refresh round rescores.
 
     Drawn from the per-repetition ``k_refresh`` stream (``_rep_keys``), so
     the single-device and mesh backends sample identical windows — the
     refresh analogue of the shared leader draw.  Like the leader draw, the
-    uniform is issued at the GLOBAL row count and row-sliced
-    (``windows.global_row_draw``), so a shard scoring rows
-    [row_offset, row_offset + nw) of a ``total_rows`` grid samples exactly
-    the windows the single-device path would.  ``fraction >= 1.0`` keeps
-    every window (uniform draws live in [0, 1)), which makes a
-    full-fraction refresh round the exact complement of an extension round
-    over the same windows.
+    uniform is issued at the GLOBAL row count and row-gathered
+    (``windows.global_row_draw``; ``stride`` > 1 under the mesh's striped
+    row split), so a shard scoring a subset of a ``total_rows`` grid
+    samples exactly the windows the single-device path would.
+
+    ``probs``, when given, is the (total_rows,)-or-(nw,) per-GLOBAL-row
+    keep probability array (the age-weighted refresh bias computed on the
+    host, GraphBuilder._refresh_probs); ``fraction`` is then ignored.
+    With uniform probs equal to ``fraction`` the sample is bit-identical
+    to the fraction compare.  Values >= 1.0 keep every window (uniform
+    draws live in [0, 1)), which makes a full-fraction refresh round the
+    exact complement of an extension round over the same windows.
     """
     draw = win_lib.global_row_draw(
         lambda rows: jax.random.uniform(k_refresh, (rows,)), nw,
-        row_offset, total_rows, fill=2.0)        # overflow rows never kept
-    return draw < fraction
+        row_offset, total_rows, fill=2.0,        # overflow rows never kept
+        stride=stride)
+    if probs is None:
+        return draw < fraction
+    pr = win_lib.global_row_draw(
+        lambda rows: probs[:rows], nw, row_offset, total_rows, fill=-1.0,
+        stride=stride)
+    return draw < pr
 
 
-def _scored_rows(nw: int, row_offset, total_rows: Optional[int]) -> jax.Array:
+def _scored_rows(nw: int, row_offset, total_rows: Optional[int],
+                 stride: int = 1) -> jax.Array:
     """How many REAL global window rows this scoring call owns.
 
     Each global window row is owned by exactly one scoring call (the whole
-    grid on one device; a contiguous row slice per shard on the mesh), so
-    summing this counter across calls of one repetition gives exactly
-    ``n_windows`` — the invariant tests/test_mesh_parity.py asserts, and
-    the per-shard work measure behind the sharded-scoring bench row
-    (overflow rows of an uneven partition are not counted: they hold no
-    points and score nothing).
+    grid on one device; rows ``row_offset + stride * [0, nw)`` per shard
+    on the mesh), so summing this counter across calls of one repetition
+    gives exactly ``n_windows`` — the invariant tests/test_mesh_parity.py
+    asserts, and the per-shard work measure behind the sharded-scoring
+    bench row (overflow rows of an uneven partition are not counted: they
+    hold no points and score nothing).
     """
     if total_rows is None:
         return jnp.int32(nw)
     r0 = jnp.asarray(row_offset, jnp.int32)
-    return jnp.clip(jnp.minimum(r0 + nw, total_rows) - r0, 0, nw)
+    return jnp.clip((total_rows - r0 + stride - 1) // stride, 0, nw)
 
 
 def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
@@ -217,7 +247,9 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
                    refresh_below: int = 0, refresh_fraction: float = 1.0,
                    k_refresh: Optional[jax.Array] = None,
                    row_offset=0, total_rows: Optional[int] = None,
-                   member_index: Optional[jax.Array] = None):
+                   stride: int = 1,
+                   member_index: Optional[jax.Array] = None,
+                   refresh_probs: Optional[jax.Array] = None):
     """Stars 1 scoring: every member compares to its bucket's leader only.
 
     O(n) comparisons per repetition — the paper's quadratic->linear win.
@@ -255,7 +287,8 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
     fidx = pad_w(win.gid if member_index is None else member_index)
     if refresh:
         keep_win = pad_w(_refresh_window_sample(
-            k_refresh, nw, refresh_fraction, row_offset, total_rows))
+            k_refresh, nw, refresh_fraction, row_offset, total_rows,
+            stride, refresh_probs))
     resh = lambda x: x.reshape((nw_pad // chunk, chunk) + x.shape[1:])
 
     def score_chunk(args):
@@ -325,7 +358,8 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
     return dict(src=src, dst=dst, w=wts, emit=emit,
                 emitted=emit_chunks,
                 comparisons=comp_chunks, prefilter_ops=pref_chunks,
-                scored_windows=_scored_rows(nw, row_offset, total_rows))
+                scored_windows=_scored_rows(nw, row_offset, total_rows,
+                                            stride))
 
 
 def _rep_keys(cfg: StarsConfig, rep_index: jax.Array):
@@ -346,7 +380,8 @@ def _rep_keys(cfg: StarsConfig, rep_index: jax.Array):
 def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
                     measure_fn, prefilter, rep_index: jax.Array, *,
                     new_from: int = 0, refresh_below: int = 0,
-                    refresh_fraction: float = 1.0):
+                    refresh_fraction: float = 1.0,
+                    refresh_probs: Optional[jax.Array] = None):
     """One repetition: sketch, window, score; returns the candidate stream.
 
     Returns dict with the full fixed-shape 'src','dst','w' stream plus its
@@ -374,7 +409,11 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
 
     words = lsh_lib.sketch(features, cfg.family, rep_seed=rep_seed)
     n = words.shape[0]
-    tiebreak = jax.random.bits(k_tie, (n,), jnp.uint32)
+    # keep only the top TIEBREAK_BITS: value order is identical to the
+    # mesh backend's packed 20-bit tiebreak field (builder._bind_sketch),
+    # and gid remains the final resolver of residual ties on both paths
+    tiebreak = jax.random.bits(k_tie, (n,), jnp.uint32) \
+        & jnp.uint32(((1 << TIEBREAK_BITS) - 1) << (32 - TIEBREAK_BITS))
 
     if cfg.mode == "lsh":
         bucket = lsh_lib.bucket_key(words, cfg.family)
@@ -388,7 +427,7 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
     return _score_windows(cfg, features, measure_fn, prefilter, win, k_lead,
                           new_from=new_from, refresh_below=refresh_below,
                           refresh_fraction=refresh_fraction,
-                          k_refresh=k_refresh)
+                          k_refresh=k_refresh, refresh_probs=refresh_probs)
 
 
 def _score_windows(cfg: StarsConfig, features: PointFeatures,
@@ -397,7 +436,9 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
                    refresh_below: int = 0, refresh_fraction: float = 1.0,
                    k_refresh: Optional[jax.Array] = None,
                    row_offset=0, total_rows: Optional[int] = None,
-                   member_index: Optional[jax.Array] = None):
+                   stride: int = 1,
+                   member_index: Optional[jax.Array] = None,
+                   refresh_probs: Optional[jax.Array] = None):
     """Score one repetition's windows into a masked candidate stream.
 
     The scoring half of :func:`_rep_candidates`, factored out so the mesh
@@ -415,21 +456,30 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
     inverse of the ``new_from`` extension mask, shared by both backends
     through this one function (see GraphBuilder.refresh_reps).
 
-    **Row-sliced (windows-sharded) mode** — the mesh backend scores only
+    **Row-subset (windows-sharded) mode** — the mesh backend scores only
     its own ~``n_windows/p`` rows per shard instead of replicating the
-    whole grid: ``win`` is then a contiguous row slice, ``row_offset``
-    (static or traced) its first GLOBAL window row and ``total_rows`` the
-    global row count.  Every PRNG draw (leaders, refresh sample) is issued
-    at the global shape and row-sliced, so draws are keyed by global
-    window row exactly as on one device.  ``member_index``, when given,
-    is a (rows, W) index grid used for feature/prefilter gathers INSTEAD
-    of ``win.gid`` — the mesh passes local slot ids into a slot-aligned
+    whole grid: ``win`` then holds the global window rows ``row_offset +
+    stride * [0, nw)`` (``stride = p`` under the striped row split of
+    ``windows.shard_row_layout``) and ``total_rows`` is the global row
+    count.  Every PRNG draw (leaders, refresh sample) is issued at the
+    global shape and row-gathered, so draws are keyed by global window row
+    exactly as on one device.  ``member_index``, when given, is a
+    (rows, W) index grid used for feature/prefilter gathers INSTEAD of
+    ``win.gid`` — the mesh passes local slot ids into a slot-aligned
     feature block fetched by one explicit owner-keyed all_to_all
     (distributed/stars_dist.fetch_rows_all_to_all), so scoring never
     touches the global feature table.  Emitted src/dst are always global
     gids.  The returned ``scored_windows`` counts the real global rows
     this call owns (summing to ``n_windows`` across one repetition's
     calls).
+
+    **Fused kernel path**: dense cosine/dot scoring without the Hamming
+    prefilter routes through ``kernel_ops.window_score`` — gather leaders
+    and members once, then one fused op (Pallas on TPU, jnp oracle on CPU;
+    bit-identical either way) produces similarities, the emit mask and
+    per-window counters, with no ``lax.map`` chunking and no padded
+    (nw_pad, s, W) intermediate stream.  Counters come back per WINDOW
+    (nw,) instead of per chunk; the host sum is shape-agnostic.
     """
     nw, w_sz = win.gid.shape
     if cfg.mode == "lsh" and cfg.scoring == "stars":
@@ -443,12 +493,13 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
                               refresh_below=refresh_below,
                               refresh_fraction=refresh_fraction,
                               k_refresh=k_refresh, row_offset=row_offset,
-                              total_rows=total_rows,
-                              member_index=member_index)
+                              total_rows=total_rows, stride=stride,
+                              member_index=member_index,
+                              refresh_probs=refresh_probs)
     if cfg.scoring == "stars":
         leader_slot, leader_ok = win_lib.sample_leaders(
             win, s=cfg.leaders, key=k_lead,
-            row_offset=row_offset, total_rows=total_rows)
+            row_offset=row_offset, total_rows=total_rows, stride=stride)
     elif cfg.scoring == "allpairs":
         leader_slot = jnp.broadcast_to(jnp.arange(w_sz, dtype=jnp.int32),
                                        (nw, w_sz))
@@ -456,6 +507,37 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
     else:
         raise ValueError(f"unknown scoring {cfg.scoring!r}")
     s = leader_slot.shape[1]
+    refresh = refresh_below > 0
+
+    if (cfg.measure in ("cosine", "dot") and features.dense is not None
+            and cfg.hamming_prefilter_bits <= 0):
+        fidx = win.gid if member_index is None else member_index
+        lead_fidx = jnp.take_along_axis(fidx, leader_slot, axis=1)
+        lead_gid = jnp.take_along_axis(win.gid, leader_slot, axis=1)
+        lead_bucket = jnp.take_along_axis(win.bucket, leader_slot, axis=1)
+        lead = features.take(jnp.maximum(lead_fidx, 0)).dense
+        memb = features.take(jnp.maximum(fidx, 0)).dense
+        if refresh:
+            keep_win = _refresh_window_sample(
+                k_refresh, nw, refresh_fraction, row_offset, total_rows,
+                stride, refresh_probs)
+        else:
+            keep_win = jnp.ones((nw,), bool)
+        sims, emit, comparisons, emitted = kernel_ops.window_score(
+            lead, memb, leader_slot, lead_gid, win.gid, leader_ok,
+            win.valid, lead_bucket, win.bucket, keep_win,
+            normalized=cfg.measure == "cosine",
+            allpairs=cfg.scoring == "allpairs",
+            match_bucket=cfg.mode == "lsh", new_from=new_from,
+            refresh_below=refresh_below, r1=cfg.r1)
+        src = jnp.broadcast_to(lead_gid[:, :, None], sims.shape)
+        dst = jnp.broadcast_to(win.gid[:, None, :], sims.shape)
+        return dict(src=src.reshape(-1), dst=dst.reshape(-1),
+                    w=sims.reshape(-1), emit=emit.reshape(-1),
+                    emitted=emitted, comparisons=comparisons,
+                    prefilter_ops=jnp.zeros((nw,), jnp.int32),
+                    scored_windows=_scored_rows(nw, row_offset, total_rows,
+                                                stride))
 
     # Pad the window axis to a multiple of the scoring chunk.
     chunk = max(1, min(cfg.score_chunk, nw))
@@ -468,10 +550,10 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
     fidx = pad_w(win.gid if member_index is None else member_index)
     leader_slot = pad_w(leader_slot)
     leader_ok = pad_w(leader_ok)
-    refresh = refresh_below > 0
     if refresh:
         keep_win = pad_w(_refresh_window_sample(
-            k_refresh, nw, refresh_fraction, row_offset, total_rows))
+            k_refresh, nw, refresh_fraction, row_offset, total_rows,
+            stride, refresh_probs))
 
     resh = lambda x: x.reshape((nw_pad // chunk, chunk) + x.shape[1:])
     same_bucket_mode = cfg.mode == "lsh"
@@ -535,7 +617,8 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
     return dict(src=src, dst=dst, w=wts, emit=emit,
                 emitted=emit_chunks,
                 comparisons=comp_chunks, prefilter_ops=pref_chunks,
-                scored_windows=_scored_rows(nw, row_offset, total_rows))
+                scored_windows=_scored_rows(nw, row_offset, total_rows,
+                                            stride))
 
 
 # --------------------------------------------------------------------------- #

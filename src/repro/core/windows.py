@@ -123,25 +123,32 @@ def shard_row_layout(mode: str, n: int, window: int,
                      p: int) -> Tuple[int, int, int]:
     """Static window-row partition of one repetition's grid over ``p`` shards.
 
-    Maps a shard's block to its global window-row range for the
-    windows-sharded mesh scoring phase (core/builder.py ``_MeshBackend``):
-    shard ``i`` owns the contiguous global rows
-    ``[i * rows_per_shard, (i + 1) * rows_per_shard)`` — i.e. the global
-    slots ``[i * rows_per_shard * W, ...)`` of the grid this module's
-    constructors scatter into.  Returns
-    ``(n_windows, rows_per_shard, padded_slots)`` where ``n_windows`` is
-    the real global row count (``window_slot_count / W``), ``rows_per_shard
-    = ceil(n_windows / p)`` and ``padded_slots = p * rows_per_shard * W``
-    (>= the real slot count; overflow rows beyond ``n_windows`` hold no
-    points and score nothing).
+    Maps a shard's block to its global window rows for the windows-sharded
+    mesh scoring phase (core/builder.py ``_MeshBackend``): shard ``i`` owns
+    the round-robin STRIPED global rows ``{i, i + p, i + 2p, ...}`` (see
+    :func:`shard_row_permutation`).  Returns ``(n_windows, rows_per_shard,
+    padded_slots)`` where ``n_windows`` is the real global row count
+    (``window_slot_count / W``), ``rows_per_shard = ceil(n_windows / p)``
+    and ``padded_slots = p * rows_per_shard * W`` (>= the real slot count;
+    overflow rows beyond ``n_windows`` hold no points and score nothing).
+
+    Striping is the occupancy-weighted split: window occupancy is
+    monotone-structured — full rows first, then one partially-filled tail
+    row, then empty padding rows — so a contiguous split hands the last
+    shard all of the light tail while the others carry only full rows.
+    Round-robin striping spreads the tail across shards (per-shard real-row
+    counts differ by at most 1, and the sub-full rows land on distinct
+    shards) while keeping shapes static and the split knowable before any
+    per-repetition key exists.
 
     Ownership is defined in *slot* space, after the sorting-mode shift is
     applied (slot = global sort rank + offset, see ``window_layout``), so a
     window whose members straddle two shards' sample-sort output blocks
     still has exactly ONE owner and arrives whole: the sorter's
     reduce-scatter (``distributed_window_blocks``) routes every member to
-    the shard owning its slot, which plays the role of halo rows at block
-    boundaries without any second boundary exchange.
+    the shard owning its slot — physical placement goes through
+    :func:`shard_row_permutation` — which plays the role of halo rows at
+    block boundaries without any second boundary exchange.
     """
     if p < 1:
         raise ValueError(f"shard count must be >= 1: {p}")
@@ -149,6 +156,19 @@ def shard_row_layout(mode: str, n: int, window: int,
     n_windows = n_slots // window
     rows_per_shard = -(-n_windows // p)
     return n_windows, rows_per_shard, p * rows_per_shard * window
+
+
+def shard_row_permutation(row, rows_per_shard: int, p: int):
+    """Physical position of global window row ``row`` under row striping.
+
+    A bijection on ``[0, p * rows_per_shard)``: global row ``r`` lands at
+    physical row ``(r % p) * rows_per_shard + r // p``, i.e. shard
+    ``r % p``, local row ``r // p`` — so shard ``i`` scores the strided
+    global rows ``i, i + p, i + 2p, ...`` (see :func:`shard_row_layout`
+    for why striping levels valid-slot occupancy).  The identity when
+    ``p == 1``.  Works elementwise on traced int arrays.
+    """
+    return (row % p) * rows_per_shard + row // p
 
 
 def lsh_windows(bucket_id: jax.Array, *, window: int,
@@ -192,44 +212,47 @@ def sorting_lsh_windows(words: jax.Array, *, window: int,
 
 
 def global_row_draw(draw, nw: int, row_offset,
-                    total_rows: Optional[int], fill) -> jax.Array:
-    """Slice rows [row_offset, row_offset + nw) out of a globally-shaped
-    PRNG draw.
+                    total_rows: Optional[int], fill,
+                    stride: int = 1) -> jax.Array:
+    """Gather rows ``row_offset + stride * [0, nw)`` out of a
+    globally-shaped PRNG draw.
 
     ``draw(rows)`` must be a pure function of its row count (e.g. a uniform
     over one captured key): the draw is ALWAYS issued at the global row
     count ``total_rows`` (or ``nw`` when ``total_rows`` is None — the
     single-device case, where the slice is the whole grid) so the stream a
     given global window row receives is independent of how rows are
-    partitioned across shards.  Overflow rows past ``total_rows`` (the
-    padded tail of an uneven partition) read ``fill``, which callers choose
-    to mean "invalid".  ``row_offset`` may be traced (dynamic_slice keeps
-    shapes static); the ``nw``-row pad guarantees the slice never clamps
-    while any real row is in range.
+    partitioned across shards.  ``stride`` > 1 serves the round-robin row
+    striping (``shard_row_permutation``): shard i reads global rows
+    ``i, i + p, ...`` with ``row_offset=i, stride=p``.  Rows past
+    ``total_rows`` (the padded tail of an uneven partition) read ``fill``,
+    which callers choose to mean "invalid".  ``row_offset`` may be traced
+    (the gather keeps shapes static).
     """
     if total_rows is None:
         return draw(nw)
     full = draw(total_rows)
-    full = jnp.pad(full, ((0, nw),) + ((0, 0),) * (full.ndim - 1),
-                   constant_values=fill)
-    start = (jnp.asarray(row_offset, jnp.int32),) \
-        + (jnp.int32(0),) * (full.ndim - 1)
-    return jax.lax.dynamic_slice(full, start, (nw,) + full.shape[1:])
+    idx = jnp.asarray(row_offset, jnp.int32) \
+        + jnp.int32(stride) * jnp.arange(nw, dtype=jnp.int32)
+    take = jnp.take(full, jnp.minimum(idx, total_rows - 1), axis=0)
+    oob = (idx >= total_rows).reshape((nw,) + (1,) * (full.ndim - 1))
+    return jnp.where(oob, fill, take)
 
 
 def sample_leaders(windows: Windows, *, s: int, key: jax.Array,
-                   row_offset=0, total_rows: Optional[int] = None
-                   ) -> Tuple[jax.Array, jax.Array]:
+                   row_offset=0, total_rows: Optional[int] = None,
+                   stride: int = 1) -> Tuple[jax.Array, jax.Array]:
     """Sample up to ``s`` uniformly random leaders per window.
 
-    ``windows`` may be a contiguous row slice of a larger grid (the
-    windows-sharded mesh scoring phase): ``total_rows`` is then the GLOBAL
-    row count and ``row_offset`` (static or traced) the slice's first
-    global row.  The priority draw is always shaped by the global grid and
-    sliced, so every shard's rows see exactly the draw the single-device
-    path would give them — the leader sample is keyed by global window row,
-    not by who scores it.  The draw is O(total slots) elementwise; the
-    top-k selection (the superlinear part) runs on the slice only.
+    ``windows`` may be a row subset of a larger grid (the windows-sharded
+    mesh scoring phase): ``total_rows`` is then the GLOBAL row count and
+    the subset holds global rows ``row_offset + stride * [0, nw)``
+    (``stride = p`` under round-robin row striping).  The priority draw is
+    always shaped by the global grid and gathered, so every shard's rows
+    see exactly the draw the single-device path would give them — the
+    leader sample is keyed by global window row, not by who scores it.
+    The draw is O(total slots) elementwise; the top-k selection (the
+    superlinear part) runs on the subset only.
 
     Returns:
       leader_slot: (n_windows, s) int32 slot index within the window.
@@ -239,7 +262,7 @@ def sample_leaders(windows: Windows, *, s: int, key: jax.Array,
     nw, w = windows.gid.shape
     pri = global_row_draw(
         lambda rows: jax.random.uniform(key, (rows, w)), nw,
-        row_offset, total_rows, fill=-1.0)
+        row_offset, total_rows, fill=-1.0, stride=stride)
     pri = jnp.where(windows.valid, pri, -1.0)
     vals, slots = jax.lax.top_k(pri, s)
     # valid slots carry uniform draws in [0, 1), invalid slots exactly -1.0:

@@ -61,6 +61,94 @@ from repro.compat import all_to_all, axis_size, psum_scatter, shard_map
 SENTINEL = jnp.uint32(0xFFFFFFFF)
 
 
+def pack_bit_fields(fields: Sequence[jax.Array],
+                    widths: Sequence[int]) -> jax.Array:
+    """Pack per-row bit fields into a big-endian uint32 word stream.
+
+    ``fields[i]`` is a (n,) uint32 array whose low ``widths[i]`` bits are
+    the field value (higher bits are masked off); fields concatenate
+    MSB-first into a bitstream laid out over ``ceil(sum(widths) / 32)``
+    words, word 0 most significant.  Because the layout is big-endian,
+    lexicographic comparison of the packed words equals lexicographic
+    comparison of the field tuples — packed keys sort exactly like their
+    unpacked multi-word counterparts, at the wire width the run actually
+    needs (``distributed_window_blocks`` ``payload_bits`` mode).  Each
+    width must be <= 32 (a field spans at most two words); zero-width
+    fields are legal no-ops (used to zero-pad the stream so a trailing
+    field lands in the LOW bits of the last word).
+
+    Returns (n, nwords) uint32.  Inverse: :func:`unpack_bit_fields`.
+    """
+    total = sum(widths)
+    nwords = -(-total // 32)
+    n = fields[0].shape[0]
+    words = [jnp.zeros((n,), jnp.uint32) for _ in range(nwords)]
+    off = 0
+    for f, w in zip(fields, widths):
+        if w < 0 or w > 32:
+            raise ValueError(f"field width {w} not in [0, 32]")
+        if w == 0:
+            continue
+        f = f.astype(jnp.uint32)
+        if w < 32:
+            f = f & jnp.uint32((1 << w) - 1)
+        end = off + w
+        for j in range(off // 32, (end - 1) // 32 + 1):
+            wend = 32 * (j + 1)
+            if end > wend:          # field continues into the next word
+                part = f >> jnp.uint32(end - wend)
+            elif end < wend:
+                part = f << jnp.uint32(wend - end)
+            else:
+                part = f
+            words[j] = words[j] | part
+        off = end
+    return jnp.stack(words, axis=-1)
+
+
+def unpack_bit_fields(words: jax.Array,
+                      widths: Sequence[int]) -> Tuple[jax.Array, ...]:
+    """Inverse of :func:`pack_bit_fields`: (n, nwords) uint32 -> field tuple.
+
+    Round-trips exactly: ``unpack_bit_fields(pack_bit_fields(fs, ws), ws)``
+    recovers every field's low ``ws[i]`` bits (higher input bits were
+    masked at pack time).
+    """
+    total = sum(widths)
+    if words.shape[-1] != -(-total // 32):
+        raise ValueError(
+            f"{words.shape[-1]} words cannot hold {total} bits")
+    outs = []
+    off = 0
+    for w in widths:
+        end = off + w
+        acc = jnp.zeros(words.shape[:-1], jnp.uint32)
+        if w:
+            for j in range(off // 32, (end - 1) // 32 + 1):
+                wstart, wend = 32 * j, 32 * (j + 1)
+                lo_b = max(0, wend - end)
+                nb = (wend - max(off, wstart)) - lo_b
+                chunk = words[..., j] >> jnp.uint32(lo_b)
+                if nb < 32:
+                    chunk = chunk & jnp.uint32((1 << nb) - 1)
+                acc = acc | (chunk << jnp.uint32(end - min(end, wend)))
+        outs.append(acc)
+        off = end
+    return tuple(outs)
+
+
+def _packed_payload(last_word: jax.Array, gid_bits: int) -> jax.Array:
+    """Recover the int32 payload embedded in a packed key's final bits.
+
+    The all-ones gid field (what SENTINEL rows carry) decodes to -1;
+    ``gid_bits = int(n).bit_length()`` guarantees real gids (< n <=
+    2^gid_bits - 1) never collide with it.
+    """
+    mask = jnp.uint32((1 << gid_bits) - 1)
+    gid_u = last_word & mask
+    return jnp.where(gid_u == mask, jnp.int32(-1), gid_u.astype(jnp.int32))
+
+
 def _key_words(keys: jax.Array) -> Tuple[jax.Array, ...]:
     """(n,) or (n, nk) uint32 -> tuple of (n,) word columns, most
     significant first."""
@@ -100,12 +188,22 @@ _exchange_capacity = exchange_capacity      # internal call sites / back-compat
 
 
 def _sample_sort_shard(keys: Tuple[jax.Array, ...], payload: jax.Array, *,
-                       axis: str, capacity_factor: float):
+                       axis: str, capacity_factor: float,
+                       payload_bits: Optional[int] = None):
     """Body run per shard under shard_map.
 
     keys: tuple of (n_local,) uint32 words (lexicographic, word 0 first);
     payload: (n_local,) int32 (point ids; -1 marks rows to ignore).
     Returns (sorted_keys tuple (p*cap,), sorted_payload, valid, dropped).
+
+    ``payload_bits`` switches on the bit-packed wire format: the payload
+    gid is already embedded as the final ``payload_bits`` bits of the last
+    key word (``pack_bit_fields``), so the separate payload operand is
+    ignored — the keys alone are the total order (the embedded gid IS the
+    tiebreak), the exchange ships ``nk`` words instead of ``nk + 1``, and
+    the payload is re-derived from the received keys.  Sentinel rows are
+    all-ones in every word, whose gid field decodes to -1 exactly as the
+    bitcast payload word did.
     """
     p = axis_size(axis)
     nk = len(keys)
@@ -114,9 +212,14 @@ def _sample_sort_shard(keys: Tuple[jax.Array, ...], payload: jax.Array, *,
 
     # 1) local sort; the payload is the FINAL key, so equal key words
     #    resolve deterministically by ascending id (matches a stable
-    #    single-device sort with a trailing gid operand).
-    out = jax.lax.sort((*keys, payload), num_keys=nk + 1)
-    keys_s, pay_s = out[:nk], out[-1]
+    #    single-device sort with a trailing gid operand).  Packed keys
+    #    carry the gid in their final bits, so the keys alone suffice.
+    if payload_bits is None:
+        out = jax.lax.sort((*keys, payload), num_keys=nk + 1)
+        keys_s, pay_s = out[:nk], out[-1]
+    else:
+        keys_s = tuple(jax.lax.sort(keys, num_keys=nk))
+        pay_s = _packed_payload(keys_s[-1], payload_bits)
 
     # 2) splitters: p local quantiles -> all_gather -> global splitters
     q_idx = (jnp.arange(p) * n_local) // p
@@ -139,27 +242,36 @@ def _sample_sort_shard(keys: Tuple[jax.Array, ...], payload: jax.Array, *,
     dropped = jnp.sum(live & ~keep).astype(jnp.int32)[None]   # after reals)
     r_idx = jnp.where(keep, rank, cap)     # cap is out of bounds -> dropped
 
-    # 4) ONE exchange: keys and payload stacked into a (p, cap, nk+1)
-    #    uint32 buffer (payload bitcast); sentinel slots are all-ones in
-    #    every word, which doubles as payload -1.
-    vals = jnp.stack(
-        keys_s + (jax.lax.bitcast_convert_type(pay_s, jnp.uint32),),
-        axis=-1)                                             # (n_local, nk+1)
-    send = jnp.full((p, cap, nk + 1), SENTINEL)
+    # 4) ONE exchange: keys (and, unpacked mode, the bitcast payload)
+    #    stacked into a (p, cap, wire_words) uint32 buffer; sentinel slots
+    #    are all-ones in every word, which decodes as payload -1 in both
+    #    wire formats.
+    if payload_bits is None:
+        vals = jnp.stack(
+            keys_s + (jax.lax.bitcast_convert_type(pay_s, jnp.uint32),),
+            axis=-1)                                       # (n_local, nk+1)
+    else:
+        vals = jnp.stack(keys_s, axis=-1)                  # (n_local, nk)
+    wire = vals.shape[-1]
+    send = jnp.full((p, cap, wire), SENTINEL)
     send = send.at[bins, r_idx].set(vals, mode="drop")
     recv = all_to_all(send, axis, split_axis=0, concat_axis=0, tiled=False)
-    recv = recv.reshape(-1, nk + 1)
+    recv = recv.reshape(-1, wire)
     recv_k = tuple(recv[:, i] for i in range(nk))
-    recv_p = jax.lax.bitcast_convert_type(recv[:, nk], jnp.int32)
 
     # 5) local merge (sentinels sort to the tail; payload again final key)
-    out = jax.lax.sort((*recv_k, recv_p), num_keys=nk + 1)
-    out_k, out_p = out[:nk], out[-1]
+    if payload_bits is None:
+        recv_p = jax.lax.bitcast_convert_type(recv[:, nk], jnp.int32)
+        out = jax.lax.sort((*recv_k, recv_p), num_keys=nk + 1)
+        out_k, out_p = out[:nk], out[-1]
+    else:
+        out_k = tuple(jax.lax.sort(recv_k, num_keys=nk))
+        out_p = _packed_payload(out_k[-1], payload_bits)
     valid = out_p >= 0
     return out_k, out_p, valid, dropped
 
 
-def _record_exchange(p: int, n_local: int, nk: int,
+def _record_exchange(p: int, n_local: int, wire_words: int,
                      capacity_factor: float) -> None:
     """Host-side accounting of one sort exchange's all_to_all volume.
 
@@ -168,11 +280,14 @@ def _record_exchange(p: int, n_local: int, nk: int,
     cross the interconnect, so including them (as this used to, p * p)
     over-reported cross-shard traffic by p/(p-1)x (2x at p=2).
     ``transfer_stats['all_to_all_bytes']`` is cross-shard bytes ONLY,
-    and is exactly 0 on a 1-shard mesh.
+    and is exactly 0 on a 1-shard mesh.  ``wire_words`` is the per-row
+    uint32 count actually shipped — bytes are accounted at WIRE width
+    (``nk`` packed key words, or ``nk + 1`` with the separate payload
+    word), not at any logical unpacked width.
     """
     from repro.graph.accumulator import record_all_to_all
     cap = exchange_capacity(n_local, p, capacity_factor)
-    record_all_to_all(p * (p - 1) * cap * (nk + 1) * 4)
+    record_all_to_all(p * (p - 1) * cap * wire_words * 4)
 
 
 def distributed_sort(keys: jax.Array, payload: jax.Array,
@@ -192,20 +307,36 @@ def distributed_sort(keys: jax.Array, payload: jax.Array,
     words = _key_words(keys)
     nk = len(words)
     p = mesh.shape[axis]
-    _record_exchange(p, keys.shape[0] // p, nk, capacity_factor)
+    _record_exchange(p, keys.shape[0] // p, nk + 1, capacity_factor)
+    outs = _sort_jit(payload, *words, mesh=mesh, axis=axis,
+                     capacity_factor=capacity_factor)
+    out_k = outs[0] if nk == 1 else jnp.stack(outs[:nk], axis=-1)
+    return out_k, outs[nk], outs[nk + 1], outs[nk + 2]
+
+
+# shard_map runs EAGERLY unless jitted: every call re-traces the body and
+# interprets it shard by shard — seconds of pure overhead per repetition
+# (this was most of the mesh build's wall time).  The sort entry points
+# therefore route through module-level jits keyed on the static config;
+# per-repetition values (payloads, slot offsets) stay traced so rounds
+# share one compilation.
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "axis", "capacity_factor"))
+def _sort_jit(payload, *words, mesh, axis, capacity_factor):
+    from jax.sharding import PartitionSpec as P
+
+    nk = len(words)
 
     def body(*args):
         out_k, out_p, valid, dropped = _sample_sort_shard(
             args[:nk], args[nk], axis=axis, capacity_factor=capacity_factor)
         return (*out_k, out_p, valid, dropped)
 
-    outs = shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=tuple(P(axis) for _ in range(nk + 1)),
         out_specs=tuple(P(axis) for _ in range(nk + 3)),
     )(*words, payload)
-    out_k = outs[0] if nk == 1 else jnp.stack(outs[:nk], axis=-1)
-    return out_k, outs[nk], outs[nk + 1], outs[nk + 2]
 
 
 def distributed_window_blocks(keys: jax.Array, gids: jax.Array,
@@ -213,7 +344,9 @@ def distributed_window_blocks(keys: jax.Array, gids: jax.Array,
                               slot_offset: jax.Array, total_slots: int,
                               axis: str = "data",
                               capacity_factor: float = 2.0,
-                              bucket_word: Optional[int] = None):
+                              bucket_word: Optional[int] = None,
+                              payload_bits: Optional[int] = None,
+                              window: Optional[int] = None):
     """Sample-sort (keys, gids) and hand each shard its OWN window slot block.
 
     The windows-sharded successor of :func:`distributed_argsort`: instead
@@ -234,6 +367,16 @@ def distributed_window_blocks(keys: jax.Array, gids: jax.Array,
     back as gid -1 with the ``windows.PAD_BUCKET`` sentinel in either
     mode.
 
+    ``payload_bits`` enables the bit-packed wire format: the caller built
+    ``keys`` with :func:`pack_bit_fields` ending in a ``payload_bits``-wide
+    gid field, so the sample sort ships keys only (no payload word — see
+    ``_sample_sort_shard``) and ``gids`` is consulted solely for shapes.
+    ``window`` (the window width W) switches slot placement to the
+    round-robin row striping of ``windows.shard_row_permutation``, so the
+    blocks each shard receives are its STRIDED global window rows
+    ``i, i + p, ...`` — the occupancy-levelling split of
+    ``windows.shard_row_layout`` — rather than a contiguous range.
+
     Collective cost per repetition: the sample sort's one all_to_all
     (recorded, cross-shard slices only) plus two O(total_slots) int32
     reduce-scatters — the replicated-permutation psum this replaces moved
@@ -245,20 +388,43 @@ def distributed_window_blocks(keys: jax.Array, gids: jax.Array,
     uint32 sharded over ``axis`` (shard i owns slots
     ``[i * total_slots/p, ...)``), and (p,) int32 dropped-key counts.
     """
-    from jax.sharding import PartitionSpec as P
-
-    from repro.core.windows import PAD_BUCKET
-
     words = _key_words(keys)
     nk = len(words)
     p = mesh.shape[axis]
     if total_slots % p:
         raise ValueError(f"total_slots {total_slots} not divisible by {p}")
-    _record_exchange(p, gids.shape[0] // p, nk, capacity_factor)
+    if window is not None and total_slots % (p * window):
+        raise ValueError(
+            f"total_slots {total_slots} not divisible by p*W {p * window}")
+    _record_exchange(p, gids.shape[0] // p,
+                     nk if payload_bits is not None else nk + 1,
+                     capacity_factor)
+    return _window_blocks_jit(
+        jnp.asarray(slot_offset, jnp.int32), gids, *words, mesh=mesh,
+        axis=axis, capacity_factor=capacity_factor, total_slots=total_slots,
+        bucket_word=bucket_word, payload_bits=payload_bits, window=window)
+
+
+# see _sort_jit: jit the shard_map so per-repetition calls (slot_offset is
+# traced — it changes every round) reuse one compiled program
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "axis", "capacity_factor",
+                                    "total_slots", "bucket_word",
+                                    "payload_bits", "window"))
+def _window_blocks_jit(slot_offset, gids, *words, mesh, axis,
+                       capacity_factor, total_slots, bucket_word,
+                       payload_bits, window):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.windows import PAD_BUCKET, shard_row_permutation
+
+    nk = len(words)
+    p = mesh.shape[axis]
 
     def body(offset, *args):
         out_k, out_p, valid, dropped = _sample_sort_shard(
-            args[:nk], args[nk], axis=axis, capacity_factor=capacity_factor)
+            args[:nk], args[nk], axis=axis, capacity_factor=capacity_factor,
+            payload_bits=payload_bits)
         local_count = jnp.sum(valid).astype(jnp.int32)
         counts = jax.lax.all_gather(local_count, axis)       # (p,)
         me = jax.lax.axis_index(axis)
@@ -267,6 +433,17 @@ def distributed_window_blocks(keys: jax.Array, gids: jax.Array,
         # dropped/invalid rows aim out of bounds -> mode="drop"
         slot = jnp.where(valid, offset + rank0 + local_rank,
                          jnp.int32(total_slots))
+        if window is not None:
+            # physical placement under row striping: global row r of the
+            # grid lives on shard r % p at local row r // p, so the
+            # reduce-scatter below hands each shard its strided rows
+            rps_rows = total_slots // (p * window)
+            gr = slot // window
+            col = slot - gr * window
+            slot = jnp.where(
+                valid,
+                shard_row_permutation(gr, rps_rows, p) * window + col,
+                jnp.int32(total_slots))
         gbuf = jnp.zeros((total_slots,), jnp.int32).at[slot].add(
             out_p + 1, mode="drop")
         block_gid = psum_scatter(gbuf, axis, scatter_dimension=0,
@@ -286,7 +463,7 @@ def distributed_window_blocks(keys: jax.Array, gids: jax.Array,
         body, mesh=mesh,
         in_specs=(P(),) + tuple(P(axis) for _ in range(nk + 1)),
         out_specs=(P(axis), P(axis), P(axis)),
-    )(jnp.asarray(slot_offset, jnp.int32), *words, gids)
+    )(slot_offset, *words, gids)
 
 
 def distributed_argsort(keys: jax.Array, gids: jax.Array,
@@ -305,12 +482,22 @@ def distributed_argsort(keys: jax.Array, gids: jax.Array,
     Rows with gid -1 (padding) are excluded from the permutation entirely:
     give them all-ones keys so they cannot displace real keys mid-stream.
     """
+    words = _key_words(keys)
+    p = mesh.shape[axis]
+    _record_exchange(p, gids.shape[0] // p, len(words) + 1, capacity_factor)
+    return _argsort_jit(gids, *words, mesh=mesh, axis=axis,
+                        capacity_factor=capacity_factor, n_out=n_out)
+
+
+# see _sort_jit: jitted so repeated calls share one compiled program
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "axis", "capacity_factor",
+                                    "n_out"))
+def _argsort_jit(gids, *words, mesh, axis, capacity_factor, n_out):
     from jax.sharding import PartitionSpec as P
 
-    words = _key_words(keys)
     nk = len(words)
     p = mesh.shape[axis]
-    _record_exchange(p, gids.shape[0] // p, nk, capacity_factor)
 
     def body(*args):
         out_k, out_p, valid, dropped = _sample_sort_shard(

@@ -60,7 +60,8 @@ import jax.numpy as jnp
 from repro.compat import all_to_all, shard_map
 from repro.core.spanner import Graph
 from repro.core.stars import StarsConfig
-from repro.distributed.sorter import exchange_capacity
+from repro.distributed.sorter import (exchange_capacity, pack_bit_fields,
+                                      unpack_bit_fields)
 from repro.graph import accumulator as acc_lib
 
 _U32_ONES = jnp.uint32(0xFFFFFFFF)
@@ -76,18 +77,49 @@ def _emit_capacity(m2: int, p: int, capacity_factor: float) -> int:
     return exchange_capacity(m2, p, capacity_factor)
 
 
+def _emit_widths(n_pad: int, p: int, exact_weights: bool):
+    """Packed emit-triple field widths ``(loc, nbr, weight)`` in bits.
+
+    A triple ships as ``loc`` (destination-local slab row,
+    ceil(log2(rows + 1)) bits — the all-ones value is reserved as the
+    sentinel, which ``int.bit_length`` leaves >= rows), ``nbr`` (global
+    gid, sized by the padded table) and the weight (float32 bits, or the
+    top 16 = bfloat16 when ``exact_weights`` is False) — typically 2
+    words instead of the 3 fixed int32 words this packing replaced.
+    """
+    rows = n_pad // p
+    return (int(rows).bit_length(), int(n_pad).bit_length(),
+            32 if exact_weights else 16)
+
+
 @functools.partial(jax.jit, donate_argnums=(0, 1),
-                   static_argnames=("mesh", "axis", "capacity_factor"))
-def _emit_exchange(slab_nbr, slab_w, src, dst, w, valid, *,
-                   mesh, axis: str, capacity_factor: float):
-    """shard_map body wrapper: bucket-by-owner -> one all_to_all -> fold."""
+                   static_argnames=("mesh", "axis", "capacity_factor",
+                                    "exact_weights"))
+def _emit_exchange(slab_nbr, slab_w, *streams,
+                   mesh, axis: str, capacity_factor: float,
+                   exact_weights: bool):
+    """shard_map body wrapper: bucket-by-owner -> one all_to_all -> fold.
+
+    ``streams`` is one or more flattened (src, dst, w, valid) quadruples —
+    consecutive repetitions coalesce their emits into ONE exchange by
+    passing several (builder.run_round_pair); locals are concatenated
+    INSIDE the shard body, so no resharding collective is inserted.
+    Triples cross the wire bit-packed (``_emit_widths``).
+    """
     from jax.sharding import PartitionSpec as P
 
     p = mesh.shape[axis]
     n_pad = slab_nbr.shape[0]
     rows = n_pad // p
+    widths = _emit_widths(n_pad, p, exact_weights)
+    nwords = -(-sum(widths) // 32)
+    ns = len(streams) // 4
 
-    def emit_shard(nbr_l, w_l, src_l, dst_l, w_c, ok_c):
+    def emit_shard(nbr_l, w_l, *stream_l):
+        src_l = jnp.concatenate([stream_l[4 * i] for i in range(ns)])
+        dst_l = jnp.concatenate([stream_l[4 * i + 1] for i in range(ns)])
+        w_c = jnp.concatenate([stream_l[4 * i + 2] for i in range(ns)])
+        ok_c = jnp.concatenate([stream_l[4 * i + 3] for i in range(ns)])
         # self-loop / invalid-id exclusion happens HERE, on global ids
         ok = ok_c & (src_l >= 0) & (dst_l >= 0) & (src_l != dst_l)
         # one insertion triple per endpoint (same doubling as accumulate)
@@ -111,13 +143,16 @@ def _emit_exchange(slab_nbr, slab_w, src, dst, w, valid, *,
 
         node_s = node[idx_s]
         # ship the row in the DESTINATION shard's local coordinates
-        loc = node_s - owner_s * rows
-        vals = jnp.stack(
-            [jax.lax.bitcast_convert_type(loc.astype(jnp.int32), jnp.uint32),
-             jax.lax.bitcast_convert_type(nbr[idx_s], jnp.uint32),
-             jax.lax.bitcast_convert_type(ww[idx_s], jnp.uint32)],
-            axis=-1)                                       # (m2, 3)
-        send = jnp.full((p, cap_send, 3), _U32_ONES)
+        loc = (node_s - owner_s * rows).astype(jnp.uint32)
+        ww_s = ww[idx_s]
+        if exact_weights:
+            wfield = jax.lax.bitcast_convert_type(ww_s, jnp.uint32)
+        else:
+            wfield = jax.lax.bitcast_convert_type(
+                ww_s.astype(jnp.bfloat16), jnp.uint16).astype(jnp.uint32)
+        vals = pack_bit_fields((loc, nbr[idx_s].astype(jnp.uint32), wfield),
+                               widths)                     # (m2, nwords)
+        send = jnp.full((p, cap_send, nwords), _U32_ONES)
         b_idx = jnp.where(keep, owner_s, 0)
         r_idx = jnp.where(keep, rank, cap_send)            # OOB -> dropped
         send = send.at[b_idx, r_idx].set(vals, mode="drop")
@@ -125,11 +160,17 @@ def _emit_exchange(slab_nbr, slab_w, src, dst, w, valid, *,
         # THE exchange: every cross-shard edge insertion of this round
         recv = all_to_all(send, axis, split_axis=0, concat_axis=0,
                           tiled=False)
-        recv = recv.reshape(-1, 3)
-        node_r = jax.lax.bitcast_convert_type(recv[:, 0], jnp.int32)
-        nbr_r = jax.lax.bitcast_convert_type(recv[:, 1], jnp.int32)
-        w_r = jax.lax.bitcast_convert_type(recv[:, 2], jnp.float32)
-        ok_r = (node_r >= 0) & (node_r < rows)   # sentinel loc bitcasts to -1
+        recv = recv.reshape(-1, nwords)
+        loc_u, nbr_u, w_u = unpack_bit_fields(recv, widths)
+        node_r = loc_u.astype(jnp.int32)
+        nbr_r = nbr_u.astype(jnp.int32)
+        if exact_weights:
+            w_r = jax.lax.bitcast_convert_type(w_u, jnp.float32)
+        else:
+            w_r = jax.lax.bitcast_convert_type(w_u << jnp.uint32(16),
+                                               jnp.float32)
+        # sentinel slots unpack loc all-ones >= rows (fields are unsigned)
+        ok_r = node_r < rows
 
         state = acc_lib._fold_triples(
             acc_lib.EdgeAccumulator(nbr=nbr_l, w=w_l),
@@ -138,23 +179,34 @@ def _emit_exchange(slab_nbr, slab_w, src, dst, w, valid, *,
 
     return shard_map(
         emit_shard, mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None),
-                  P(axis), P(axis), P(axis), P(axis)),
+        in_specs=(P(axis, None), P(axis, None))
+        + tuple(P(axis) for _ in streams),
         out_specs=(P(axis, None), P(axis, None), P(axis)),
-    )(slab_nbr, slab_w, src, dst, w, valid)
+    )(slab_nbr, slab_w, *streams)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("mesh", "axis", "capacity_factor"))
-def _fetch_exchange(table, gids, *, mesh, axis: str, capacity_factor: float):
-    """shard_map body wrapper: request rows by owner -> two all_to_alls."""
+def _fetch_exchange(table, *gid_parts, mesh, axis: str,
+                    capacity_factor: float):
+    """shard_map body wrapper: request rows by owner -> two all_to_alls.
+
+    ``gid_parts`` is one or more per-slot gid arrays — consecutive
+    repetitions coalesce their feature fetches into ONE request/response
+    pair by passing several (builder.run_round_pair).  Parts concatenate
+    INSIDE the shard body (no resharding collective) and the answers are
+    split back out per part, so callers see per-part (rows, ok) results.
+    """
     from jax.sharding import PartitionSpec as P
 
     p = mesh.shape[axis]
     rows = table.shape[0] // p              # feature rows per owner shard
     d = table.shape[1]
+    nparts = len(gid_parts)
 
-    def fetch_shard(table_l, gid_l):
+    def fetch_shard(table_l, *gid_ls):
+        sizes = [g.shape[0] for g in gid_ls]
+        gid_l = jnp.concatenate(gid_ls)
         s = gid_l.shape[0]
         cap = exchange_capacity(s, p, capacity_factor)
         live = gid_l >= 0
@@ -185,13 +237,19 @@ def _fetch_exchange(table, gids, *, mesh, axis: str, capacity_factor: float):
         out = jnp.zeros((s, d), table_l.dtype).at[idx_s].set(
             jnp.where(keep[:, None], got, 0))
         ok = jnp.zeros((s,), bool).at[idx_s].set(keep)
-        return out, ok, dropped
+        outs, oks, off = [], [], 0
+        for sz in sizes:
+            outs.append(out[off:off + sz])
+            oks.append(ok[off:off + sz])
+            off += sz
+        return (*outs, *oks, dropped)
 
     return shard_map(
         fetch_shard, mesh=mesh,
-        in_specs=(P(axis, None), P(axis)),
-        out_specs=(P(axis, None), P(axis), P(axis)),
-    )(table, gids)
+        in_specs=(P(axis, None),) + tuple(P(axis) for _ in gid_parts),
+        out_specs=tuple(P(axis, None) for _ in gid_parts)
+        + tuple(P(axis) for _ in gid_parts) + (P(axis),),
+    )(table, *gid_parts)
 
 
 def fetch_rows_all_to_all(table: jax.Array, gids: jax.Array, *, mesh,
@@ -227,31 +285,47 @@ def fetch_rows_all_to_all(table: jax.Array, gids: jax.Array, *, mesh,
     the default factor: slot owners are hash-random, so per-owner request
     counts concentrate at slots/p with 2x headroom.
 
+    ``gids`` may be a single (S,) array or a TUPLE of arrays — the latter
+    coalesces the fetches of consecutive repetitions into the same
+    request/response pair (amortizing the two all_to_all launches across
+    a repetition pair); the return becomes per-part tuples.
+
     Args:
       table: (n_pad, d) row-sharded table (features, or features with
         packed prefilter words bitcast alongside); n_pad % p == 0.
       gids:  (S,) int32 global ids per slot, -1 for empty slots; sharded.
+        Or a tuple of such arrays to batch several fetches.
     Returns:
-      (rows (S, d) slot-aligned, ok (S,) bool, dropped (p,) int32).
+      (rows (S, d) slot-aligned, ok (S,) bool, dropped (p,) int32); with a
+      tuple input, ``rows`` and ``ok`` are per-part tuples.
     """
     p = mesh.shape[axis]
+    is_tuple = isinstance(gids, (tuple, list))
+    parts = tuple(gids) if is_tuple else (gids,)
     if table.shape[0] % p:
         raise ValueError(f"table rows {table.shape[0]} not divisible by "
                          f"mesh axis {p}")
-    if gids.shape[0] % p:
-        raise ValueError(f"slot count {gids.shape[0]} not divisible by "
-                         f"mesh axis {p}")
-    cap = exchange_capacity(gids.shape[0] // p, p, capacity_factor)
+    for g in parts:
+        if g.shape[0] % p:
+            raise ValueError(f"slot count {g.shape[0]} not divisible by "
+                             f"mesh axis {p}")
+    total = sum(g.shape[0] for g in parts)
+    cap = exchange_capacity(total // p, p, capacity_factor)
     acc_lib.record_all_to_all(p * (p - 1) * cap * 4)               # requests
     acc_lib.record_all_to_all(p * (p - 1) * cap * table.shape[1] * 4)
-    return _fetch_exchange(table, gids, mesh=mesh, axis=axis,
-                           capacity_factor=capacity_factor)
+    res = _fetch_exchange(table, *parts, mesh=mesh, axis=axis,
+                          capacity_factor=capacity_factor)
+    n = len(parts)
+    outs, oks, dropped = res[:n], res[n:2 * n], res[2 * n]
+    if is_tuple:
+        return outs, oks, dropped
+    return outs[0], oks[0], dropped
 
 
 def accumulate_all_to_all(state: acc_lib.EdgeAccumulator,
-                          src: jax.Array, dst: jax.Array, w: jax.Array,
-                          valid: jax.Array, *, mesh, axis: str = "data",
-                          capacity_factor: float = 4.0
+                          src, dst, w, valid, *, mesh, axis: str = "data",
+                          capacity_factor: float = 4.0,
+                          exact_weights: bool = True
                           ) -> Tuple[acc_lib.EdgeAccumulator, jax.Array]:
     """Fold a candidate stream into row-sharded slabs via ONE all_to_all.
 
@@ -268,11 +342,18 @@ def accumulate_all_to_all(state: acc_lib.EdgeAccumulator,
     Over-capacity triples are dropped and *counted* (returned per shard;
     zero for near-uniform hash orders at the default ``capacity_factor``),
     the sorter's graceful-degradation contract.  Exchange volume is
-    recorded host-side in ``transfer_stats['all_to_all_bytes']``.
+    recorded host-side in ``transfer_stats['all_to_all_bytes']`` at the
+    WIRE width: triples ship bit-packed (``_emit_widths``), with
+    ``exact_weights=False`` additionally truncating weights to bfloat16
+    in flight (the StarsConfig escape hatch keeps them float32).
+
+    ``src``/``dst``/``w``/``valid`` may each be a single array or a TUPLE
+    of per-repetition streams (same arity across the four) — the latter
+    coalesces the emits of consecutive repetitions into ONE exchange.
 
     Args:
       state: EdgeAccumulator whose row count is a multiple of the axis size.
-      src/dst/w/valid: equally-shaped candidate stream (any rank).
+      src/dst/w/valid: equally-shaped candidate stream(s) (any rank).
     Returns:
       (new state, (p,) int32 dropped-triple counts).
     """
@@ -280,24 +361,29 @@ def accumulate_all_to_all(state: acc_lib.EdgeAccumulator,
     n_pad = state.nbr.shape[0]
     if n_pad % p:
         raise ValueError(f"slab rows {n_pad} not divisible by mesh axis {p}")
-    src = src.ravel()
-    dst = dst.ravel()
-    w = w.ravel()
-    valid = valid.ravel()
-    pad = (-src.shape[0]) % p
-    if pad:
-        src = jnp.pad(src, (0, pad), constant_values=-1)
-        dst = jnp.pad(dst, (0, pad), constant_values=-1)
-        w = jnp.pad(w, (0, pad))
-        valid = jnp.pad(valid, (0, pad))
-    m2 = 2 * (src.shape[0] // p)
+    if not isinstance(src, (tuple, list)):
+        src, dst, w, valid = (src,), (dst,), (w,), (valid,)
+    streams, m2 = [], 0
+    for s_i, d_i, w_i, v_i in zip(src, dst, w, valid):
+        s_i, d_i = s_i.ravel(), d_i.ravel()
+        w_i, v_i = w_i.ravel(), v_i.ravel()
+        pad = (-s_i.shape[0]) % p
+        if pad:
+            s_i = jnp.pad(s_i, (0, pad), constant_values=-1)
+            d_i = jnp.pad(d_i, (0, pad), constant_values=-1)
+            w_i = jnp.pad(w_i, (0, pad))
+            v_i = jnp.pad(v_i, (0, pad))
+        m2 += 2 * (s_i.shape[0] // p)
+        streams += [s_i, d_i, w_i, v_i]
+    nwords = -(-sum(_emit_widths(n_pad, p, exact_weights)) // 32)
     # p*(p-1) slices: the p diagonal self-buckets of the send buffer never
     # cross the interconnect (all_to_all_bytes is cross-shard-only)
     acc_lib.record_all_to_all(
-        p * (p - 1) * _emit_capacity(m2, p, capacity_factor) * 3 * 4)
+        p * (p - 1) * _emit_capacity(m2, p, capacity_factor) * nwords * 4)
     nbr, ww, dropped = _emit_exchange(
-        state.nbr, state.w, src, dst, w, valid,
-        mesh=mesh, axis=axis, capacity_factor=capacity_factor)
+        state.nbr, state.w, *streams,
+        mesh=mesh, axis=axis, capacity_factor=capacity_factor,
+        exact_weights=exact_weights)
     return acc_lib.EdgeAccumulator(nbr=nbr, w=ww), dropped
 
 

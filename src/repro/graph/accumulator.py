@@ -56,6 +56,15 @@ _BIG = jnp.int32(2**31 - 1)
 # so recorders count p*(p-1) slices — the stat is exactly 0 on a 1-shard
 # mesh, and no longer over-reports interconnect traffic by p/(p-1)x
 # (``all_to_all_calls`` still counts every exchange, diagonal included).
+# Bytes are counted at WIRE width, not logical width: bit-packed sort
+# keys (distributed/sorter.py ``pack_bit_fields`` — hash bits + a 20-bit
+# tiebreak + ceil(log2 n) gid bits instead of fixed int32 words) count
+# their packed word count, packed emit triples (stars_dist._emit_exchange)
+# count their loc/nbr/weight field words, and bf16-quantized edge weights
+# (StarsConfig.exact_weights=False) count 16 bits — the stat tracks what
+# actually crosses the interconnect, so shrinking the wire format shrinks
+# the stat at identical logical traffic (benchmarks/roofline.py divides
+# it by ``comparisons`` for the bytes-per-comparison roofline rows).
 transfer_stats: Dict[str, int] = {"edge_fetches": 0, "bytes": 0,
                                   "checkpoint_fetches": 0,
                                   "checkpoint_bytes": 0,

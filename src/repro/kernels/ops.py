@@ -19,6 +19,7 @@ from repro.kernels import leader_score as _ls
 from repro.kernels import ref as _ref
 from repro.kernels import simhash as _sh
 from repro.kernels import topk_merge as _tm
+from repro.kernels import window_score as _ws
 
 
 def pallas_by_default() -> bool:
@@ -62,6 +63,37 @@ def leader_score(leaders, members, leader_ok, member_ok, *,
                                 normalized=normalized, interpret=interp)
     return _ref.leader_score_ref(leaders, members, leader_ok, member_ok,
                                  normalized=normalized)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "normalized", "allpairs", "match_bucket", "new_from", "refresh_below",
+    "r1", "use_pallas"))
+def window_score(leaders, members, leader_slot, lead_gid, gid, leader_ok,
+                 member_ok, lead_bucket, bucket, keep, *,
+                 normalized: bool = True, allpairs: bool = False,
+                 match_bucket: bool = False, new_from: int = 0,
+                 refresh_below: int = 0, r1: Optional[float] = None,
+                 use_pallas: Optional[bool] = None):
+    """Fused Stars window scoring (similarities + emit mask + counters).
+
+    The whole per-window pipeline of ``core/stars._score_windows`` in one
+    op — see ``ref.window_score_ref`` for the shape/mask contract.  The
+    Pallas kernel (``kernels/window_score.py``) shares the reference's
+    exact normalization and contraction, so both paths are bit-identical
+    and the mesh edge-for-edge parity is dispatch-independent.
+    """
+    use, interp = _pick(use_pallas)
+    if use:
+        return _ws.window_score(
+            leaders, members, leader_slot, lead_gid, gid, leader_ok,
+            member_ok, lead_bucket, bucket, keep, normalized=normalized,
+            allpairs=allpairs, match_bucket=match_bucket, new_from=new_from,
+            refresh_below=refresh_below, r1=r1, interpret=interp)
+    return _ref.window_score_ref(
+        leaders, members, leader_slot, lead_gid, gid, leader_ok, member_ok,
+        lead_bucket, bucket, keep, normalized=normalized, allpairs=allpairs,
+        match_bucket=match_bucket, new_from=new_from,
+        refresh_below=refresh_below, r1=r1)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "sorted_inputs"))

@@ -44,6 +44,60 @@ def leader_score_ref(leaders: jax.Array, members: jax.Array,
     return jnp.where(mask, sims, -jnp.inf).astype(jnp.float32)
 
 
+def window_score_ref(leaders: jax.Array, members: jax.Array,
+                     leader_slot: jax.Array, lead_gid: jax.Array,
+                     gid: jax.Array, leader_ok: jax.Array,
+                     member_ok: jax.Array, lead_bucket: jax.Array,
+                     bucket: jax.Array, keep: jax.Array, *,
+                     normalized: bool = True, allpairs: bool = False,
+                     match_bucket: bool = False, new_from: int = 0,
+                     refresh_below: int = 0, r1=None):
+    """Fused Stars window scoring: similarity tiles + the full emit mask.
+
+    The oracle for ``kernels/window_score.py`` — one call scores a batch of
+    windows end to end: masked leader x member similarities
+    (:func:`leader_score_ref` — same normalization, same contraction) plus
+    the candidate-emit mask chain of ``core/stars._score_windows`` (self /
+    upper-triangle / same-bucket / extension / refresh masks) and the
+    per-window comparison counters, so the (nw, s, w) grid needs no second
+    pass over features.
+
+    leaders: (nw, s, d); members: (nw, w, d); leader_slot / lead_gid /
+    leader_ok / lead_bucket: (nw, s); gid / member_ok / bucket: (nw, w);
+    keep: (nw,) bool (the refresh window sample; ignored unless
+    ``refresh_below`` > 0).
+
+    Returns ``(sims, emit, comparisons, emitted)``: (nw, s, w) float32
+    similarities (-inf outside the validity mask; every emitted entry is
+    finite), (nw, s, w) bool emit mask, and per-window int32 counts.
+    """
+    sims = leader_score_ref(leaders, members, leader_ok, member_ok,
+                            normalized=normalized)
+    w = members.shape[1]
+    slot = jnp.arange(w, dtype=jnp.int32)[None, None, :]
+    mask = leader_ok[:, :, None] & member_ok[:, None, :]
+    # exclude self-comparison (slot identity, robust to duplicate gids)
+    mask &= leader_slot[:, :, None] != slot
+    if allpairs:
+        # count each unordered pair once: upper triangle
+        mask &= leader_slot[:, :, None] < slot
+    if match_bucket:
+        mask &= lead_bucket[:, :, None] == bucket[:, None, :]
+    if new_from > 0:
+        nf = jnp.int32(new_from)
+        mask &= (lead_gid[:, :, None] >= nf) | (gid[:, None, :] >= nf)
+    if refresh_below > 0:
+        rb = jnp.int32(refresh_below)
+        mask &= keep[:, None, None]
+        mask &= (lead_gid[:, :, None] < rb) & (gid[:, None, :] < rb)
+    comparisons = jnp.sum(mask, axis=(1, 2), dtype=jnp.int32)
+    emit = mask
+    if r1 is not None:
+        emit &= sims > r1
+    emitted = jnp.sum(emit, axis=(1, 2), dtype=jnp.int32)
+    return sims, emit, comparisons, emitted
+
+
 def topk_merge_ref(slab_nbr: jax.Array, slab_w: jax.Array,
                    inc_nbr: jax.Array, inc_w: jax.Array
                    ) -> tuple[jax.Array, jax.Array]:

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: fully fused Stars window scoring (the build hot path).
+
+``leader_score`` fused normalize+matmul+mask; the scoring loop around it
+still materialized the (rows, s, W) candidate grid plus leader/member gid
+broadcasts in HBM, re-read them to apply the self/bucket/extension/refresh
+masks, and re-read them again to count comparisons.  This kernel folds the
+ENTIRE per-window scoring pipeline of ``core/stars._score_windows`` into
+one pass: leaders and members are staged in VMEM once per window,
+squared-norms run on the VPU, the similarity tile on the MXU, the full
+emit-mask chain (validity, self-slot, upper-triangle, same-bucket,
+extension watermark, refresh watermark + window sample) is applied in
+registers, and the per-window comparison / emit counters reduce in VMEM —
+so the only HBM traffic is one read of each feature tile and the masked
+(s, W) result write.  Pallas's grid pipeline double-buffers the per-window
+input tiles automatically (window i+1's tiles stream in while window i
+computes).
+
+Numerics contract: normalization divides by sqrt(sum^2 + 1e-12) and the
+contraction is ``dot_general`` over the feature axis — the exact ops of
+``ref.leader_score_ref``.  The discrete outputs (emit mask, counters, the
+-inf validity pattern) are exactly equal to the oracle's; the similarity
+floats agree to ~1 ulp but not bitwise, because XLA fuses the
+normalize->contract chain differently in this grid program than in the
+batched oracle (FMA contraction — the same drift any two jit scopes can
+show).  Dispatch (``ops.window_score``) picks exactly one implementation
+per backend, so mesh/single-device edge-for-edge parity never compares
+floats across the two paths.
+
+The ``keep`` refresh-sample flag rides as an (nw, 1) block (TPU blocks
+want >= 2D); the (nw,) counters come back as (1, 1) blocks reshaped by the
+wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax 0.4.x names this TPUCompilerParams; newer releases renamed it to
+# CompilerParams.  Resolve whichever exists so both sides of the rename work.
+_CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or getattr(
+    pltpu, "CompilerParams")
+
+_NEG_INF = float("-inf")
+
+
+def _window_score_kernel(l_ref, m_ref, lslot_ref, lgid_ref, gid_ref,
+                         lok_ref, mok_ref, lbuck_ref, buck_ref, keep_ref,
+                         sims_ref, emit_ref, comp_ref, emitted_ref, *,
+                         normalized: bool, allpairs: bool,
+                         match_bucket: bool, new_from: int,
+                         refresh_below: int, r1: Optional[float],
+                         s: int, w: int):
+    lead = l_ref[0].astype(jnp.float32)                    # (s, d)
+    memb = m_ref[0].astype(jnp.float32)                    # (w, d)
+    if normalized:
+        # division by sqrt, NOT rsqrt-multiply: same op sequence as ref.py
+        lead = lead / jnp.sqrt(
+            jnp.sum(lead * lead, -1, keepdims=True) + 1e-12)
+        memb = memb / jnp.sqrt(
+            jnp.sum(memb * memb, -1, keepdims=True) + 1e-12)
+    sims = jax.lax.dot_general(lead, memb, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+    lok = lok_ref[0]                                       # (s,)
+    mok = mok_ref[0]                                       # (w,)
+    mask0 = lok[:, None] & mok[None, :]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (s, w), 1)
+    lslot = lslot_ref[0][:, None]                          # (s, 1)
+    mask = mask0 & (lslot != slot)
+    if allpairs:
+        mask &= lslot < slot
+    if match_bucket:
+        mask &= lbuck_ref[0][:, None] == buck_ref[0][None, :]
+    if new_from > 0:
+        nf = jnp.int32(new_from)
+        mask &= (lgid_ref[0][:, None] >= nf) | (gid_ref[0][None, :] >= nf)
+    if refresh_below > 0:
+        rb = jnp.int32(refresh_below)
+        mask &= keep_ref[0, 0]
+        mask &= (lgid_ref[0][:, None] < rb) & (gid_ref[0][None, :] < rb)
+
+    sims_ref[0] = jnp.where(mask0, sims, _NEG_INF)
+    emit = mask
+    if r1 is not None:
+        emit &= sims > r1
+    emit_ref[0] = emit
+    comp_ref[0, 0] = jnp.sum(mask.astype(jnp.int32))
+    emitted_ref[0, 0] = jnp.sum(emit.astype(jnp.int32))
+
+
+def window_score(leaders: jax.Array, members: jax.Array,
+                 leader_slot: jax.Array, lead_gid: jax.Array,
+                 gid: jax.Array, leader_ok: jax.Array, member_ok: jax.Array,
+                 lead_bucket: jax.Array, bucket: jax.Array,
+                 keep: jax.Array, *, normalized: bool = True,
+                 allpairs: bool = False, match_bucket: bool = False,
+                 new_from: int = 0, refresh_below: int = 0,
+                 r1: Optional[float] = None, interpret: bool = False):
+    """Fused masked window scoring; see ``ref.window_score_ref`` for the
+    argument/return contract (shapes, mask chain, counter semantics)."""
+    nw, s, d = leaders.shape
+    _, w, _ = members.shape
+    kernel = functools.partial(
+        _window_score_kernel, normalized=normalized, allpairs=allpairs,
+        match_bucket=match_bucket, new_from=new_from,
+        refresh_below=refresh_below, r1=r1, s=s, w=w)
+    sims, emit, comp, emitted = pl.pallas_call(
+        kernel,
+        grid=(nw,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, w, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),        # leader_slot
+            pl.BlockSpec((1, s), lambda i: (i, 0)),        # lead_gid
+            pl.BlockSpec((1, w), lambda i: (i, 0)),        # gid
+            pl.BlockSpec((1, s), lambda i: (i, 0)),        # leader_ok
+            pl.BlockSpec((1, w), lambda i: (i, 0)),        # member_ok
+            pl.BlockSpec((1, s), lambda i: (i, 0)),        # lead_bucket
+            pl.BlockSpec((1, w), lambda i: (i, 0)),        # bucket
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),        # keep
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nw, s, w), jnp.float32),
+            jax.ShapeDtypeStruct((nw, s, w), jnp.bool_),
+            jax.ShapeDtypeStruct((nw, 1), jnp.int32),
+            jax.ShapeDtypeStruct((nw, 1), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(leaders, members, leader_slot, lead_gid, gid, leader_ok, member_ok,
+      lead_bucket, bucket, keep.reshape(nw, 1))
+    return sims, emit, comp.reshape(nw), emitted.reshape(nw)

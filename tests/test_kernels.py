@@ -9,6 +9,9 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.leader_score import leader_score
 from repro.kernels.simhash import simhash_packed
+from repro.kernels.window_score import window_score
+
+pytestmark = pytest.mark.kernels
 
 
 @pytest.mark.parametrize("n,d,m", [(8, 16, 32), (70, 40, 64), (128, 64, 128),
@@ -40,6 +43,60 @@ def test_leader_score_matches_ref(nw, s, w, d, normalized):
     assert (np.isneginf(out) == np.isneginf(exp)).all()
     fin = np.isfinite(exp)
     np.testing.assert_allclose(out[fin], exp[fin], atol=2e-5)
+
+
+@pytest.mark.parametrize("nw,s,w,d", [(1, 4, 8, 16), (5, 8, 24, 16),
+                                      (3, 25, 250, 64), (2, 1, 16, 8)])
+@pytest.mark.parametrize("variant", [
+    # (normalized, allpairs, match_bucket, new_from, refresh_below, r1):
+    # one case per mask-chain stage plus the fully-armed chain
+    (True, False, False, 0, 0, None),
+    (False, False, False, 0, 0, None),
+    (True, True, False, 0, 0, None),
+    (True, False, True, 0, 0, None),
+    (True, False, False, 7, 0, None),
+    (True, False, False, 0, 9, None),
+    (False, True, True, 5, 11, 0.2),
+])
+def test_window_score_matches_ref(nw, s, w, d, variant):
+    """The fused kernel matches the jnp oracle: every discrete output (the
+    emit mask, the comparison/emitted counters, the -inf validity pattern)
+    is exactly equal, and the similarity floats agree to ULP scale.  Exact
+    float equality between the two is not achievable on CPU — XLA fuses the
+    normalize->contract chain differently in the pallas grid program than
+    in the batched oracle (FMA contraction), the same ~1-ulp drift any two
+    jit scopes can exhibit — but dispatch picks exactly one path per
+    backend, so mesh parity never mixes the two."""
+    normalized, allpairs, match_bucket, new_from, refresh_below, r1 = variant
+    key = jax.random.key(nw * w + s)
+    ks = jax.random.split(key, 10)
+    leaders = jax.random.normal(ks[0], (nw, s, d))
+    members = jax.random.normal(ks[1], (nw, w, d))
+    leader_slot = jax.random.randint(ks[2], (nw, s), 0, w)
+    lead_gid = jax.random.randint(ks[3], (nw, s), 0, 16)
+    gid = jax.random.randint(ks[4], (nw, w), 0, 16)
+    leader_ok = jax.random.uniform(ks[5], (nw, s)) > 0.2
+    member_ok = jax.random.uniform(ks[6], (nw, w)) > 0.2
+    lead_bucket = jax.random.randint(ks[7], (nw, s), 0, 3).astype(jnp.uint32)
+    bucket = jax.random.randint(ks[8], (nw, w), 0, 3).astype(jnp.uint32)
+    keep = jax.random.uniform(ks[9], (nw,)) > 0.4
+    args = (leaders, members, leader_slot, lead_gid, gid, leader_ok,
+            member_ok, lead_bucket, bucket, keep)
+    kw = dict(normalized=normalized, allpairs=allpairs,
+              match_bucket=match_bucket, new_from=new_from,
+              refresh_below=refresh_below, r1=r1)
+    out = window_score(*args, interpret=True, **kw)
+    exp = ref.window_score_ref(*args, **kw)
+    sims, sims_ref = np.asarray(out[0]), np.asarray(exp[0])
+    np.testing.assert_array_equal(np.isneginf(sims), np.isneginf(sims_ref),
+                                  err_msg="sims -inf pattern")
+    fin = np.isfinite(sims_ref)
+    np.testing.assert_allclose(sims[fin], sims_ref[fin], atol=2e-6,
+                               err_msg="sims")
+    for got, want, name in zip(out[1:], exp[1:], ("emit", "comparisons",
+                                                  "emitted")):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=name)
 
 
 @pytest.mark.parametrize("b,hq,hkv,sq,sk,d", [

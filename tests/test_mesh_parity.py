@@ -21,11 +21,18 @@ as tests/test_distributed.py).  Covered:
     exact single-device window grid even when a window's members straddle
     two shards' sample-sort output blocks (the boundary-window case),
   * invariants: one device->host edge fetch per finalize(), the explicit
-    all_to_all accounting (four exchange buffers per repetition: sort +
-    feature request + feature response + emit) with
+    all_to_all accounting — repetitions run in coalesced PAIRS sharing one
+    feature request/response and one emit exchange (builder
+    ``run_round_pair``), so a pair costs 5 exchange buffers (2 sorts +
+    fetch req + fetch resp + emit) and an unpaired trailing repetition 4:
+    ``5 * (reps // 2) + 4 * (reps % 2)`` calls total — with
     ``all_to_all_bytes`` counting CROSS-SHARD slices only (exactly 0 on a
-    1-shard mesh), no reliance on XLA scatter/gather collectives for slab
-    updates or the scoring-phase feature join,
+    1-shard mesh) at the bit-packed WIRE width, no reliance on XLA
+    scatter/gather collectives for slab updates or the scoring-phase
+    feature join,
+  * wire weight precision: ``exact_weights=True`` (default) ships float32
+    weight bits and stays edge-for-edge exact; ``exact_weights=False``
+    ships bfloat16 and must hold two-hop recall within 1% of exact,
   * checkpoint/restore bit-exact across a reshard (mesh p=4 -> p=2 ->
     single device).
 """
@@ -107,15 +114,72 @@ def test_mesh_build_edge_for_edge_equals_single_device(devices):
         # both backends (the windows-sharded coverage invariant)
         assert r["scored_single"] == r["scored_mesh"] \
             == r["reps"] * r["n_windows"]
-        # ONE device->host edge fetch; explicit comms: sort + feature
-        # request + feature response + emit buffers per repetition, with
-        # bytes counting cross-shard slices ONLY (0 on a 1-shard mesh)
+        # ONE device->host edge fetch; explicit comms: repetition PAIRS
+        # share one fetch request/response and one emit exchange (5 calls
+        # per pair, 4 for an unpaired trailing rep), with bytes counting
+        # cross-shard slices ONLY (0 on a 1-shard mesh)
         assert r["edge_fetches"] == 1
-        assert r["a2a_calls"] == 4 * r["reps"]
+        assert r["a2a_calls"] == 5 * (r["reps"] // 2) + 4 * (r["reps"] % 2)
         if devices > 1:
             assert r["a2a_bytes"] > 0
         else:
             assert r["a2a_bytes"] == 0
+
+
+def test_mesh_bf16_wire_weights_recall_within_one_percent():
+    """``exact_weights=False`` quantizes emit-exchange weights to bfloat16
+    in flight: the byte diet must cost at most 1% two-hop recall against
+    the exact-wire build (and the exact build must remain edge-for-edge
+    equal to single-device, proving the escape hatch default is intact).
+
+    Emit triples pack to whole uint32 words, so the 16-bit weight only
+    sheds wire bytes when it crosses a word boundary: n is chosen so
+    loc+nbr need 16 bits (n_pad=256, p=4 -> 7+9), making the bf16 triple
+    1 word vs 2 exact — the same boundary a tera-scale build crosses
+    (40-bit gids: 4 words -> 3).  At sizes between boundaries the bf16
+    wire cost is merely equal, never worse."""
+    res = _run_sub(_COMMON + """
+        import dataclasses
+        from repro.graph import neighbor_recall
+        n = 256
+        feats, _ = mnist_like_points(n=n, d=32, classes=8, spread=0.15,
+                                     seed=3)
+        cfg = StarsConfig(mode="sorting", scoring="stars",
+                          family=HashFamilyConfig("simhash", m=24),
+                          measure="cosine", r=8, window=80, leaders=10,
+                          degree_cap=40, seed=2)
+        mesh = jax.make_mesh((4,), ("data",))
+        dense = np.asarray(feats.dense)
+
+        g_single = GraphBuilder(feats, cfg).add_reps(8).finalize()
+        acc_lib.reset_transfer_stats()
+        g_exact = GraphBuilder(dense, cfg, mesh=mesh).add_reps(8).finalize()
+        bytes_exact = acc_lib.transfer_stats["all_to_all_bytes"]
+        cfg16 = dataclasses.replace(cfg, exact_weights=False)
+        acc_lib.reset_transfer_stats()
+        g_bf16 = GraphBuilder(dense, cfg16, mesh=mesh).add_reps(8).finalize()
+        bytes_bf16 = acc_lib.transfer_stats["all_to_all_bytes"]
+
+        xn = dense / np.linalg.norm(dense, axis=1, keepdims=True)
+        sims = xn @ xn.T
+        np.fill_diagonal(sims, -np.inf)
+        queries = np.arange(0, n, 2)
+        truth = [np.argsort(-sims[q])[:10] for q in queries]
+        rec = {name: neighbor_recall(g, queries, truth, hops=2, k_cap=10)
+               for name, g in (("exact", g_exact), ("bf16", g_bf16))}
+        print(json.dumps({
+            "exact_equals_single": edges(g_single) == edges(g_exact),
+            "rec": rec,
+            "comp_equal": g_exact.stats["comparisons"]
+                == g_bf16.stats["comparisons"],
+            "bytes_exact": bytes_exact, "bytes_bf16": bytes_bf16,
+        }))
+    """, 4)
+    assert res["exact_equals_single"]
+    assert res["comp_equal"]                 # same candidates, fewer bytes
+    assert res["bytes_bf16"] < res["bytes_exact"]
+    rec = res["rec"]
+    assert rec["bf16"] > rec["exact"] - 0.01, rec
 
 
 @pytest.mark.parametrize("devices", [1, 2, 4])
@@ -254,15 +318,17 @@ def test_window_blocks_match_single_device_grid_across_block_boundaries():
             blk_gid, blk_bucket, dropped = distributed_window_blocks(
                 keys, gids, mesh, slot_offset=offset_fn(rep),
                 total_slots=total_slots, axis="data", capacity_factor=2.0,
-                bucket_word=0 if mode == "lsh" else None)
+                bucket_word=0 if mode == "lsh" else None,
+                payload_bits=int(n).bit_length(), window=w)
             # single-device reference grid from the same sketch draw
             from repro.core.stars import _rep_keys, _rep_candidates
+            from repro.core.windows import shard_row_permutation
             keys_h = np.asarray(keys)[:n]
             gids_h = np.asarray(gids)[:n]
-            # word-0-first lexicographic with gid as the final tiebreak —
-            # the exact total order the distributed sample sort produces
-            order = sorted(range(n), key=lambda i: (tuple(keys_h[i]),
-                                                    gids_h[i]))
+            # word-0-first lexicographic; the packed keys already embed the
+            # gid as their final bits, so the keys alone are the exact
+            # total order the distributed sample sort produces
+            order = sorted(range(n), key=lambda i: tuple(keys_h[i]))
             perm = jnp.asarray(gids_h[np.asarray(order)], jnp.int32)
             if mode == "lsh":
                 perm_bucket = jnp.asarray(np.asarray(keys_h)[order, 0],
@@ -273,8 +339,15 @@ def test_window_blocks_match_single_device_grid_across_block_boundaries():
                 perm, perm_bucket, offset_fn(rep), total_slots, w)
             grid_gid = np.asarray(blk_gid).reshape(-1, w)
             grid_bucket = np.asarray(blk_bucket).reshape(-1, w)
-            ref_gid = np.asarray(ref.gid)
-            ref_bucket = np.asarray(ref.bucket)
+            # the physical blocks are round-robin STRIPED: global row r
+            # lives at physical row shard_row_permutation(r) — permute the
+            # contiguous reference grid into physical order before compare
+            phys = np.asarray(shard_row_permutation(
+                jnp.arange(total_slots // w), rps, p))
+            ref_gid = np.empty_like(np.asarray(ref.gid))
+            ref_bucket = np.empty_like(np.asarray(ref.bucket))
+            ref_gid[phys] = np.asarray(ref.gid)
+            ref_bucket[phys] = np.asarray(ref.bucket)
             out[mode] = {
                 "gid_equal": bool((grid_gid == ref_gid).all()),
                 "bucket_equal": bool((grid_bucket == ref_bucket).all()),

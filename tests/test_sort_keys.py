@@ -1,0 +1,168 @@
+"""Packed sort-key properties (distributed/sorter.py bit packing).
+
+The comms diet packs multi-word sort keys down to the bits a run actually
+uses (``pack_bit_fields`` / ``unpack_bit_fields``) and embeds the gid
+payload in the final bits of the last key word (``payload_bits`` mode in
+``distributed_window_blocks``).  The whole scheme rests on two invariants,
+property-tested here:
+
+  1. round trip — unpacking recovers every field's masked low bits exactly;
+  2. order preservation — lexicographic comparison of the packed big-endian
+     words equals lexicographic comparison of the original field tuples, so
+     a sample sort over packed keys yields the same permutation as one over
+     the unpacked multi-word keys.
+
+Plain unit tests cover the adversarial corners (duplicate hash words that
+only differ in the embedded gid, the all-ones sentinel, zero-width pad
+fields); the @given tests skip cleanly when hypothesis is not installed.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # property tests skip, plain tests still run
+    from _hypothesis_stub import given, settings, st
+
+from repro.distributed.sorter import (_lex_less, _packed_payload,
+                                      pack_bit_fields, unpack_bit_fields)
+
+pytestmark = pytest.mark.fast
+
+
+def _np_fields(rng, n, widths):
+    """Random uint32 columns already masked to their field widths."""
+    return [
+        np.asarray(
+            rng.integers(0, 1 << w, size=n, dtype=np.uint64) if w else
+            np.zeros(n, np.uint64), dtype=np.uint32)
+        for w in widths
+    ]
+
+
+def _tuple_sort_order(fields):
+    """Row order from lexicographically sorting the unpacked field tuples."""
+    return sorted(range(len(fields[0])),
+                  key=lambda i: tuple(int(f[i]) for f in fields))
+
+
+# layout strategies kept flat (no st.composite) so the hypothesis stub can
+# decorate these into clean skips when the extra is missing
+_WIDTHS = st.lists(st.integers(min_value=0, max_value=32), min_size=1,
+                   max_size=6)
+_N = st.integers(min_value=1, max_value=48)
+_SEED = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _fix_widths(widths):
+    return [1] if sum(widths) == 0 else widths
+
+
+@given(_WIDTHS, _N, _SEED)
+@settings(max_examples=200, deadline=None)
+def test_pack_round_trips(widths, n, seed):
+    widths = _fix_widths(widths)
+    fields = _np_fields(np.random.default_rng(seed), n, widths)
+    packed = pack_bit_fields([jnp.asarray(f) for f in fields], widths)
+    assert packed.shape == (n, -(-sum(widths) // 32))
+    assert packed.dtype == jnp.uint32
+    out = unpack_bit_fields(packed, widths)
+    for got, want in zip(out, fields):
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@given(_WIDTHS, _N, _SEED)
+@settings(max_examples=200, deadline=None)
+def test_packed_words_sort_like_field_tuples(widths, n, seed):
+    widths = _fix_widths(widths)
+    fields = _np_fields(np.random.default_rng(seed), n, widths)
+    packed = np.asarray(
+        pack_bit_fields([jnp.asarray(f) for f in fields], widths))
+    packed_order = sorted(range(n), key=lambda i: tuple(packed[i]))
+    assert [tuple(int(f[i]) for f in fields) for i in packed_order] == \
+        sorted(tuple(int(f[i]) for f in fields) for i in range(n))
+    # pairwise: the multi-word comparator agrees with the tuple comparator
+    a = [jnp.asarray(f) for f in fields]
+    b = [jnp.asarray(np.roll(f, 1)) for f in fields]
+    lt = np.asarray(_lex_less(tuple(jnp.asarray(packed[:, j]) for j in
+                                    range(packed.shape[1])),
+                              tuple(jnp.asarray(np.roll(packed[:, j], 1))
+                                    for j in range(packed.shape[1]))))
+    want = np.array([
+        tuple(int(x[i]) for x in a) < tuple(int(np.asarray(y)[i]) for y in b)
+        for i in range(n)])
+    np.testing.assert_array_equal(lt, want)
+
+
+def test_duplicate_hash_words_tiebreak_on_gid():
+    """Rows whose every hash field collides must still order by the gid
+    embedded in the final bits — the wire-format replacement for the
+    dropped standalone payload word."""
+    n, gid_bits = 7, 5
+    hash_f = jnp.full((n,), 0x2BAD, jnp.uint32)
+    tie = jnp.full((n,), 3, jnp.uint32)
+    gids = jnp.asarray([5, 2, 6, 0, 3, 1, 4], jnp.uint32)
+    widths = [32, 20, (-(32 + 20 + gid_bits)) % 32, gid_bits]
+    packed = np.asarray(pack_bit_fields(
+        [hash_f, tie, jnp.zeros((n,), jnp.uint32), gids], widths))
+    order = sorted(range(n), key=lambda i: tuple(packed[i]))
+    np.testing.assert_array_equal(np.asarray(gids)[order], np.arange(n))
+    last = jnp.asarray(packed[:, -1])
+    np.testing.assert_array_equal(
+        np.asarray(_packed_payload(last, gid_bits)), np.asarray(gids))
+
+
+def test_sentinel_sorts_after_real_keys_and_decodes_minus_one():
+    """All-ones pad rows sort strictly after every real key (real keys
+    differ from the sentinel in the gid field) and decode to payload -1."""
+    gid_bits = 4
+    widths = [32, 12, (-(32 + 12 + gid_bits)) % 32, gid_bits]
+    real = pack_bit_fields(
+        [jnp.asarray([0xFFFFFFFF, 0], jnp.uint32),
+         jnp.asarray([0xFFF, 7], jnp.uint32),
+         jnp.zeros((2,), jnp.uint32),
+         jnp.asarray([14, 3], jnp.uint32)], widths)
+    sent = jnp.full_like(real, jnp.uint32(0xFFFFFFFF))
+    lt = _lex_less(tuple(real[:, j] for j in range(real.shape[1])),
+                   tuple(sent[:, j] for j in range(sent.shape[1])))
+    assert bool(np.asarray(lt).all())
+    assert np.asarray(
+        _packed_payload(sent[:, -1], gid_bits)).tolist() == [-1, -1]
+    # a real gid of all-ones WOULD alias; gid_bits = n.bit_length() keeps
+    # every real gid < n <= 2**gid_bits - 1 so the ambiguity never occurs
+    assert int(np.asarray(
+        _packed_payload(real[:, -1], gid_bits))[0]) == 14
+
+
+def test_zero_width_fields_are_noops():
+    f = jnp.asarray([9, 1, 4], jnp.uint32)
+    packed = pack_bit_fields([jnp.zeros((3,), jnp.uint32), f, f],
+                             [0, 0, 32])
+    np.testing.assert_array_equal(np.asarray(packed)[:, 0], np.asarray(f))
+    out = unpack_bit_fields(packed, [0, 0, 32])
+    assert np.asarray(out[0]).tolist() == [0, 0, 0]
+    np.testing.assert_array_equal(np.asarray(out[2]), np.asarray(f))
+
+
+def test_field_spanning_word_boundary():
+    """A 32-bit field starting at offset 20 spans two words and must
+    round-trip and order correctly."""
+    hi = jnp.asarray([1, 1, 0], jnp.uint32)          # 20-bit field
+    lo = jnp.asarray([0x80000001, 0x80000000, 0xFFFFFFFF], jnp.uint32)
+    widths = [20, 32, (-(20 + 32)) % 32]
+    packed = np.asarray(pack_bit_fields(
+        [hi, lo, jnp.zeros((3,), jnp.uint32)], widths))
+    out = unpack_bit_fields(jnp.asarray(packed), widths)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(hi))
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(lo))
+    order = sorted(range(3), key=lambda i: tuple(packed[i]))
+    assert order == [2, 1, 0]
+
+
+def test_width_out_of_range_raises():
+    with pytest.raises(ValueError):
+        pack_bit_fields([jnp.zeros((1,), jnp.uint32)], [33])
+    with pytest.raises(ValueError):
+        unpack_bit_fields(jnp.zeros((1, 1), jnp.uint32), [64, 1])
