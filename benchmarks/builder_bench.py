@@ -391,10 +391,71 @@ def sharded_scoring(ds: str = "mnist", algo: str = "sorting_stars",
     }
 
 
+def delta_finalize(ds: str = "mnist", algo: str = "sorting_stars",
+                   r: int = 10, n_new: int = 1, reps: int = 1) -> dict:
+    """Delta finalize vs the full-image fetch after a small extend.
+
+    The graph-as-a-service claim (repro/service, the builder's versioned
+    slabs): a consumer already holding the shipped image pays O(changed
+    rows) to stay current, not O(n * k).  After an initial ``r``-rep build
+    and one shipped delta, ``n_new`` points are absorbed with ``reps``
+    extension repetitions; the row reports the ``finalize(delta=True)``
+    fetch (bytes + wall, metered under ``transfer_stats['delta_*']``)
+    against the full-image ``finalize()`` fetch on the same session.  The
+    gated column is ``delta_bytes_ratio`` (delta bytes / full-image bytes)
+    — deterministic given shapes and seed, so like the wire-width metrics
+    it gates at CHECK_MAX_BYTES_RATIO, not the wall-time ratio.  The
+    acceptance regime (ISSUE 7): an extend touching ~1% of rows must ship
+    <=5% of the full image.
+    """
+    feats, _ = dataset(ds)
+    cfg = algo_config(algo, ds, r=r)
+    n = feats.n
+    n0 = n - n_new
+    b = GraphBuilder(feats.take(np.arange(n0)), cfg).add_reps(r)
+    b.finalize(delta=True)              # baseline ship: consumer is current
+    b.extend(feats.take(np.arange(n0, n)), reps=reps)
+
+    acc_lib.reset_transfer_stats()
+    t0 = time.time()
+    d = b.finalize(delta=True)
+    t_delta = time.time() - t0
+    delta_bytes = acc_lib.transfer_stats["delta_bytes"]
+    rows_shipped = int(d.rows.shape[0])
+
+    acc_lib.reset_transfer_stats()
+    t0 = time.time()
+    b.finalize()
+    t_full = time.time() - t0
+    full_bytes = acc_lib.transfer_stats["bytes"]
+    ratio = delta_bytes / max(full_bytes, 1)
+
+    tag = f"[{ds}/{algo}/r{r}/+{n_new}pts]"
+    emit(f"delta_finalize_s{tag}", 0.0, f"{t_delta:.3f}s")
+    emit(f"full_finalize_s{tag}", 0.0, f"{t_full:.3f}s")
+    emit(f"delta_rows_shipped{tag}", 0.0, rows_shipped)
+    emit(f"delta_bytes{tag}", 0.0, delta_bytes)
+    emit(f"full_image_bytes{tag}", 0.0, full_bytes)
+    emit(f"delta_bytes_ratio{tag}", 0.0, f"{ratio:.4f}")
+    return {
+        "row": f"delta_finalize[{ds}/{algo}/r{r}/+{n_new}pts]",
+        "dataset": ds, "algo": algo, "r": r, "n_new": n_new,
+        "extend_reps": reps,
+        "delta_finalize_s": t_delta, "full_finalize_s": t_full,
+        "rows_shipped": rows_shipped, "rows_total": int(n),
+        "touched_fraction": rows_shipped / n,
+        "num_records": int(d.num_records),
+        "delta_bytes": int(delta_bytes),
+        "full_image_bytes": int(full_bytes),
+        "delta_bytes_ratio": ratio,
+    }
+
+
 def builder_table() -> None:
     rows = [incremental_vs_rebuild("mnist", "sorting_stars", r=10),
             incremental_vs_rebuild("mnist", "lsh_stars", r=10),
             extend_stream("mnist", "sorting_stars", batches=5, r=4),
+            delta_finalize("mnist", "sorting_stars", r=10, n_new=1),
             mesh_vs_single("mnist", "sorting_stars", r=6, devices=4),
             sharded_scoring("mnist", "sorting_stars", r=4, devices=4)]
     with open("BENCH_builder.json", "w") as f:

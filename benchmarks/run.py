@@ -13,7 +13,10 @@ regresses by more than ``CHECK_MAX_RATIO``x fails the run (exit 1), and
 any ``bytes_per_comparison`` field (wire all_to_all bytes per similarity
 comparison — the machine-independent comms-efficiency metric of the
 bit-packed exchange formats) that grows by more than
-``CHECK_MAX_BYTES_RATIO``x fails likewise.  Rows are matched by their
+``CHECK_MAX_BYTES_RATIO``x fails likewise, as does any ``*delta_bytes*``
+field (the delta-finalize shipping economics of the graph-as-a-service
+path — re-shipping unchanged rows would grow it without breaking any
+parity test).  Rows are matched by their
 ``row`` key; new rows and new fields pass silently (they have no baseline
 yet); other machine-independent fields (comparisons, raw bytes, counts)
 are reported but never gate — wall time and wire width are the two things
@@ -92,6 +95,12 @@ def check() -> int:
                 limit, unit = CHECK_MAX_RATIO, "s"
             elif "bytes_per_comparison" in key:
                 limit, unit = CHECK_MAX_BYTES_RATIO, "B/cmp"
+            elif "delta_bytes" in key:
+                # delta-finalize shipping economics (delta_bytes,
+                # delta_bytes_ratio): deterministic given shapes/seed, so
+                # it gates at the tight wire-width ratio — growth means
+                # the delta stream started re-shipping unchanged rows
+                limit, unit = CHECK_MAX_BYTES_RATIO, "B"
             else:
                 continue
             if key not in base:

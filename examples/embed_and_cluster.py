@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HashFamilyConfig, StarsConfig, build_graph
+from repro.core import GraphBuilder, HashFamilyConfig, StarsConfig
 from repro.graph import affinity_clustering, v_measure
 from repro.launch.serve import embed_corpus, generate
 from repro.models import ModelConfig, init_params
@@ -53,7 +53,7 @@ def main():
                         family=HashFamilyConfig("simhash", m=20),
                         measure="cosine", r=15, window=64, leaders=10,
                         degree_cap=20, seed=3)
-    g = build_graph(feats, cfg_g)
+    g = GraphBuilder(feats, cfg_g).add_reps(cfg_g.r).finalize()
     pred = affinity_clustering(g, target_clusters=6)
     v = v_measure(labels, pred)["v"]
     brute = feats.n * (feats.n - 1) // 2

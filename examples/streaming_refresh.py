@@ -14,7 +14,16 @@ staleness stays bounded at a small fraction of rebuild cost.
 This demo streams a corpus in 9 batches three ways — no refresh, automatic
 refresh, and a from-scratch rebuild at comparable total comparisons — and
 prints the per-batch refresh accounting plus the final two-hop recall of
-each.
+each.  The refreshed stream additionally SERVES its changes: after every
+batch it emits the Z-set delta (``finalize(delta=True)``, the
+graph-as-a-service path of repro/service) to a host replica, printing the
+delta-finalize accounting — rows shipped and bytes vs the full slab image
+— and verifies at the end that the replica tracked the device slabs
+edge-for-edge.  NB: with +11% batches AND refresh rounds rescoring old-old
+pairs, most rows legitimately change every batch, so the delta rides near
+the full image (its worst case — it can never exceed image + version
+vector); the small/continuous-insert regime where it ships <1% is measured
+by the ``delta_finalize`` row of benchmarks/builder_bench.py.
 
   PYTHONPATH=src python examples/streaming_refresh.py    (~2 min on CPU)
 """
@@ -24,8 +33,11 @@ import dataclasses
 import numpy as np
 
 from repro.core import GraphBuilder, HashFamilyConfig, StarsConfig
+from repro.core.spanner import Graph
 from repro.data import mnist_like_points
+from repro.graph import accumulator as acc_lib
 from repro.graph import neighbor_recall
+from repro.service import apply_delta
 
 
 def main():
@@ -37,9 +49,14 @@ def main():
                       measure="cosine", r=r, window=64, leaders=8,
                       degree_cap=30, seed=2)
 
-    def stream(c, label):
+    def stream(c, label, serve_deltas=False):
+        rep_nbr = np.full((0, 0), -1, np.int32)
+        rep_w = np.full((0, 0), -np.inf, np.float32)
         builder = GraphBuilder(feats.take(np.arange(b0)), c)
         builder.add_reps(r)
+        if serve_deltas:                 # initial ship: replica goes current
+            rep_nbr, rep_w = apply_delta(rep_nbr, rep_w,
+                                         builder.finalize(delta=True))
         for batch, start in enumerate(range(b0, n, bs), 1):
             builder.extend(feats.take(np.arange(start, start + bs)), reps=r)
             s = builder.stats
@@ -47,14 +64,34 @@ def main():
                   f"watermark={builder.refresh_watermark:>5} "
                   f"refresh_reps={s['refresh_reps']:>2} "
                   f"refresh_comparisons={s['refresh_comparisons']:>7,}")
-        return builder.finalize()
+            if serve_deltas:
+                before = acc_lib.transfer_stats["delta_bytes"]
+                d = builder.finalize(delta=True)
+                db = acc_lib.transfer_stats["delta_bytes"] - before
+                full = builder.n * builder.capacity * 8
+                rep_nbr, rep_w = apply_delta(rep_nbr, rep_w, d)
+                print(f"      delta ship: {d.rows.shape[0]:>5,} rows, "
+                      f"{d.num_records:>6,} records, {db:>9,} B "
+                      f"({db / full:.1%} of the full slab image)")
+        g = builder.finalize()
+        if serve_deltas:
+            g_rep = Graph.from_degree_slabs(builder.n, rep_nbr, rep_w)
+            same = ({(int(a), int(b), float(w))
+                     for a, b, w in zip(g.src, g.dst, g.w)}
+                    == {(int(a), int(b), float(w))
+                        for a, b, w in zip(g_rep.src, g_rep.dst, g_rep.w)})
+            print(f"  [{label}] delta-stream replica edge-for-edge equal "
+                  f"to finalize(): {same}")
+            assert same
+        return g
 
     print("streaming without refresh (the staleness regime):")
     g_stale = stream(cfg, "none")
     print("streaming with the automatic decaying rescore "
           "(refresh_rate=0.5, refresh_fraction=0.5):")
     g_fresh = stream(dataclasses.replace(cfg, refresh_rate=0.5,
-                                         refresh_fraction=0.5), "auto")
+                                         refresh_fraction=0.5), "auto",
+                     serve_deltas=True)
     g_rebuild = GraphBuilder(feats, cfg).add_reps(9).finalize()
 
     x = np.asarray(feats.dense)

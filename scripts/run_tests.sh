@@ -14,6 +14,12 @@
 #                                   #   (-m kernels; interpret-mode parity
 #                                   #   for every kernel incl. the fused
 #                                   #   window_score hot path)
+#   scripts/run_tests.sh serve      # graph-as-a-service tests only
+#                                   #   (-m serve; versioned slabs, delta
+#                                   #   finalize + delta checkpoints, the
+#                                   #   serving loop — mesh-parity cases
+#                                   #   inside it are also marked dist and
+#                                   #   run in the dist tier)
 #   scripts/run_tests.sh long       # long-session streaming tests only
 #                                   #   (-m long; the extend()/refresh
 #                                   #   staleness suite — minutes, kept
@@ -41,7 +47,11 @@ case "${1:-}" in
   dist)
     shift
     exec python -m pytest -q -m "dist and not long" tests/test_mesh_parity.py \
-      tests/test_distributed.py "$@"
+      tests/test_distributed.py tests/test_service.py "$@"
+    ;;
+  serve)
+    shift
+    exec python -m pytest -q -m serve "$@"
     ;;
   long)
     shift

@@ -355,8 +355,10 @@ class _MeshBackend:
 
     @property
     def _slab_sharding(self):
-        return acc_lib.EdgeAccumulator(nbr=self._feature_sharding,
-                                       w=self._feature_sharding)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return acc_lib.EdgeAccumulator(
+            nbr=self._feature_sharding, w=self._feature_sharding,
+            ver=NamedSharding(self.mesh, P(self.axis)))
 
     def _place_features(self, dense: jax.Array) -> None:
         pad = self._pad_rows(self._n) - self._n
@@ -388,7 +390,8 @@ class _MeshBackend:
         if state.n == self._n:
             return state
         return acc_lib.EdgeAccumulator(nbr=state.nbr[:self._n],
-                                       w=state.w[:self._n])
+                                       w=state.w[:self._n],
+                                       ver=state.ver[:self._n])
 
     # -- the per-repetition programs ------------------------------------ #
     def _bind(self, new_from: int, refresh_below: int = 0,
@@ -726,13 +729,27 @@ class BuilderCheckpoint:
     which is why ``cfg`` rides along: restore() refuses a mismatched config
     rather than silently continuing with different hash draws or slab
     sizing.
+
+    Two flavours share this class:
+
+      * **full** (``GraphBuilder.checkpoint()``): ``nbr``/``w`` hold the
+        unpadded (n, k) slab image, ``ver`` the per-row logical versions,
+        ``base_seq`` its position in the session's delta stream;
+        ``delta_chain`` is None.
+      * **delta** (``GraphBuilder.checkpoint(delta=True)``): ``nbr``/``w``
+        are None — the payload is ``delta_chain``, the tuple of
+        :class:`repro.service.delta.SlabDelta` records emitted since the
+        full checkpoint whose stream position is ``base_seq``.
+        ``restore(..., base=full_ckpt)`` replays the chain onto the full
+        image bit-exactly, on any mesh size — a compressed checkpoint
+        whose size is O(changed rows), not O(n * k).
     """
 
     n: int
     capacity: int
     reps_done: int
-    nbr: np.ndarray
-    w: np.ndarray
+    nbr: Optional[np.ndarray]
+    w: Optional[np.ndarray]
     stats: Dict[str, int]
     cfg: StarsConfig
     # staleness-repair state (GraphBuilder.refresh_reps): the old-old
@@ -746,6 +763,18 @@ class BuilderCheckpoint:
     # per-global-window-row refresh ages (rounds since last sampled) — the
     # age-weighted refresh bias's memory; None until a refresh round runs
     refresh_age: Optional[np.ndarray] = None
+    # versioned-slab state (delta serving / delta checkpoints): the (n,)
+    # int64 LOGICAL row versions (host base + device offset, see
+    # accumulator.EdgeAccumulator.ver) — None only for pre-versioning
+    # snapshots, which restore with all-zero versions.
+    ver: Optional[np.ndarray] = None
+    # how many deltas the session's delta stream had emitted when this
+    # snapshot was cut (full checkpoints sync the ship shadow to their own
+    # image, so a delta chain starting at base_seq composes from it)
+    base_seq: int = 0
+    # delta checkpoints only: the SlabDelta chain since the base_seq full
+    # checkpoint, consecutive seqs (base_seq+1, ..., base_seq+len(chain))
+    delta_chain: Optional[tuple] = None
 
 
 class GraphBuilder:
@@ -795,6 +824,20 @@ class GraphBuilder:
         self._refresh_reps = 0
         self._refresh_credit = 0.0
         self._refresh_age: Optional[np.ndarray] = None
+        # versioned-slab serving state.  Logical row version i is
+        # ``_ver_base + state.ver[i]`` (host int64 base + device int32
+        # offset, the per-chunk-int32/host-int64 counter policy); the ship
+        # shadow is the host image of the rows the delta stream has shipped
+        # so far, against which finalize(delta=True) diffs.  ``_delta_log``
+        # accumulates every emitted SlabDelta since the last FULL
+        # checkpoint — the chain a checkpoint(delta=True) packages.
+        self._ver_base = 0
+        self._shadow_nbr: Optional[np.ndarray] = None
+        self._shadow_w: Optional[np.ndarray] = None
+        self._shipped_ver: Optional[np.ndarray] = None
+        self._delta_seq = 0
+        self._delta_log: List = []
+        self._last_full_seq: Optional[int] = None
         self._capacity = cfg.slab_capacity(self.n, reps=max(cfg.r, 1))
         # Slabs are allocated lazily (first round / checkpoint / finalize):
         # restore() injects the checkpoint state instead, so resuming never
@@ -1080,14 +1123,151 @@ class GraphBuilder:
         self._stats_base = dict(stats)
         return stats
 
-    def checkpoint(self) -> BuilderCheckpoint:
-        """Snapshot slabs + counters to host arrays (resumable builds).
+    # -- versioned slabs / delta serving -------------------------------- #
+    def slab_state(self) -> acc_lib.EdgeAccumulator:
+        """The live device-resident (n, k) slab view (mesh padding trimmed).
 
-        The payload is always the UNPADDED (n, k) slab image (mesh backends
-        trim their row padding first), so a checkpoint taken on one mesh
-        restores bit-exactly onto any other mesh size — or a single device.
+        No host transfer happens here — this is the view the serving loop's
+        two-hop query program reads directly on device
+        (repro.service.session), and what delta fetches gather changed rows
+        from.
         """
-        nbr, w = acc_lib.to_host(self._backend.trim(self._ensure_state()))
+        return self._backend.trim(self._ensure_state())
+
+    def row_versions(self) -> np.ndarray:
+        """Current (n,) int64 LOGICAL row versions (``_ver_base`` + device
+        offsets).  Fetches only the int32 version vector — a diagnostic /
+        testing aid, deliberately not metered as a delta fetch."""
+        state = self._backend.trim(self._ensure_state())
+        return self._ver_base + np.asarray(jax.device_get(state.ver),
+                                           np.int64)
+
+    @property
+    def delta_seq(self) -> int:
+        """How many deltas this session's delta stream has emitted."""
+        return self._delta_seq
+
+    def _ensure_shadow(self, n: int, k: int) -> None:
+        """Create or grow the host-side ship shadow to (n, k).
+
+        The shadow starts EMPTY with shipped version 0: logical version 0
+        means empty-since-creation (every fold bumps), so an all-zero
+        baseline is exactly "nothing shipped yet" — the first delta ships
+        every row that ever changed, later ones only what changed since.
+        Rows added later start at shipped version ``_ver_base`` (their
+        untouched logical version), so an untouched insert ships nothing.
+        """
+        if self._shadow_nbr is None:
+            self._shadow_nbr = np.full((n, k), -1, np.int32)
+            self._shadow_w = np.full((n, k), -np.inf, np.float32)
+            self._shipped_ver = np.zeros((n,), np.int64)
+            return
+        n0, k0 = self._shadow_nbr.shape
+        if n > n0 or k > k0:
+            nbr = np.full((n, k), -1, np.int32)
+            w = np.full((n, k), -np.inf, np.float32)
+            nbr[:n0, :k0] = self._shadow_nbr
+            w[:n0, :k0] = self._shadow_w
+            sv = np.full((n,), self._ver_base, np.int64)
+            sv[:n0] = self._shipped_ver
+            self._shadow_nbr, self._shadow_w, self._shipped_ver = nbr, w, sv
+
+    def _emit_delta(self):
+        """Advance the delta stream one step: fetch changed rows, diff.
+
+        THE delta device->host transfer: ships the (n,) int32 version
+        vector plus only the slab rows whose logical version advanced past
+        the ship shadow — O(changed rows), metered under
+        ``transfer_stats['delta_*']``.  The Z-set diff against the shadow
+        (repro.service.delta.diff_rows) turns the row images into
+        (node, nbr, w, ±1) records; the shadow then advances past them.
+        """
+        from repro.service.delta import SlabDelta, diff_rows
+        state = self.slab_state()
+        n, k = int(state.n), int(state.capacity)
+        ver_dev = np.asarray(jax.device_get(state.ver), np.int64)
+        logical = self._ver_base + ver_dev
+        acc_lib.transfer_stats["delta_fetches"] += 1
+        acc_lib.transfer_stats["delta_bytes"] += n * 4   # the version vector
+        n_old = 0 if self._shadow_nbr is None else self._shadow_nbr.shape[0]
+        k_old = 0 if self._shadow_nbr is None else self._shadow_nbr.shape[1]
+        self._ensure_shadow(n, k)
+        changed = np.flatnonzero(logical > self._shipped_ver[:n])
+        if changed.size:
+            idx = jnp.asarray(changed.astype(np.int32))
+            new_nbr, new_w = map(np.asarray, jax.device_get(
+                (state.nbr[idx], state.w[idx])))
+            acc_lib.transfer_stats["delta_bytes"] += (int(new_nbr.nbytes)
+                                                      + int(new_w.nbytes))
+        else:
+            new_nbr = np.zeros((0, k), np.int32)
+            new_w = np.zeros((0, k), np.float32)
+        acc_lib.transfer_stats["delta_rows"] += int(changed.size)
+        node, nbr_r, w_r, sign = diff_rows(
+            changed.astype(np.int32),
+            self._shadow_nbr[changed], self._shadow_w[changed],
+            new_nbr, new_w)
+        self._delta_seq += 1
+        delta = SlabDelta(
+            seq=self._delta_seq, n_old=n_old, n_new=n, k_old=k_old, k_new=k,
+            rows=changed.astype(np.int32), row_ver=logical[changed].copy(),
+            node=node, nbr=nbr_r, w=w_r, sign=sign)
+        self._shadow_nbr[changed] = new_nbr
+        self._shadow_w[changed] = new_w
+        self._shipped_ver[changed] = logical[changed]
+        self._delta_log.append(delta)
+        return delta
+
+    # ------------------------------------------------------------------ #
+    def checkpoint(self, delta: bool = False) -> BuilderCheckpoint:
+        """Snapshot the session to host arrays (resumable builds).
+
+        **Full** (default): the UNPADDED (n, k) slab image plus per-row
+        versions (mesh backends trim their row padding first), so a
+        checkpoint taken on one mesh restores bit-exactly onto any other
+        mesh size — or a single device.  A full checkpoint also SYNCS the
+        delta-stream ship shadow to its own image (reusing the
+        already-fetched arrays, no extra transfer): external delta
+        consumers re-baseline from the checkpoint image, and delta
+        checkpoints chain from it.
+
+        **Delta** (``delta=True``): no slab image — the payload is the
+        chain of SlabDelta records emitted since the last full checkpoint
+        (including one cut right now for any unshipped changes), O(changed
+        rows) instead of O(n * k).  Requires a prior full ``checkpoint()``
+        this session; ``restore(..., base=that_full_checkpoint)`` replays
+        the chain bit-exactly.
+        """
+        if delta:
+            if self._last_full_seq is None:
+                raise ValueError(
+                    "checkpoint(delta=True) needs a prior full "
+                    "checkpoint() in this session to chain from")
+            self._emit_delta()          # capture unshipped changes
+            # after an emit, shipped versions == logical versions exactly
+            return BuilderCheckpoint(
+                n=self.n, capacity=self._capacity,
+                reps_done=self._reps_done,
+                nbr=None, w=None, stats=self._roll_up_counters(),
+                cfg=self.cfg,
+                refresh_watermark=self._refresh_below,
+                refresh_reps=self._refresh_reps,
+                refresh_credit=self._refresh_credit,
+                refresh_age=(None if self._refresh_age is None
+                             else self._refresh_age.copy()),
+                ver=self._shipped_ver[:self.n].copy(),
+                base_seq=self._last_full_seq,
+                delta_chain=tuple(self._delta_log))
+        nbr, w, ver_dev = acc_lib.to_host(
+            self._backend.trim(self._ensure_state()))
+        logical = self._ver_base + np.asarray(ver_dev, np.int64)
+        k = nbr.shape[1]
+        self._ensure_shadow(self.n, k)
+        self._shadow_nbr[:self.n, :k] = nbr
+        self._shadow_w[:self.n, :k] = w
+        self._shipped_ver[:self.n] = logical
+        self._delta_log = []
+        self._last_full_seq = self._delta_seq
         return BuilderCheckpoint(
             n=self.n, capacity=self._capacity, reps_done=self._reps_done,
             nbr=nbr, w=w, stats=self._roll_up_counters(), cfg=self.cfg,
@@ -1095,25 +1275,71 @@ class GraphBuilder:
             refresh_reps=self._refresh_reps,
             refresh_credit=self._refresh_credit,
             refresh_age=(None if self._refresh_age is None
-                         else self._refresh_age.copy()))
+                         else self._refresh_age.copy()),
+            ver=logical, base_seq=self._delta_seq)
 
     @classmethod
     def restore(cls, features: FeaturesLike, cfg: StarsConfig,
-                ckpt: BuilderCheckpoint, *, mesh=None,
+                ckpt: BuilderCheckpoint, *, base: Optional[
+                    BuilderCheckpoint] = None, mesh=None,
                 learned_apply: Optional[Callable] = None) -> "GraphBuilder":
-        """Resume a session from a checkpoint (same features + config)."""
+        """Resume a session from a checkpoint (same features + config).
+
+        A DELTA checkpoint (``ckpt.delta_chain`` set) additionally needs
+        ``base=`` — the full checkpoint it chains from — and restores by
+        replaying the chain onto the base image
+        (repro.service.delta.replay_chain), bit-exactly and onto any mesh
+        size.  The restored session's delta stream is re-anchored at the
+        restored image (ship shadow = image): a consumer holding the same
+        checkpoint(s) keeps receiving exact increments.  Delta
+        *checkpoints* need a fresh full ``checkpoint()`` first, though —
+        the restored session has no full snapshot of its own to chain
+        from.
+        """
         if cfg != ckpt.cfg:
             raise ValueError(
                 "checkpoint was built under a different StarsConfig — "
                 "resuming would mix hash draws / slab sizing silently: "
                 f"{ckpt.cfg} vs {cfg}")
+        if ckpt.delta_chain is not None:
+            if base is None:
+                raise ValueError(
+                    "delta checkpoint: pass base=<the full checkpoint its "
+                    "chain starts from> (base_seq "
+                    f"{ckpt.base_seq})")
+            if base.delta_chain is not None or base.nbr is None:
+                raise ValueError("base= must be a FULL checkpoint")
+            if base.cfg != cfg:
+                raise ValueError("base checkpoint has a different "
+                                 "StarsConfig")
+            if base.base_seq != ckpt.base_seq:
+                raise ValueError(
+                    f"delta chain starts at stream seq {ckpt.base_seq}, "
+                    f"but base checkpoint was cut at seq {base.base_seq}")
+            from repro.service.delta import replay_chain
+            nbr, w = replay_chain(base.nbr, base.w, ckpt.delta_chain)
+            ver = ckpt.ver
+        else:
+            nbr, w, ver = ckpt.nbr, ckpt.w, ckpt.ver
         builder = cls(features, cfg, mesh=mesh, learned_apply=learned_apply)
         if builder.n != ckpt.n:
             raise ValueError(f"checkpoint holds {ckpt.n} points, features "
                              f"have {builder.n}")
+        if ver is None:                 # pre-versioning snapshot
+            ver = np.zeros((ckpt.n,), np.int64)
+        ver = np.asarray(ver, np.int64)
+        # int64 logical -> host base + device int32 offset (exact rebase)
+        vbase = int(ver.min()) if ckpt.n else 0
+        builder._ver_base = vbase
         builder._capacity = ckpt.capacity
         builder._state = builder._backend.place_state(
-            acc_lib.from_host(ckpt.nbr, ckpt.w))
+            acc_lib.from_host(nbr, w, (ver - vbase).astype(np.int32)))
+        # re-anchor the delta stream at the restored image (copies: the
+        # shadow mutates in place as deltas ship; ckpt arrays must not)
+        builder._shadow_nbr = np.array(nbr, np.int32)
+        builder._shadow_w = np.array(w, np.float32)
+        builder._shipped_ver = ver.copy()
+        builder._delta_seq = ckpt.base_seq + len(ckpt.delta_chain or ())
         builder._reps_done = ckpt.reps_done
         builder._stats_base = dict(ckpt.stats)
         builder._refresh_below = ckpt.refresh_watermark
@@ -1123,11 +1349,25 @@ class GraphBuilder:
                                 else np.asarray(ckpt.refresh_age, np.int64))
         return builder
 
-    def finalize(self) -> Graph:
-        """Fetch the slabs (THE device->host edge transfer) -> Graph.
+    def finalize(self, *, delta: bool = False):
+        """Fetch edges off device: the whole graph, or only what changed.
 
-        The session stays usable: more rounds can follow, and a later
+        Default: the slabs cross device->host ONCE
+        (``accumulator.to_graph``) and compact into a :class:`Graph`.  The
+        session stays usable: more rounds can follow, and a later
         ``finalize()`` counts as its own single fetch.
+
+        ``delta=True``: instead of the O(n * k) full image, fetch only the
+        rows whose version advanced since the last ship and return a
+        :class:`repro.service.delta.SlabDelta` — the Z-set change stream
+        (additions + retractions vs the previously-shipped image) that a
+        consumer applies to its replica (``apply_delta``) to track the
+        device slabs row-exactly.  Metered under
+        ``transfer_stats['delta_*']``; the first delta of a session ships
+        every row that ever changed (the consumer starts from nothing),
+        later ones only the increment.
         """
+        if delta:
+            return self._emit_delta()
         return acc_lib.to_graph(self._backend.trim(self._ensure_state()),
                                 stats=self._roll_up_counters())

@@ -92,10 +92,10 @@ def _emit_widths(n_pad: int, p: int, exact_weights: bool):
             32 if exact_weights else 16)
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1),
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2),
                    static_argnames=("mesh", "axis", "capacity_factor",
                                     "exact_weights"))
-def _emit_exchange(slab_nbr, slab_w, *streams,
+def _emit_exchange(slab_nbr, slab_w, slab_ver, *streams,
                    mesh, axis: str, capacity_factor: float,
                    exact_weights: bool):
     """shard_map body wrapper: bucket-by-owner -> one all_to_all -> fold.
@@ -115,7 +115,7 @@ def _emit_exchange(slab_nbr, slab_w, *streams,
     nwords = -(-sum(widths) // 32)
     ns = len(streams) // 4
 
-    def emit_shard(nbr_l, w_l, *stream_l):
+    def emit_shard(nbr_l, w_l, ver_l, *stream_l):
         src_l = jnp.concatenate([stream_l[4 * i] for i in range(ns)])
         dst_l = jnp.concatenate([stream_l[4 * i + 1] for i in range(ns)])
         w_c = jnp.concatenate([stream_l[4 * i + 2] for i in range(ns)])
@@ -173,16 +173,16 @@ def _emit_exchange(slab_nbr, slab_w, *streams,
         ok_r = node_r < rows
 
         state = acc_lib._fold_triples(
-            acc_lib.EdgeAccumulator(nbr=nbr_l, w=w_l),
+            acc_lib.EdgeAccumulator(nbr=nbr_l, w=w_l, ver=ver_l),
             node_r, nbr_r, w_r, ok_r)
-        return state.nbr, state.w, dropped
+        return state.nbr, state.w, state.ver, dropped
 
     return shard_map(
         emit_shard, mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None))
+        in_specs=(P(axis, None), P(axis, None), P(axis))
         + tuple(P(axis) for _ in streams),
-        out_specs=(P(axis, None), P(axis, None), P(axis)),
-    )(slab_nbr, slab_w, *streams)
+        out_specs=(P(axis, None), P(axis, None), P(axis), P(axis)),
+    )(slab_nbr, slab_w, slab_ver, *streams)
 
 
 @functools.partial(jax.jit,
@@ -380,11 +380,11 @@ def accumulate_all_to_all(state: acc_lib.EdgeAccumulator,
     # cross the interconnect (all_to_all_bytes is cross-shard-only)
     acc_lib.record_all_to_all(
         p * (p - 1) * _emit_capacity(m2, p, capacity_factor) * nwords * 4)
-    nbr, ww, dropped = _emit_exchange(
-        state.nbr, state.w, *streams,
+    nbr, ww, ver, dropped = _emit_exchange(
+        state.nbr, state.w, state.ver, *streams,
         mesh=mesh, axis=axis, capacity_factor=capacity_factor,
         exact_weights=exact_weights)
-    return acc_lib.EdgeAccumulator(nbr=nbr, w=ww), dropped
+    return acc_lib.EdgeAccumulator(nbr=nbr, w=ww, ver=ver), dropped
 
 
 def build_graph_distributed(dense: jax.Array, cfg: StarsConfig,

@@ -65,11 +65,21 @@ _BIG = jnp.int32(2**31 - 1)
 # actually crosses the interconnect, so shrinking the wire format shrinks
 # the stat at identical logical traffic (benchmarks/roofline.py divides
 # it by ``comparisons`` for the bytes-per-comparison roofline rows).
+# ``delta_*`` meters the incremental serving path (GraphBuilder
+# ``finalize(delta=True)`` / repro.service): a delta fetch ships the (n,)
+# int32 per-row version vector plus ONLY the slab rows whose version
+# advanced past the last ship — O(changed rows), not the O(n * k) full
+# image a plain finalize pays.  ``delta_rows`` counts the rows shipped, so
+# bytes-per-changed-row is derivable; the full-vs-delta economics are the
+# ``delta_finalize`` row of benchmarks/builder_bench.py.
 transfer_stats: Dict[str, int] = {"edge_fetches": 0, "bytes": 0,
                                   "checkpoint_fetches": 0,
                                   "checkpoint_bytes": 0,
                                   "all_to_all_calls": 0,
-                                  "all_to_all_bytes": 0}
+                                  "all_to_all_bytes": 0,
+                                  "delta_fetches": 0,
+                                  "delta_bytes": 0,
+                                  "delta_rows": 0}
 
 
 def reset_transfer_stats() -> None:
@@ -93,10 +103,27 @@ class EdgeAccumulator:
     Attributes:
       nbr: (n, k) int32 neighbour ids, sorted by weight desc; -1 = empty.
       w:   (n, k) float32 edge weights; -inf on empty slots.
+      ver: (n,) int32 per-row monotonic version.  Every fold that CHANGES a
+        row (any nbr/w entry differs after the merge) bumps that row's
+        version by one; folds that leave a row bit-identical do not.  This
+        is the generalized staleness watermark the delta-serving path reads:
+        a row needs re-shipping iff its version advanced past the consumer's
+        last fetch (GraphBuilder ``finalize(delta=True)``; Z-set semantics
+        in repro/service).  Versions are device-side int32 *offsets*; the
+        session rolls them up into host int64 logical versions
+        (``GraphBuilder._ver_base`` + checkpoint ``ver`` field) per the
+        per-chunk-int32 / host-int64 counter policy, and they shard
+        row-wise exactly like the slabs on a mesh.  Absolute values are
+        fold-granularity dependent — the mesh emit coalesces repetition
+        pairs into one fold, bumping a twice-changed row once where the
+        single-device path bumps twice — so only "advanced since X"
+        comparisons are meaningful; the CHANGED-ROW SET of any round
+        sequence is backend-identical (tests/test_service.py).
     """
 
     nbr: jax.Array
     w: jax.Array
+    ver: jax.Array
 
     @property
     def n(self) -> int:
@@ -110,7 +137,8 @@ class EdgeAccumulator:
     def create(n: int, capacity: int) -> "EdgeAccumulator":
         return EdgeAccumulator(
             nbr=jnp.full((n, capacity), -1, jnp.int32),
-            w=jnp.full((n, capacity), -jnp.inf, jnp.float32))
+            w=jnp.full((n, capacity), -jnp.inf, jnp.float32),
+            ver=jnp.zeros((n,), jnp.int32))
 
 
 def grow(state: EdgeAccumulator, n: int,
@@ -133,26 +161,35 @@ def grow(state: EdgeAccumulator, n: int,
     pad = ((0, n - n0), (0, capacity - cap0))
     return EdgeAccumulator(
         nbr=jnp.pad(state.nbr, pad, constant_values=-1),
-        w=jnp.pad(state.w, pad, constant_values=-jnp.inf))
+        w=jnp.pad(state.w, pad, constant_values=-jnp.inf),
+        ver=jnp.pad(state.ver, (0, n - n0)))   # new rows start at version 0
 
 
 def to_host(state: EdgeAccumulator):
-    """Snapshot the slabs to host numpy arrays (checkpointing).
+    """Snapshot the slabs (+ row versions) to host numpy arrays.
 
     Tracked under ``transfer_stats['checkpoint_*']`` — NOT as a build edge
     fetch, so the one-fetch-per-finalize invariant stays checkable.
     """
     import numpy as np
-    nbr, w = jax.device_get((state.nbr, state.w))
+    nbr, w, ver = jax.device_get((state.nbr, state.w, state.ver))
     transfer_stats["checkpoint_fetches"] += 1
-    transfer_stats["checkpoint_bytes"] += int(nbr.nbytes) + int(w.nbytes)
-    return np.asarray(nbr), np.asarray(w)
+    transfer_stats["checkpoint_bytes"] += (int(nbr.nbytes) + int(w.nbytes)
+                                           + int(ver.nbytes))
+    return np.asarray(nbr), np.asarray(w), np.asarray(ver)
 
 
-def from_host(nbr, w) -> EdgeAccumulator:
-    """Rebuild device-resident slabs from a host snapshot (restore)."""
-    return EdgeAccumulator(nbr=jnp.asarray(nbr, jnp.int32),
-                           w=jnp.asarray(w, jnp.float32))
+def from_host(nbr, w, ver=None) -> EdgeAccumulator:
+    """Rebuild device-resident slabs from a host snapshot (restore).
+
+    ``ver`` defaults to all-zero row versions (pre-versioning snapshots,
+    and callers that only care about the edge payload).
+    """
+    nbr = jnp.asarray(nbr, jnp.int32)
+    return EdgeAccumulator(
+        nbr=nbr, w=jnp.asarray(w, jnp.float32),
+        ver=(jnp.zeros((nbr.shape[0],), jnp.int32) if ver is None
+             else jnp.asarray(ver, jnp.int32)))
 
 
 def capacity_for(degree_cap: Optional[int], n: int, *,
@@ -205,6 +242,15 @@ def _fold_triples(state: EdgeAccumulator, node: jax.Array, nbr: jax.Array,
     shard-row coordinates — per-node results depend only on the per-row
     candidate multiset, which is what makes the sharded build edge-for-edge
     equal to the single-device one.
+
+    Rows whose post-merge slab content differs from the pre-merge content
+    get their ``ver`` bumped by one (an (n, k) equality reduce against the
+    donated input — exact change detection, so a candidate that is already
+    present or loses to the incumbent top-k does NOT dirty the row for the
+    delta-serving path).  Because the bump rides inside the same jit
+    program as the fold, versions stay consistent under donation and under
+    the mesh's sharded per-shard folds (each shard bumps only its own row
+    block, exactly like the slab data itself).
     """
     n, cap = state.nbr.shape
     node = node.astype(jnp.int32)
@@ -277,7 +323,11 @@ def _fold_triples(state: EdgeAccumulator, node: jax.Array, nbr: jax.Array,
     new_nbr, new_w = kernel_ops.topk_merge(state.nbr, state.w, inc_nbr, inc_w,
                                            sorted_inputs=True,
                                            inc_presorted=presorted)
-    return EdgeAccumulator(nbr=new_nbr, w=new_w)
+    # exact per-row change detection (empty slots compare equal: -1 == -1,
+    # and -inf == -inf is True in IEEE) -> bump changed rows' versions
+    changed = jnp.any((new_nbr != state.nbr) | (new_w != state.w), axis=1)
+    return EdgeAccumulator(nbr=new_nbr, w=new_w,
+                           ver=state.ver + changed.astype(jnp.int32))
 
 
 def to_graph(state: EdgeAccumulator, *,

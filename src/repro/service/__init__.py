@@ -1,0 +1,62 @@
+"""Graph-as-a-service: versioned slabs, Z-set deltas, an always-on loop.
+
+The builder (repro.core.builder) grows a device-resident graph; this
+package SERVES it — the deployment story of a long-lived tera-scale graph
+absorbing a stream of inserts while answering neighbourhood queries, never
+re-shipping state it already shipped.
+
+**The per-row version contract** (graph/accumulator.py).  Every slab row
+carries a monotonic version: a fold that CHANGES the row — any (nbr, w)
+entry differs after the top-k merge — bumps it by one; a fold whose
+candidates all lose to (or already sit in) the incumbent top-k does not.
+Versions are device-side int32 *offsets* over a host int64 base
+(``GraphBuilder._ver_base``), the repo's per-chunk-int32 / host-int64
+counter policy; the logical version ``base + offset`` is what checkpoints
+store and what rebasing on restore preserves exactly.  On a mesh the
+version vector shards row-wise exactly like the slabs — each shard bumps
+only the rows its emit exchange routed candidates to, so versions are
+identical to the single-device build's (the same edge-for-edge parity
+argument, applied to the change bits).
+
+**What "shipped" means.**  The session keeps a host-side ship shadow: the
+image of every row as the delta stream last delivered it, plus the logical
+version it was delivered at.  ``finalize(delta=True)`` fetches the (n,)
+version vector, selects rows whose version advanced past the shadow —
+under mesh sharding this is a property of LOGICAL rows, independent of
+which shard holds them or how the mesh was resized since — gathers only
+those rows off device (``transfer_stats['delta_*']`` meters it), and
+diffs them against the shadow.  A full ``checkpoint()`` re-anchors the
+shadow at its own image, which is what lets delta *checkpoints* chain
+from it.
+
+**Z-set delta semantics** (delta.py, after the DBSP / incremental-view-
+maintenance framing).  The edge table is treated as a Z-set: a delta is a
+multiset of ``(node, nbr, w, sign)`` records with sign +1 (entry appeared
+in ``node``'s row) or -1 (entry left it); a weight change is a retraction
+plus an addition, and consecutive deltas compose by concatenation with
+±1 cancellation on identical (node, nbr, w-bits) keys.  Consumers fold
+deltas into a replica with :func:`~repro.service.delta.apply_delta`
+(bit-exact modulo equal-weight ties, which are measure-zero for
+real-valued similarities); the same records serialize as the compressed
+delta checkpoint that ``GraphBuilder.restore(..., base=...)`` replays
+onto any mesh size.  One mechanism, three consumers: serving replicas,
+delta checkpoints, downstream incremental view maintenance.
+
+**The serving loop** (session.py).  ``ServeSession`` drains a bounded
+request queue: consecutive inserts coalesce into one ``extend()`` absorb
+round, two-hop neighbour queries are answered between rounds straight
+from the device slabs (forward row read + reverse scan + neighbour-row
+gather — zero global edge fetches, asserted via ``transfer_stats``), and
+rejections, queue depth high-water mark, delta bytes and queries served
+are metered per session.
+"""
+
+from repro.service.delta import (SlabDelta, apply_delta, diff_rows,
+                                 replay_chain)
+from repro.service.session import (ServeConfig, ServeSession, Ticket,
+                                   two_hop_neighbors)
+
+__all__ = [
+    "SlabDelta", "apply_delta", "diff_rows", "replay_chain",
+    "ServeConfig", "ServeSession", "Ticket", "two_hop_neighbors",
+]

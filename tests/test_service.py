@@ -1,0 +1,438 @@
+"""Graph-as-a-service suite (repro/service + the versioned-slab builder).
+
+The new_subsystem acceptance surface:
+  * per-row slab versions advance exactly with row content: a row whose
+    version did not move between two checkpoints is bit-identical,
+  * ``finalize(delta=True)`` after an extend() touching <=1% of rows ships
+    <=5% of the full-image bytes, and a host replica folding the delta
+    stream (service.delta.apply_delta) tracks the device slabs bit-exactly
+    — edge-for-edge equal to a full ``finalize()``,
+  * delta CHECKPOINTS chain from a full checkpoint and
+    ``restore(..., base=...)`` replays them bit-exactly — including across
+    mesh sizes (full checkpoint cut on a p=4 mesh, chain replayed into a
+    single-device session),
+  * the serving loop coalesces queued inserts into batched absorb rounds,
+    answers two-hop neighbour queries set-for-set equal to
+    ``Graph.from_degree_slabs(...).two_hop_sets`` while performing ZERO
+    global edge fetches (transfer_stats asserted), applies backpressure at
+    the bounded queue, and meters everything per session.
+
+Mesh tests spawn subprocesses with forced host device counts (the
+tests/test_mesh_parity.py pattern) and are additionally marked ``dist``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import GraphBuilder, HashFamilyConfig, StarsConfig
+from repro.core.spanner import Graph
+from repro.data import mnist_like_points
+from repro.graph import accumulator as acc_lib
+from repro.service import (ServeConfig, ServeSession, SlabDelta, apply_delta,
+                           diff_rows, replay_chain)
+from repro.testing import run_forced_devices as _run_sub
+
+pytestmark = pytest.mark.serve
+
+
+def _cfg(**kw):
+    base = dict(mode="sorting", scoring="stars",
+                family=HashFamilyConfig("simhash", m=16), measure="cosine",
+                r=6, window=32, leaders=8, degree_cap=20, seed=3)
+    base.update(kw)
+    return StarsConfig(**base)
+
+
+def _edges(g):
+    return {(int(s), int(d)): float(w)
+            for s, d, w in zip(g.src, g.dst, g.w)}
+
+
+def _empty(n=0, k=0):
+    return (np.full((n, k), -1, np.int32), np.full((n, k), -np.inf,
+                                                   np.float32))
+
+
+# --------------------------------------------------------------------------- #
+# Z-set delta mechanics (pure host, no builder)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.fast
+def test_diff_rows_zset_records():
+    """Hand-built diff: unchanged entries cancel, a weight change is a
+    retraction + an addition, records arrive grouped by node with
+    retractions first and additions in weight-descending slot order."""
+    old_nbr = np.array([[5, 7, -1]], np.int32)
+    old_w = np.array([[0.9, 0.5, -np.inf]], np.float32)
+    new_nbr = np.array([[5, 8, 7]], np.int32)
+    new_w = np.array([[0.9, 0.7, 0.4]], np.float32)
+    node, nbr, w, sign = diff_rows(np.array([3], np.int32),
+                                   old_nbr, old_w, new_nbr, new_w)
+    # 5@0.9 cancels; 7 changes weight (retract 0.5, add 0.4); 8@0.7 adds
+    assert node.tolist() == [3, 3, 3]
+    assert sign.tolist() == [-1, 1, 1]          # retraction first
+    assert nbr.tolist() == [7, 8, 7]            # additions weight-desc
+    np.testing.assert_allclose(w, [0.5, 0.7, 0.4])
+
+
+@pytest.mark.fast
+def test_apply_delta_roundtrip_random_rows():
+    """diff_rows -> apply_delta is the identity on random slab images
+    (distinct weights), including rows that empty out or fill up."""
+    rng = np.random.RandomState(7)
+    n, k = 40, 6
+    def image():
+        nbr, w = _empty(n, k)
+        for i in range(n):
+            deg = rng.randint(0, k + 1)
+            ids = rng.choice(200, size=deg, replace=False)
+            ws = np.sort(rng.rand(deg).astype(np.float32))[::-1]
+            nbr[i, :deg], w[i, :deg] = ids, ws
+        return nbr, w
+    old_nbr, old_w = image()
+    new_nbr, new_w = image()
+    rows = np.arange(n, dtype=np.int32)
+    node, nbr, w, sign = diff_rows(rows, old_nbr, old_w, new_nbr, new_w)
+    delta = SlabDelta(seq=1, n_old=n, n_new=n, k_old=k, k_new=k, rows=rows,
+                      row_ver=np.ones(n, np.int64), node=node, nbr=nbr, w=w,
+                      sign=sign)
+    got_nbr, got_w = apply_delta(old_nbr, old_w, delta)
+    np.testing.assert_array_equal(got_nbr, new_nbr)
+    np.testing.assert_array_equal(got_w, new_w)
+
+
+@pytest.mark.fast
+def test_apply_delta_rejects_wrong_prestate_and_chain_gaps():
+    nbr = np.array([[5, -1]], np.int32)
+    w = np.array([[0.5, -np.inf]], np.float32)
+    bad = SlabDelta(seq=1, n_old=1, n_new=1, k_old=2, k_new=2,
+                    rows=np.array([0], np.int32),
+                    row_ver=np.array([1], np.int64),
+                    node=np.array([0], np.int32),
+                    nbr=np.array([9], np.int32),          # not held
+                    w=np.array([0.3], np.float32),
+                    sign=np.array([-1], np.int8))
+    with pytest.raises(ValueError, match="does not hold"):
+        apply_delta(nbr, w, bad)
+    empty_records = dict(node=np.zeros(0, np.int32), nbr=np.zeros(0, np.int32),
+                         w=np.zeros(0, np.float32), sign=np.zeros(0, np.int8),
+                         rows=np.zeros(0, np.int32),
+                         row_ver=np.zeros(0, np.int64))
+    d1 = SlabDelta(seq=1, n_old=1, n_new=1, k_old=2, k_new=2, **empty_records)
+    d3 = SlabDelta(seq=3, n_old=1, n_new=1, k_old=2, k_new=2, **empty_records)
+    with pytest.raises(ValueError, match="chain gap"):
+        replay_chain(nbr, w, [d1, d3])
+
+
+# --------------------------------------------------------------------------- #
+# Versioned slabs + delta finalize (single device)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.fast
+def test_row_versions_track_content_changes():
+    """Soundness of the version contract: between two checkpoints, every
+    row whose content changed has an advanced version (equivalently: an
+    unmoved version guarantees a bit-identical row), and versions are
+    monotone."""
+    feats, _ = mnist_like_points(n=600, d=24, classes=6, spread=0.25, seed=0)
+    cfg = _cfg(seed=11)
+    b = GraphBuilder(feats.take(np.arange(599)), cfg).add_reps(cfg.r)
+    ck1 = b.checkpoint()
+    b.extend(feats.take(np.arange(599, 600)), reps=1)  # touches few rows
+    ck2 = b.checkpoint()
+    n0 = ck1.n
+    assert np.all(ck2.ver[:n0] >= ck1.ver)
+    content_changed = np.any((ck1.nbr != ck2.nbr[:n0])
+                             | (ck1.w != ck2.w[:n0]), axis=1)
+    assert content_changed.any()                 # the extend did something
+    assert np.all(ck2.ver[:n0][content_changed] > ck1.ver[content_changed])
+    same_ver = ck1.ver == ck2.ver[:n0]
+    assert same_ver.any()                        # ...but most rows untouched
+    np.testing.assert_array_equal(ck1.nbr[same_ver], ck2.nbr[:n0][same_ver])
+    np.testing.assert_array_equal(ck1.w[same_ver], ck2.w[:n0][same_ver])
+
+
+@pytest.mark.fast
+def test_delta_finalize_ships_small_and_replays_exact():
+    """The tentpole acceptance numbers: after a 1-point extend (<=1% of
+    800 rows with reps=1), finalize(delta=True) ships <=5% of the
+    full-image bytes; a replica folding the delta stream is bit-identical
+    to the device slabs and edge-for-edge equal to a full finalize()."""
+    feats, _ = mnist_like_points(n=800, d=24, classes=6, spread=0.25, seed=0)
+    base = feats.take(np.arange(799))
+    extra = feats.take(np.arange(799, 800))
+    cfg = _cfg()
+    b = GraphBuilder(base, cfg).add_reps(cfg.r)
+
+    d0 = b.finalize(delta=True)                  # first ship: all changed rows
+    rep_nbr, rep_w = apply_delta(*_empty(), d0)
+
+    before = acc_lib.transfer_stats["delta_bytes"]
+    b.extend(extra, reps=1)
+    d1 = b.finalize(delta=True)
+    delta_bytes = acc_lib.transfer_stats["delta_bytes"] - before
+    k = rep_nbr.shape[1]
+    full_bytes = b.n * k * 8                     # int32 nbr + float32 w
+    assert d1.rows.shape[0] <= max(1, b.n // 100) + 2   # ~1% of rows touched
+    assert delta_bytes <= 0.05 * full_bytes
+
+    rep_nbr, rep_w = apply_delta(rep_nbr, rep_w, d1)
+    g_full = b.finalize()
+    g_replica = Graph.from_degree_slabs(b.n, rep_nbr, rep_w)
+    assert _edges(g_full) == _edges(g_replica)
+    ck = b.checkpoint()                          # device image, unpadded
+    np.testing.assert_array_equal(rep_nbr, ck.nbr)
+    np.testing.assert_array_equal(rep_w, ck.w)
+
+
+@pytest.mark.fast
+def test_empty_delta_ships_only_version_vector():
+    feats, _ = mnist_like_points(n=300, d=16, classes=4, spread=0.25, seed=1)
+    b = GraphBuilder(feats, _cfg(seed=5)).add_reps(3)
+    b.finalize(delta=True)
+    before = acc_lib.transfer_stats["delta_bytes"]
+    d = b.finalize(delta=True)                   # nothing changed since
+    assert d.num_records == 0 and d.rows.shape[0] == 0
+    assert acc_lib.transfer_stats["delta_bytes"] - before == b.n * 4
+
+
+@pytest.mark.fast
+def test_delta_checkpoint_chain_restores_bit_exact():
+    """full checkpoint -> extend -> delta checkpoint -> restore(base=full)
+    reproduces the live session bit-exactly (slabs AND versions AND the
+    delta stream position), at O(changed rows) checkpoint size."""
+    feats, _ = mnist_like_points(n=500, d=24, classes=6, spread=0.25, seed=0)
+    base = feats.take(np.arange(490))
+    extra = feats.take(np.arange(490, 500))
+    cfg = _cfg(seed=9)
+    b = GraphBuilder(base, cfg).add_reps(4)
+    full = b.checkpoint()
+    b.extend(extra, reps=2)
+    dckpt = b.checkpoint(delta=True)
+    assert dckpt.nbr is None and dckpt.delta_chain
+    live = b.checkpoint()                        # reference image
+
+    allf = base.concat(extra)
+    restored = GraphBuilder.restore(allf, cfg, dckpt, base=full)
+    rck = restored.checkpoint()
+    np.testing.assert_array_equal(rck.nbr, live.nbr)
+    np.testing.assert_array_equal(rck.w, live.w)
+    np.testing.assert_array_equal(rck.ver, live.ver)
+    assert restored.delta_seq == b.delta_seq
+    # compressed economics: the chain is much smaller than the image
+    chain_bytes = sum(d.nbytes for d in dckpt.delta_chain)
+    assert chain_bytes < full.nbr.nbytes + full.w.nbytes
+
+
+@pytest.mark.fast
+def test_delta_checkpoint_error_cases():
+    feats, _ = mnist_like_points(n=200, d=16, classes=4, spread=0.25, seed=2)
+    cfg = _cfg(seed=13, window=32)
+    b = GraphBuilder(feats, cfg).add_reps(2)
+    with pytest.raises(ValueError, match="prior full"):
+        b.checkpoint(delta=True)                 # no full checkpoint yet
+    full1 = b.checkpoint()
+    b.add_reps(1)
+    dckpt = b.checkpoint(delta=True)
+    with pytest.raises(ValueError, match="base="):
+        GraphBuilder.restore(feats, cfg, dckpt)  # base missing
+    with pytest.raises(ValueError, match="FULL"):
+        GraphBuilder.restore(feats, cfg, dckpt, base=dckpt)
+    full2 = b.checkpoint()                       # later stream position
+    b.add_reps(1)
+    dckpt2 = b.checkpoint(delta=True)            # chains from full2
+    with pytest.raises(ValueError, match="base checkpoint was cut"):
+        GraphBuilder.restore(feats, cfg, dckpt2, base=full1)
+    with pytest.raises(ValueError, match="StarsConfig"):
+        GraphBuilder.restore(feats, dataclasses.replace(cfg, seed=99),
+                             dckpt2, base=full2)
+
+
+# --------------------------------------------------------------------------- #
+# The serving loop
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.fast
+def test_serving_loop_coalesces_answers_and_meters():
+    """One drained session: 4 queued extends coalesce into 2 absorb rounds
+    (batch_window=2) with gid-stable tickets, a trailing query observes
+    every insert and answers set-for-set equal to the host spanner path,
+    deltas stream to the consumer replica bit-exactly — and the whole
+    drain performs ZERO global edge fetches."""
+    feats, _ = mnist_like_points(n=420, d=24, classes=6, spread=0.25, seed=0)
+    base = feats.take(np.arange(408))
+    cfg = _cfg(r=4)
+    b = GraphBuilder(base, cfg).add_reps(cfg.r)
+
+    deltas = []
+    sess = ServeSession(
+        b, ServeConfig(batch_window=2, max_queue=64, reps_per_absorb=1,
+                       query_capacity=512),
+        on_delta=deltas.append)
+    tickets = [sess.submit_extend(feats.take(np.arange(408 + 3 * i,
+                                                       408 + 3 * (i + 1))))
+               for i in range(4)]
+    tq = sess.submit_query([0, 5, 100, 411])
+
+    fetches = acc_lib.transfer_stats["edge_fetches"]
+    fetch_bytes = acc_lib.transfer_stats["bytes"]
+    stats = sess.run_until_idle()
+    assert acc_lib.transfer_stats["edge_fetches"] == fetches
+    assert acc_lib.transfer_stats["bytes"] == fetch_bytes
+
+    assert stats["absorb_rounds"] == 2           # 4 extends, window 2
+    assert stats["extends_absorbed"] == 4
+    assert stats["points_absorbed"] == 12
+    assert stats["deltas_emitted"] == 2
+    assert stats["queries_served"] == 4
+    assert stats["rejections"] == 0
+    assert stats["delta_rows_shipped"] == sum(d.rows.shape[0]
+                                              for d in deltas)
+    assert stats["delta_bytes"] > 0 and stats["query_bytes"] > 0
+    for i, t in enumerate(tickets):              # gids stable in queue order
+        assert t.done and t.result == {"first_gid": 408 + 3 * i, "count": 3}
+
+    # query parity vs the host-side spanner path, on the post-absorb graph
+    g = b.finalize()
+    expected = g.two_hop_sets(np.array([0, 5, 100, 411]))
+    assert tq.done
+    for row, cnt, exp in zip(tq.result["ids"], tq.result["counts"], expected):
+        assert set(row[row >= 0].tolist()) == set(exp.tolist())
+        assert int(cnt) == exp.size
+
+    # the on_delta stream reconstructs the device slabs bit-exactly
+    rep_nbr, rep_w = _empty()
+    for d in deltas:
+        rep_nbr, rep_w = apply_delta(rep_nbr, rep_w, d)
+    ck = b.checkpoint()
+    np.testing.assert_array_equal(rep_nbr, ck.nbr)
+    np.testing.assert_array_equal(rep_w, ck.w)
+
+
+@pytest.mark.fast
+def test_serving_loop_backpressure_and_truncation():
+    feats, _ = mnist_like_points(n=300, d=16, classes=4, spread=0.25, seed=1)
+    cfg = _cfg(r=3, seed=5)
+    b = GraphBuilder(feats, cfg).add_reps(cfg.r)
+    with pytest.raises(ValueError, match="unscored"):
+        ServeSession(GraphBuilder(feats, cfg))
+
+    sess = ServeSession(b, ServeConfig(max_queue=6, query_capacity=2,
+                                       emit_deltas=False))
+    tickets = [sess.submit_query([i]) for i in range(10)]
+    assert sum(t is None for t in tickets) == 4  # beyond the bounded queue
+    stats = sess.run_until_idle()
+    assert stats["rejections"] == 4
+    assert stats["queue_depth_hwm"] == 6
+    assert stats["queries_served"] == 6
+    assert stats["deltas_emitted"] == 0
+    # q_cap=2 truncates any neighbourhood larger than 2 members
+    counts = [int(t.result["counts"][0]) for t in tickets if t is not None]
+    assert stats["query_truncations"] == sum(c > 2 for c in counts)
+    for t in tickets:
+        if t is not None:
+            assert (t.result["ids"][0] >= 0).sum() == min(
+                2, int(t.result["counts"][0]))
+
+
+# --------------------------------------------------------------------------- #
+# Mesh parity (subprocesses with forced host device counts)
+# --------------------------------------------------------------------------- #
+
+_COMMON = """
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import GraphBuilder, HashFamilyConfig, StarsConfig
+        from repro.data import mnist_like_points
+        from repro.graph import accumulator as acc_lib
+        from repro.service.delta import apply_delta
+
+        def cfg(**kw):
+            base = dict(mode="sorting", scoring="stars",
+                        family=HashFamilyConfig("simhash", m=16),
+                        measure="cosine", r=4, window=32, leaders=8,
+                        degree_cap=16, seed=3)
+            base.update(kw)
+            return StarsConfig(**base)
+
+        def records(d):
+            return (d.rows.tolist(), d.node.tolist(), d.nbr.tolist(),
+                    d.w.view(np.int32).tolist(), d.sign.tolist())
+"""
+
+
+@pytest.mark.dist
+@pytest.mark.parametrize("devices", [2, 4])
+def test_mesh_delta_stream_matches_single_device(devices):
+    """finalize(delta=True) on a p-shard mesh emits the SAME Z-set records
+    (changed-row set, record keys, weight bits) as the single-device
+    session, before and after an extend — per-row versions differ only in
+    fold granularity (documented in accumulator.EdgeAccumulator.ver), so
+    the delta stream, not the raw counters, is the parity surface."""
+    res = _run_sub(_COMMON + f"""
+        feats, _ = mnist_like_points(n=402, d=24, classes=6, spread=0.25,
+                                     seed=0)
+        base = feats.take(np.arange(396))
+        extra = feats.take(np.arange(396, 402))
+        c = cfg()
+        single = GraphBuilder(base, c).add_reps(c.r)
+        mesh = jax.make_mesh(({devices},), ("data",))
+        sharded = GraphBuilder(base, c, mesh=mesh).add_reps(c.r)
+        d0s, d0m = single.finalize(delta=True), sharded.finalize(delta=True)
+        single.extend(extra, reps=2)
+        sharded.extend(extra, reps=2)
+        d1s, d1m = single.finalize(delta=True), sharded.finalize(delta=True)
+        print(json.dumps({{
+            "delta0_parity": bool(records(d0s) == records(d0m)),
+            "delta1_parity": bool(records(d1s) == records(d1m)),
+            "d1_rows": int(d1m.rows.shape[0]),
+        }}))
+""", devices=devices)
+    assert res["delta0_parity"] and res["delta1_parity"]
+    assert res["d1_rows"] > 0
+
+
+@pytest.mark.dist
+def test_delta_chain_checkpoint_replays_across_mesh_sizes():
+    """The cross-mesh acceptance path: full checkpoint cut on a p=4 mesh,
+    extend + delta checkpoint there, then restore into a SINGLE-DEVICE
+    session by replaying the chain — slab image bit-identical to the mesh
+    session's own, and the restored session keeps serving exact deltas."""
+    res = _run_sub(_COMMON + """
+        feats, _ = mnist_like_points(n=402, d=24, classes=6, spread=0.25,
+                                     seed=0)
+        base = feats.take(np.arange(396))
+        extra = feats.take(np.arange(396, 402))
+        allf = base.concat(extra)
+        c = cfg()
+        mesh = jax.make_mesh((4,), ("data",))
+        mb = GraphBuilder(base, c, mesh=mesh).add_reps(c.r)
+        full = mb.checkpoint()
+        mb.extend(extra, reps=2)
+        dckpt = mb.checkpoint(delta=True)
+        live = mb.checkpoint()
+
+        rb = GraphBuilder.restore(allf, c, dckpt, base=full)  # p=1 session
+        seq_matches = rb.delta_seq == mb.delta_seq
+        rck = rb.checkpoint()
+
+        # ...and the restored session's delta stream stays re-anchored at
+        # the restored image: nothing re-ships
+        d = rb.finalize(delta=True)
+        print(json.dumps({
+            "nbr_equal": bool((rck.nbr == live.nbr).all()),
+            "w_equal": bool((rck.w == live.w).all()),
+            "ver_equal": bool((rck.ver == live.ver).all()),
+            "seq_matches": bool(seq_matches),
+            "post_restore_delta_empty": bool(d.num_records == 0),
+            "chain_len": len(dckpt.delta_chain),
+        }))
+""", devices=4)
+    assert res["nbr_equal"] and res["w_equal"] and res["ver_equal"]
+    assert res["seq_matches"] and res["post_restore_delta_empty"]
+    assert res["chain_len"] >= 1
