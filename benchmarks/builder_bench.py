@@ -451,13 +451,120 @@ def delta_finalize(ds: str = "mnist", algo: str = "sorting_stars",
     }
 
 
+def mesh_clustering(ds: str = "mnist", algo: str = "sorting_stars",
+                    r: int = 6, devices: int = 4,
+                    target_clusters: int = 10) -> dict:
+    """Zero-gather clustering on the mesh-sharded slabs (ISSUE 8 tentpole).
+
+    After a mesh build, ``builder.cluster('components')`` and
+    ``builder.cluster('affinity')`` produce labels straight from the
+    sharded degree slabs — label-propagation / Boruvka rounds ship only
+    owner-keyed label exchanges (metered under ``all_to_all_bytes``) and
+    the final (n,) label vector (``cluster_label_bytes``); the (n, k)
+    edge image never leaves the devices (``edge_fetches == 0`` is
+    asserted INSIDE the subprocess, before any finalize).  Reported:
+
+      cluster_components_s / cluster_affinity_s — wall per clustering
+          (auto-gated like every ``*_s`` field at CHECK_MAX_RATIO),
+      cc_rounds / af_rounds                     — label rounds to converge,
+      cluster_a2a_bytes — wire bytes of all label exchanges (cross-shard
+          slices only; deterministic given shapes/seed/p, gated at
+          CHECK_MAX_BYTES_RATIO — growth means the label loop started
+          shipping more than labels),
+      cluster_label_bytes                       — the two (n,) label pulls,
+      v_host / v_mesh — v-measure of the host ``affinity_clustering`` on
+          the finalized graph vs the mesh labels, both against ground
+          truth, plus mesh-vs-host agreement (``v_mesh_vs_host``) — the
+          parity evidence (merge orders differ: the mesh recomputes true
+          average linkage per round, the host averages averages).
+
+    Connected components need no v-measure: min-gid labels are asserted
+    integer-identical to the host union-find.
+    """
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    res = run_forced_devices(f"""
+        import json, time
+        import jax, numpy as np
+        from benchmarks.common import algo_config, dataset
+        from repro.core import GraphBuilder
+        from repro.graph import accumulator as acc_lib
+        from repro.graph.affinity import affinity_clustering
+        from repro.graph.components import connected_components_np
+        from repro.graph.metrics import v_measure
+
+        feats, y = dataset({ds!r})
+        cfg = algo_config({algo!r}, {ds!r}, r={r})
+        mesh = jax.make_mesh(({devices},), ("data",))
+        b = GraphBuilder(np.asarray(feats.dense), cfg, mesh=mesh)
+        b.add_reps({r})
+        acc_lib.reset_transfer_stats()
+        t0 = time.time()
+        lab_cc, info_cc = b.cluster("components", return_info=True)
+        t_cc = time.time() - t0
+        t0 = time.time()
+        lab_af, info_af = b.cluster("affinity",
+                                    target_clusters={target_clusters},
+                                    return_info=True)
+        t_af = time.time() - t0
+        ts = dict(acc_lib.transfer_stats)
+        # the tentpole invariant, checked BEFORE the first edge fetch
+        assert ts["edge_fetches"] == 0 and ts["bytes"] == 0
+        g = b.finalize()
+        host_cc = connected_components_np(g.n, g.src, g.dst)
+        assert np.array_equal(lab_cc, host_cc)
+        t0 = time.time()
+        host_af = affinity_clustering(g, target_clusters={target_clusters})
+        t_host = time.time() - t0
+        print(json.dumps({{
+            "t_cc": t_cc, "t_af": t_af, "t_host_af": t_host,
+            "cc_rounds": info_cc["rounds"],
+            "cc_jump_pulls": info_cc["jump_pulls"],
+            "af_rounds": info_af["rounds"],
+            "af_clusters": info_af["clusters"],
+            "cluster_a2a_bytes": ts["all_to_all_bytes"],
+            "a2a_calls": ts["all_to_all_calls"],
+            "cluster_label_bytes": ts["cluster_label_bytes"],
+            "v_host": v_measure(y, host_af)["v"],
+            "v_mesh": v_measure(y, lab_af)["v"],
+            "v_mesh_vs_host": v_measure(host_af, lab_af)["v"],
+        }}))
+    """, devices=devices, timeout=1800, extra_pythonpath=[repo])
+    tag = f"[{ds}/{algo}/r{r}/mesh{devices}]"
+    emit(f"cluster_components_s{tag}", 0.0, f"{res['t_cc']:.3f}s")
+    emit(f"cluster_affinity_s{tag}", 0.0, f"{res['t_af']:.3f}s")
+    emit(f"cluster_rounds{tag}", 0.0,
+         f"cc:{res['cc_rounds']} af:{res['af_rounds']}")
+    emit(f"cluster_a2a_bytes{tag}", 0.0, res["cluster_a2a_bytes"])
+    emit(f"cluster_vmeasure{tag}", 0.0,
+         f"host:{res['v_host']:.3f} mesh:{res['v_mesh']:.3f}")
+    return {
+        "row": f"mesh_clustering[{ds}/{algo}/r{r}/mesh{devices}]",
+        "dataset": ds, "algo": algo, "r": r, "devices": devices,
+        "target_clusters": target_clusters,
+        "cluster_components_s": res["t_cc"],
+        "cluster_affinity_s": res["t_af"],
+        "host_affinity_s": res["t_host_af"],
+        "cc_rounds": res["cc_rounds"],
+        "cc_jump_pulls": res["cc_jump_pulls"],
+        "af_rounds": res["af_rounds"],
+        "af_clusters": res["af_clusters"],
+        "cluster_a2a_bytes": int(res["cluster_a2a_bytes"]),
+        "all_to_all_calls": int(res["a2a_calls"]),
+        "cluster_label_bytes": int(res["cluster_label_bytes"]),
+        "edge_fetches_before_labels": 0,
+        "v_host": res["v_host"], "v_mesh": res["v_mesh"],
+        "v_mesh_vs_host": res["v_mesh_vs_host"],
+    }
+
+
 def builder_table() -> None:
     rows = [incremental_vs_rebuild("mnist", "sorting_stars", r=10),
             incremental_vs_rebuild("mnist", "lsh_stars", r=10),
             extend_stream("mnist", "sorting_stars", batches=5, r=4),
             delta_finalize("mnist", "sorting_stars", r=10, n_new=1),
             mesh_vs_single("mnist", "sorting_stars", r=6, devices=4),
-            sharded_scoring("mnist", "sorting_stars", r=4, devices=4)]
+            sharded_scoring("mnist", "sorting_stars", r=4, devices=4),
+            mesh_clustering("mnist", "sorting_stars", r=6, devices=4)]
     with open("BENCH_builder.json", "w") as f:
         json.dump(rows, f, indent=2)
 

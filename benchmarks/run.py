@@ -16,7 +16,9 @@ bit-packed exchange formats) that grows by more than
 ``CHECK_MAX_BYTES_RATIO``x fails likewise, as does any ``*delta_bytes*``
 field (the delta-finalize shipping economics of the graph-as-a-service
 path — re-shipping unchanged rows would grow it without breaking any
-parity test).  Rows are matched by their
+parity test) and any ``*cluster_a2a_bytes*`` field (the label-exchange
+wire volume of zero-gather mesh clustering — growth means the label
+rounds started shipping more than labels).  Rows are matched by their
 ``row`` key; new rows and new fields pass silently (they have no baseline
 yet); other machine-independent fields (comparisons, raw bytes, counts)
 are reported but never gate — wall time and wire width are the two things
@@ -100,6 +102,12 @@ def check() -> int:
                 # delta_bytes_ratio): deterministic given shapes/seed, so
                 # it gates at the tight wire-width ratio — growth means
                 # the delta stream started re-shipping unchanged rows
+                limit, unit = CHECK_MAX_BYTES_RATIO, "B"
+            elif "cluster_a2a_bytes" in key:
+                # zero-gather clustering label-exchange volume: round
+                # counts and exchange capacities are deterministic given
+                # shapes/seed/p, so it gates at the wire-width ratio —
+                # growth means label rounds ship more than labels
                 limit, unit = CHECK_MAX_BYTES_RATIO, "B"
             else:
                 continue

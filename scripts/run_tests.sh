@@ -20,6 +20,12 @@
 #                                   #   serving loop — mesh-parity cases
 #                                   #   inside it are also marked dist and
 #                                   #   run in the dist tier)
+#   scripts/run_tests.sh cluster    # downstream clustering tests only
+#                                   #   (-m cluster; CC/affinity jax-vs-
+#                                   #   numpy parity, the label bugfix
+#                                   #   regressions, and the zero-gather
+#                                   #   mesh clustering path — its p>1
+#                                   #   cases are also marked dist)
 #   scripts/run_tests.sh long       # long-session streaming tests only
 #                                   #   (-m long; the extend()/refresh
 #                                   #   staleness suite — minutes, kept
@@ -47,7 +53,11 @@ case "${1:-}" in
   dist)
     shift
     exec python -m pytest -q -m "dist and not long" tests/test_mesh_parity.py \
-      tests/test_distributed.py tests/test_service.py "$@"
+      tests/test_distributed.py tests/test_service.py tests/test_cluster.py "$@"
+    ;;
+  cluster)
+    shift
+    exec python -m pytest -q -m cluster "$@"
     ;;
   serve)
     shift

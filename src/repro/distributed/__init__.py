@@ -3,5 +3,10 @@ from repro.distributed.activation_sharding import (
     constrain,
     set_activation_sharding,
 )
+from repro.distributed.cluster_dist import (
+    affinity_mesh,
+    connected_components_mesh,
+)
 
-__all__ = ["activation_sharding", "constrain", "set_activation_sharding"]
+__all__ = ["activation_sharding", "constrain", "set_activation_sharding",
+           "affinity_mesh", "connected_components_mesh"]

@@ -72,6 +72,12 @@ _BIG = jnp.int32(2**31 - 1)
 # image a plain finalize pays.  ``delta_rows`` counts the rows shipped, so
 # bytes-per-changed-row is derivable; the full-vs-delta economics are the
 # ``delta_finalize`` row of benchmarks/builder_bench.py.
+# ``cluster_label_*`` meters the zero-gather clustering path
+# (repro.distributed.cluster_dist / GraphBuilder.cluster): label rounds
+# run entirely on device through metered all_to_all exchanges, and the
+# ONLY device->host payload is the final (n,) int32 label vector —
+# ``edge_fetches`` / ``bytes`` stay untouched by any number of
+# clusterings, which is the tentpole invariant tests assert.
 transfer_stats: Dict[str, int] = {"edge_fetches": 0, "bytes": 0,
                                   "checkpoint_fetches": 0,
                                   "checkpoint_bytes": 0,
@@ -79,7 +85,9 @@ transfer_stats: Dict[str, int] = {"edge_fetches": 0, "bytes": 0,
                                   "all_to_all_bytes": 0,
                                   "delta_fetches": 0,
                                   "delta_bytes": 0,
-                                  "delta_rows": 0}
+                                  "delta_rows": 0,
+                                  "cluster_label_fetches": 0,
+                                  "cluster_label_bytes": 0}
 
 
 def reset_transfer_stats() -> None:

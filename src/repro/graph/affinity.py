@@ -31,11 +31,16 @@ def _contract_edges(cu: np.ndarray, cv: np.ndarray, w: np.ndarray
     lo, hi, w = lo[keep], hi[keep], w[keep]
     if lo.size == 0:
         return lo, hi, w
-    key = lo.astype(np.int64) * (hi.max() + 1) + hi
-    order = np.argsort(key, kind="stable")
-    key, lo, hi, w = key[order], lo[order], hi[order], w[order]
-    first = np.ones(key.size, bool)
-    first[1:] = key[1:] != key[:-1]
+    # Group by the (lo, hi) pair directly.  The composite key this replaces
+    # (lo * (hi.max()+1) + hi in int64) silently wraps once lo * hi
+    # approaches 2^63 — distinct cluster pairs alias and their weights get
+    # averaged together (tera-scale ids make that reachable: hi ~ 2^33,
+    # lo ~ 2^31 is already a wrap).  lexsort needs no product, so there is
+    # nothing to overflow.
+    order = np.lexsort((hi, lo))
+    lo, hi, w = lo[order], hi[order], w[order]
+    first = np.ones(lo.size, bool)
+    first[1:] = (lo[1:] != lo[:-1]) | (hi[1:] != hi[:-1])
     seg = np.cumsum(first) - 1
     nseg = seg[-1] + 1
     wsum = np.zeros(nseg); np.add.at(wsum, seg, w)

@@ -36,18 +36,44 @@ def connected_components_np(n: int, src: np.ndarray,
     return parent
 
 
+_INT32_MAX = 2**31 - 1
+
+
 def connected_components_jax(n: int, src: jax.Array, dst: jax.Array,
-                             max_iters: int = 64) -> jax.Array:
-    """Min-label propagation + pointer jumping, jit-compatible.
+                             max_iters: int = 64, *,
+                             return_converged: bool = False):
+    """Min-label propagation + pointer jumping on device.
 
     Each round:  label[u] <- min over incident edges of label[neighbour],
     then labels chase their own pointers (label = label[label]) until stable.
     Converges in O(log n) rounds on typical graphs; ``max_iters`` bounds the
     while-loop for lax tracing.
+
+    Labels are node ids, so they follow the repo's per-chunk-int32 /
+    host-int64 counter policy: int32 on device while ids fit, int64 once
+    they don't — but jax silently downcasts int64 arrays unless x64 is
+    enabled, which would reintroduce the wraparound this guard exists to
+    stop, so an id range past int32 without ``jax_enable_x64`` raises
+    instead of corrupting labels.
+
+    Hitting ``max_iters`` before the labels stabilize raises RuntimeError
+    (silently-unconverged labels are NOT a partition of the graph); pass
+    ``return_converged=True`` to get ``(labels, converged)`` and handle it
+    yourself — that form stays jit-compatible (no host sync).
     """
-    src = jnp.asarray(src, jnp.int32)
-    dst = jnp.asarray(dst, jnp.int32)
-    labels0 = jnp.arange(n, dtype=jnp.int32)
+    if n - 1 > _INT32_MAX:
+        if not jax.config.jax_enable_x64:
+            raise OverflowError(
+                f"n={n} exceeds the int32 label range and jax x64 is "
+                "disabled: device labels would silently wrap (enable "
+                "jax_enable_x64 for int64 labels, or use "
+                "connected_components_np)")
+        dtype = jnp.int64
+    else:
+        dtype = jnp.int32
+    src = jnp.asarray(src, dtype)
+    dst = jnp.asarray(dst, dtype)
+    labels0 = jnp.arange(n, dtype=dtype)
 
     def body(state):
         labels, _, it = state
@@ -67,8 +93,19 @@ def connected_components_jax(n: int, src: jax.Array, dst: jax.Array,
         _, changed, it = state
         return changed & (it < max_iters)
 
-    labels, _, _ = jax.lax.while_loop(
+    labels, changed, iters = jax.lax.while_loop(
         cond, body, (labels0, jnp.bool_(True), jnp.int32(0)))
+    # the loop exits either because a round changed nothing (converged) or
+    # because it ran out of iterations with `changed` still set
+    converged = jnp.logical_not(changed)
+    if return_converged:
+        return labels, converged
+    if not bool(converged):
+        raise RuntimeError(
+            f"connected_components_jax: labels still changing after "
+            f"max_iters={max_iters} rounds ({int(iters)} run) — raise "
+            "max_iters, or pass return_converged=True to handle partial "
+            "labels explicitly")
     return labels
 
 

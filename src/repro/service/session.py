@@ -19,6 +19,12 @@ the submit and counts it) and the loop drains them in FIFO order:
     ``['bytes']`` stay untouched by any number of queries (asserted in
     tests/test_service.py), only the tiny (m, q_cap) answer crosses to the
     host (metered per session as ``query_bytes``).
+  * **clustering requests** (``submit_cluster``) run
+    ``builder.cluster(...)`` between rounds — the zero-gather label rounds
+    of ``repro.distributed.cluster_dist`` over the same device-resident
+    slabs, so a session serves features -> graph -> cluster labels without
+    ever gathering the (n, k) slab image either (only the (n,) label
+    vector crosses, metered per session as ``cluster_label_bytes``).
 
 Per-session accounting (``ServeSession.stats``) mirrors the accumulator's
 ``transfer_stats`` idiom: ``queries_served``, ``delta_rows_shipped``,
@@ -179,6 +185,7 @@ class ServeSession:
             "extends_absorbed": 0, "absorb_rounds": 0, "points_absorbed": 0,
             "queries_served": 0, "query_bytes": 0, "query_truncations": 0,
             "deltas_emitted": 0, "delta_rows_shipped": 0, "delta_bytes": 0,
+            "clusterings_served": 0, "cluster_label_bytes": 0,
             "rejections": 0, "queue_depth_hwm": 0,
         }
 
@@ -209,6 +216,17 @@ class ServeSession:
         rejected.  The resolved ticket carries ``{'nodes', 'ids',
         'weights', 'counts'}`` (host numpy, -1-padded top-q rows)."""
         return self._submit("query", np.asarray(node_ids, np.int32).ravel())
+
+    def submit_cluster(self, method: str = "affinity",
+                       **params) -> Optional[Ticket]:
+        """Queue a clustering of the CURRENT graph; None = rejected.
+
+        Served between rounds by ``builder.cluster(method, **params)`` —
+        the zero-gather mesh label rounds, no global edge fetch.  The
+        resolved ticket carries ``{'labels', 'info'}`` ((n,) host labels
+        for the graph as of serving time, observing every
+        previously-queued insert)."""
+        return self._submit("cluster", (method, dict(params)))
 
     @property
     def queue_depth(self) -> int:
@@ -289,7 +307,17 @@ class ServeSession:
                 self._on_delta(delta)
 
     def _answer(self, request) -> None:
-        _, node_ids, ticket = request
+        kind, payload, ticket = request
+        if kind == "cluster":
+            method, params = payload
+            labels, info = self.builder.cluster(method, return_info=True,
+                                                **params)
+            with self._lock:
+                self._stats["clusterings_served"] += 1
+                self._stats["cluster_label_bytes"] += int(labels.size) * 4
+            ticket._resolve({"labels": labels, "info": info})
+            return
+        node_ids = payload
         state = self.builder.slab_state()
         q_cap = min(self.config.query_capacity, self.builder.n)
         ids, weights, counts, truncated = jax.device_get(
