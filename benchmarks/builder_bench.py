@@ -557,11 +557,82 @@ def mesh_clustering(ds: str = "mnist", algo: str = "sorting_stars",
     }
 
 
+def paged_build(ds: str = "mnist", algo: str = "sorting_stars",
+                r: int = 6, page_rows: int = 64,
+                pool_pages: int = 10) -> dict:
+    """Out-of-core paged build vs the resident build (ISSUE 9 tentpole).
+
+    Same config, same seed, a page pool deliberately far smaller than the
+    feature table (forced re-streaming): the paged build must stay
+    edge-for-edge identical (asserted) while its peak device-resident
+    feature bytes stay <= the pool budget.  Reported:
+
+      resident_s / paged_s    — wall seconds per build (auto-gated like
+          every ``*_s`` field),
+      feature_page_bytes — host->device page traffic of the whole paged
+          build (faults x page bytes; deterministic given shapes, seed
+          and pool geometry, so it gates at CHECK_MAX_BYTES_RATIO —
+          growth means gathers stopped batching into page groups or the
+          chunking regressed),
+      feature_page_faults / hits — pool misses vs re-uses,
+      feature_page_peak_bytes — the bounded-peak evidence (<= pool).
+    """
+    import dataclasses
+
+    feats, _ = dataset(ds)
+    cfg = algo_config(algo, ds, r=r)
+    dense = np.asarray(feats.dense)
+    d = int(dense.shape[1])
+    pool_bytes = pool_pages * page_rows * d * dense.dtype.itemsize
+    assert dense.nbytes > 2 * pool_bytes, "pool must be out-of-core"
+
+    t0 = time.time()
+    g1 = GraphBuilder(feats, cfg).add_reps(r).finalize()
+    t_res = time.time() - t0
+
+    pcfg = dataclasses.replace(cfg, feature_store="paged",
+                               feature_page_rows=page_rows,
+                               feature_pool_bytes=pool_bytes)
+    acc_lib.reset_transfer_stats()
+    t0 = time.time()
+    g2 = GraphBuilder(dense, pcfg).add_reps(r).finalize()
+    t_paged = time.time() - t0
+    ts = dict(acc_lib.transfer_stats)
+
+    e1 = {(int(s), int(d_)) for s, d_ in zip(g1.src, g1.dst)}
+    e2 = {(int(s), int(d_)) for s, d_ in zip(g2.src, g2.dst)}
+    assert e1 == e2, "paged build diverged from resident"
+    assert g1.stats["comparisons"] == g2.stats["comparisons"]
+    assert ts["feature_page_peak_bytes"] <= pool_bytes
+
+    tag = f"[{ds}/{algo}/r{r}/pool{pool_pages}x{page_rows}]"
+    emit(f"resident_s{tag}", t_res * 1e6 / r, f"{t_res:.3f}s")
+    emit(f"paged_s{tag}", t_paged * 1e6 / r, f"{t_paged:.3f}s")
+    emit(f"feature_page_bytes{tag}", 0.0, ts["feature_page_bytes"])
+    emit(f"feature_page_faults{tag}", 0.0, ts["feature_page_faults"])
+    emit(f"feature_page_peak_bytes{tag}", 0.0,
+         ts["feature_page_peak_bytes"])
+    return {
+        "row": f"paged_build[{ds}/{algo}/r{r}/pool{pool_pages}x{page_rows}]",
+        "dataset": ds, "algo": algo, "r": r,
+        "page_rows": page_rows, "pool_bytes": int(pool_bytes),
+        "table_bytes": int(dense.nbytes),
+        "resident_s": t_res, "paged_s": t_paged,
+        "edge_for_edge": True,
+        "comparisons": int(g2.stats["comparisons"]),
+        "feature_page_bytes": int(ts["feature_page_bytes"]),
+        "feature_page_faults": int(ts["feature_page_faults"]),
+        "feature_page_hits": int(ts["feature_page_hits"]),
+        "feature_page_peak_bytes": int(ts["feature_page_peak_bytes"]),
+    }
+
+
 def builder_table() -> None:
     rows = [incremental_vs_rebuild("mnist", "sorting_stars", r=10),
             incremental_vs_rebuild("mnist", "lsh_stars", r=10),
             extend_stream("mnist", "sorting_stars", batches=5, r=4),
             delta_finalize("mnist", "sorting_stars", r=10, n_new=1),
+            paged_build("mnist", "sorting_stars", r=6),
             mesh_vs_single("mnist", "sorting_stars", r=6, devices=4),
             sharded_scoring("mnist", "sorting_stars", r=4, devices=4),
             mesh_clustering("mnist", "sorting_stars", r=6, devices=4)]

@@ -16,9 +16,12 @@ bit-packed exchange formats) that grows by more than
 ``CHECK_MAX_BYTES_RATIO``x fails likewise, as does any ``*delta_bytes*``
 field (the delta-finalize shipping economics of the graph-as-a-service
 path — re-shipping unchanged rows would grow it without breaking any
-parity test) and any ``*cluster_a2a_bytes*`` field (the label-exchange
+parity test), any ``*cluster_a2a_bytes*`` field (the label-exchange
 wire volume of zero-gather mesh clustering — growth means the label
-rounds started shipping more than labels).  Rows are matched by their
+rounds started shipping more than labels) and any ``*feature_page_bytes*``
+field (the paged FeatureStore's host->device page traffic — growth means
+out-of-core gathers stopped batching or the chunking regressed while
+every parity test still passes).  Rows are matched by their
 ``row`` key; new rows and new fields pass silently (they have no baseline
 yet); other machine-independent fields (comparisons, raw bytes, counts)
 are reported but never gate — wall time and wire width are the two things
@@ -108,6 +111,16 @@ def check() -> int:
                 # counts and exchange capacities are deterministic given
                 # shapes/seed/p, so it gates at the wire-width ratio —
                 # growth means label rounds ship more than labels
+                limit, unit = CHECK_MAX_BYTES_RATIO, "B"
+            elif "feature_page_bytes" in key:
+                # paged-FeatureStore host->device traffic: faults x page
+                # bytes, deterministic given shapes/seed/pool geometry,
+                # so it gates at the wire-width ratio — growth means
+                # gathers stopped batching into page groups or the
+                # window-chunking regressed.  feature_page_peak_bytes is
+                # deliberately NOT matched here (no "feature_page_bytes"
+                # substring): the peak is pinned <= the pool budget by
+                # an assert inside the bench itself
                 limit, unit = CHECK_MAX_BYTES_RATIO, "B"
             else:
                 continue

@@ -26,6 +26,11 @@
 #                                   #   regressions, and the zero-gather
 #                                   #   mesh clustering path — its p>1
 #                                   #   cases are also marked dist)
+#   scripts/run_tests.sh paged      # FeatureStore tests only (-m paged;
+#                                   #   paged/resident edge-for-edge
+#                                   #   parity, pool-bounded out-of-core
+#                                   #   builds, store edge cases — its
+#                                   #   mesh cases are also marked dist)
 #   scripts/run_tests.sh long       # long-session streaming tests only
 #                                   #   (-m long; the extend()/refresh
 #                                   #   staleness suite — minutes, kept
@@ -53,7 +58,12 @@ case "${1:-}" in
   dist)
     shift
     exec python -m pytest -q -m "dist and not long" tests/test_mesh_parity.py \
-      tests/test_distributed.py tests/test_service.py tests/test_cluster.py "$@"
+      tests/test_distributed.py tests/test_service.py tests/test_cluster.py \
+      tests/test_store.py "$@"
+    ;;
+  paged)
+    shift
+    exec python -m pytest -q -m paged "$@"
     ;;
   cluster)
     shift

@@ -72,15 +72,34 @@ from repro.core.spanner import Graph
 from repro.core.stars import StarsConfig, _prefilter_sketch, _rep_candidates
 from repro.graph import accumulator as acc_lib
 from repro.similarity.measures import (PointFeatures, pairwise_similarity)
+from repro.similarity.store import (FeatureStore, PagedFeatureStore,
+                                    ResidentFeatureStore, make_feature_store)
 
-FeaturesLike = Union[PointFeatures, jax.Array, np.ndarray]
+FeaturesLike = Union[PointFeatures, jax.Array, np.ndarray, FeatureStore]
 
 
-def as_point_features(features: FeaturesLike) -> PointFeatures:
+def as_point_features(features) -> PointFeatures:
     """Accept a PointFeatures or a bare (n, d) dense array."""
     if isinstance(features, PointFeatures):
         return features
     return PointFeatures(dense=jnp.asarray(features))
+
+
+def as_feature_store(features: FeaturesLike,
+                     cfg: StarsConfig) -> FeatureStore:
+    """The session's FeatureStore: pass one through, or build the one
+    ``cfg.feature_store`` names around raw features."""
+    if isinstance(features, FeatureStore):
+        return features
+    if not isinstance(features, PointFeatures):
+        # the paged store keeps its table on HOST — don't bounce a raw
+        # array through device placement just to pull it straight back
+        features = (PointFeatures(dense=np.asarray(features))
+                    if cfg.feature_store == "paged"
+                    else as_point_features(features))
+    return make_feature_store(features, cfg.feature_store,
+                              page_rows=cfg.feature_page_rows,
+                              pool_bytes=cfg.feature_pool_bytes)
 
 
 # --------------------------------------------------------------------------- #
@@ -202,23 +221,31 @@ CANDIDATE_SOURCES: Dict[str, Callable] = {
 
 
 class _SingleDeviceBackend:
-    """Feature table + slab state on the default device."""
+    """Feature table + slab state on the default device.
 
-    def __init__(self, features: PointFeatures, cfg: StarsConfig,
+    Features ride in a :class:`ResidentFeatureStore`; the round programs
+    close over the store's PointFeatures directly (bit-exact, zero
+    indirection on the hot path)."""
+
+    def __init__(self, store: ResidentFeatureStore, cfg: StarsConfig,
                  learned_apply: Optional[Callable]):
         name = cfg.source_name
         if name not in CANDIDATE_SOURCES:
             raise ValueError(f"unknown candidate source {name!r}; "
                              f"known: {sorted(CANDIDATE_SOURCES)}")
-        self.features = features
+        self.store = store
         self.source = CANDIDATE_SOURCES[name](cfg, learned_apply)
         # (new_from, refresh_below, refresh_fraction) -> compiled round
         # program; cleared on extend() (shapes change)
         self._bound: Dict = {}
 
     @property
+    def features(self) -> PointFeatures:
+        return self.store.features
+
+    @property
     def n(self) -> int:
-        return self.features.n
+        return self.store.n
 
     def init_state(self, capacity: int) -> acc_lib.EdgeAccumulator:
         return acc_lib.EdgeAccumulator.create(self.n, capacity)
@@ -242,7 +269,7 @@ class _SingleDeviceBackend:
         return self._bound[key](state, rep_index, refresh_probs)
 
     def extend(self, new_features: PointFeatures) -> None:
-        self.features = self.features.concat(new_features)
+        self.store.append(new_features)
         self._bound = {}            # shapes changed; rebind lazily
 
     def cluster_mesh(self):
@@ -262,6 +289,320 @@ def _refresh_window_count(cfg: StarsConfig, n: int) -> int:
     from repro.core import windows as win_lib
     return (win_lib.window_slot_count(cfg.mode, n, cfg.window)
             // cfg.window)
+
+
+def _sketch_keys(cfg: StarsConfig, n: int, words: jax.Array, rep):
+    """Sketch words -> BIT-PACKED sort keys (+ gids, bucket ids).
+
+    The key-packing half of the mesh sketch phase, factored out so the
+    resident path (fused sketch+pack jit over the device table) and the
+    paged path (pack over STREAMED words) run the identical integer
+    program.  The sort key is the big-endian field stream (hash fields,
+    top ``TIEBREAK_BITS`` of the random tiebreak, zero pad, gid) packed to
+    ``ceil(bits/32)`` words (``sorter.pack_bit_fields``); the trailing gid
+    field doubles as payload and tiebreak-of-last-resort.  Rows past ``n``
+    (mesh padding) get all-ones keys and gid -1: they sort to the tail and
+    never enter the permutation.
+    """
+    from repro.core.stars import TIEBREAK_BITS, _rep_keys
+    from repro.distributed.sorter import pack_bit_fields
+    gid_bits = int(n).bit_length()
+    k_tie, _, _, _ = _rep_keys(cfg, rep)
+    n_pad = words.shape[0]
+    gids = jnp.arange(n_pad, dtype=jnp.int32)
+    real = gids < n
+    # the SAME (n,) tiebreak draw as the single-device path, looked up
+    # per gid
+    tb = jax.random.bits(k_tie, (n,), jnp.uint32)
+    tb = jnp.where(real, tb[jnp.minimum(gids, n - 1)],
+                   jnp.uint32(0xFFFFFFFF))
+    if cfg.mode == "lsh":
+        bucket = lsh_lib.bucket_key(words, cfg.family)
+        # full-width leading field: key word 0 IS the bucket id, which
+        # distributed_window_blocks(bucket_word=0) relies on
+        fields, widths = [bucket], [32]
+    elif cfg.family.kind in ("simhash", "mixture"):
+        bucket = jnp.zeros((n_pad,), jnp.uint32)
+        m = words.shape[1]
+        fields = [words[:, j].astype(jnp.uint32) for j in range(m)]
+        widths = [1] * m                 # one BIT per hash word
+    else:
+        bucket = jnp.zeros((n_pad,), jnp.uint32)
+        m = words.shape[1]
+        fields = [words[:, j] for j in range(m)]
+        widths = [32] * m                # full-width lexicographic
+    tie = tb >> jnp.uint32(32 - TIEBREAK_BITS)
+    pad = (-(sum(widths) + TIEBREAK_BITS + gid_bits)) % 32
+    fields += [tie, jnp.zeros((n_pad,), jnp.uint32),
+               gids.astype(jnp.uint32)]
+    widths += [TIEBREAK_BITS, pad, gid_bits]
+    keys = pack_bit_fields(fields, widths)
+    keys = jnp.where(real[:, None], keys, jnp.uint32(0xFFFFFFFF))
+    return keys, jnp.where(real, gids, -1), bucket
+
+
+def _stream_sketch_words(store: PagedFeatureStore, cfg: StarsConfig, rep,
+                         words_fns: Dict, n_rows: int) -> jax.Array:
+    """Row-chunked sketch through a paged store: ``(n_rows, m)`` words.
+
+    Bit-equal to the one-shot resident sketch: the hash projection depends
+    only on (d, rep_seed), so sketching row blocks independently computes
+    the identical per-row matmul/threshold (verified empirically for the
+    simhash family on XLA — row-blocked and fused matmuls agree bitwise).
+    ``n_rows`` may exceed ``store.n`` (mesh row padding): overflow rows
+    gather the store's -1 sentinel, read zero rows, and sketch to exactly
+    the words the resident path computes for its zero padding.  Only one
+    pool-sized feature chunk is device-resident at a time; the (n, m)
+    word block itself is an O(n) summary outside the feature budget.
+    """
+    chunk = max(store.page_rows,
+                min(store.pool_pages * store.page_rows, n_rows))
+    fn = words_fns.get(chunk)
+    if fn is None:
+        @jax.jit
+        def words_chunk(x, rep):
+            rep_seed = jnp.asarray(rep, jnp.uint32) ^ jnp.uint32(cfg.seed)
+            return lsh_lib.sketch(PointFeatures(dense=x), cfg.family,
+                                  rep_seed=rep_seed)
+        fn = words_fns.setdefault(chunk, words_chunk)
+    idx = np.arange(n_rows, dtype=np.int64)
+    idx[store.n:] = -1
+    parts = []
+    for c0 in range(0, n_rows, chunk):
+        blk = idx[c0:c0 + chunk]
+        if blk.size < chunk:
+            blk = np.concatenate(
+                [blk, np.full(chunk - blk.size, -1, np.int64)])
+        parts.append(fn(store.gather(blk).dense, rep))
+    words = jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+    return words[:n_rows]
+
+
+class _PagedBackend:
+    """Single-process build over a host-paged feature table: ``n`` bounded
+    by HOST memory, peak device-resident *feature* bytes bounded by the
+    store's page-pool budget (``StarsConfig.feature_pool_bytes``).
+
+    Windowed sources run each repetition in three streamed stages:
+
+      1. **sketch**: stream the hash words through the store in pool-sized
+         row chunks (``_stream_sketch_words``) — bit-equal to the resident
+         one-shot sketch because the projection is row-independent,
+      2. **grid**: build the window grid on device from the words — gids,
+         validity and bucket ids are O(n) summaries that stay pinned (only
+         the O(n*d) feature table pages),
+      3. **score**: walk the grid in window-row chunks sized so one
+         chunk's gathered member block fits the page pool, gather each
+         chunk's rows through the store, and run the SAME
+         ``_score_windows`` with ``row_offset=chunk_start,
+         total_rows=n_windows, stride=1`` — the global-row-keyed subset
+         mode whose PRNG/mask equivalence the mesh backend already proves
+         edge-for-edge — folding into the slabs chunk by chunk.
+
+    Sentinel slots of a padded final chunk gather ZERO rows (the store's
+    -1 contract, identical to the mesh fetch's zero-fill) and carry
+    valid=False, so they never score.  Per-chunk counters concatenate like
+    per-shard mesh counters and host-sum to the resident totals; the
+    'allpairs' source streams its blocked sweep through the store with the
+    same masks as ``AllPairsSource``.  tests/test_store.py holds the build
+    to graph AND counter equality with the resident backend, and to the
+    pool bound via ``transfer_stats['feature_page_peak_bytes']``.
+    """
+
+    def __init__(self, store: PagedFeatureStore, cfg: StarsConfig,
+                 learned_apply: Optional[Callable]):
+        windowed = ("lsh-stars", "sorting-stars",
+                    "lsh-allpairs", "sorting-allpairs")
+        if cfg.source_name not in windowed + ("allpairs",):
+            raise ValueError(
+                f"unknown candidate source {cfg.source_name!r}; "
+                f"known: {sorted(CANDIDATE_SOURCES)}")
+        if cfg.hamming_prefilter_bits > 0:
+            raise NotImplementedError(
+                "feature_store='paged' does not support the Hamming "
+                "prefilter (its packed words would need their own paging); "
+                "unset hamming_prefilter_bits or use feature_store="
+                "'resident'")
+        self.store = store
+        self.cfg = cfg
+        self.measure_fn = pairwise_similarity(
+            cfg.measure, alpha=cfg.mixture_alpha,
+            learned_apply=learned_apply)
+        self._words_fns: Dict = {}   # chunk-rows -> streamed sketch jit
+        self._win_fns: Dict = {}     # n -> jitted grid builder
+        self._chunk_fns: Dict = {}   # (C, nw, masks...) -> scoring chunk jit
+        self._block_fns: Dict = {}   # (block, new_from) -> allpairs jit
+
+    @property
+    def n(self) -> int:
+        return self.store.n
+
+    # slab state: identical to the single-device backend (slabs are O(n*k)
+    # device arrays, deliberately outside the feature pool budget)
+    def init_state(self, capacity: int) -> acc_lib.EdgeAccumulator:
+        return acc_lib.EdgeAccumulator.create(self.n, capacity)
+
+    def place_state(self, state: acc_lib.EdgeAccumulator):
+        return state
+
+    def grow_state(self, state, n: int, capacity: int):
+        return acc_lib.grow(state, n, capacity)
+
+    def trim(self, state: acc_lib.EdgeAccumulator) -> acc_lib.EdgeAccumulator:
+        return state
+
+    def cluster_mesh(self):
+        if not hasattr(self, "_cluster_mesh"):
+            self._cluster_mesh = jax.make_mesh((1,), ("data",))
+        return self._cluster_mesh, "data"
+
+    # -- windowed repetitions ------------------------------------------- #
+    def _chunk_rows(self, nw: int) -> int:
+        """Window rows per scoring chunk: the largest count whose gathered
+        (C * window, d) member block fits the page-pool budget."""
+        row_bytes = self.cfg.window * self.store.d * self.store.dtype.itemsize
+        return int(max(1, min(nw, self.store.pool_bytes // max(row_bytes, 1))))
+
+    def _win_fn(self):
+        n, fn = self.store.n, None
+        fn = self._win_fns.get(n)
+        if fn is None:
+            from repro.core.stars import _rep_keys, _rep_window_grid
+            cfg = self.cfg
+
+            @jax.jit
+            def build_grid(words, rep):
+                k_tie, k_shift, _, _ = _rep_keys(cfg, rep)
+                return _rep_window_grid(cfg, words, k_tie, k_shift)
+
+            fn = self._win_fns.setdefault(n, build_grid)
+        return fn
+
+    def _bind_chunk(self, C: int, nw: int, new_from: int,
+                    refresh_below: int, refresh_fraction: float):
+        key = (C, nw, new_from, refresh_below, refresh_fraction)
+        fn = self._chunk_fns.get(key)
+        if fn is not None:
+            return fn
+        from repro.core import windows as win_lib
+        from repro.core.stars import _rep_keys, _score_windows
+        cfg = self.cfg
+        w = cfg.window
+        measure_fn = self.measure_fn
+        has_probs = refresh_below > 0
+
+        @functools.partial(jax.jit, donate_argnums=0)
+        def chunk_step(state, block, gid_c, valid_c, bucket_c, rep, row0,
+                       *rest):
+            probs = rest[0] if has_probs else None
+            win = win_lib.Windows(gid=gid_c, valid=valid_c, bucket=bucket_c)
+            feats = PointFeatures(dense=block.reshape(C * w, -1))
+            member_index = jnp.arange(C * w, dtype=jnp.int32).reshape(C, w)
+            _, _, k_lead, k_refresh = _rep_keys(cfg, rep)
+            out = _score_windows(cfg, feats, measure_fn, None, win, k_lead,
+                                 new_from=new_from,
+                                 refresh_below=refresh_below,
+                                 refresh_fraction=refresh_fraction,
+                                 k_refresh=k_refresh, row_offset=row0,
+                                 total_rows=nw, stride=1,
+                                 member_index=member_index,
+                                 refresh_probs=probs)
+            state = acc_lib.accumulate(state, out["src"], out["dst"],
+                                       out["w"], out["emit"])
+            return state, {k: out[k] for k in
+                           ("comparisons", "emitted", "prefilter_ops",
+                            "scored_windows")}
+
+        return self._chunk_fns.setdefault(key, chunk_step)
+
+    def run_round(self, state, rep_index: int, new_from: int,
+                  refresh_below: int = 0, refresh_fraction: float = 1.0,
+                  refresh_probs=None):
+        if self.cfg.source_name == "allpairs":
+            if refresh_below > 0:
+                raise ValueError("the exact 'allpairs' source has no "
+                                 "sampling staleness to refresh")
+            return self._run_allpairs(state, new_from)
+        rep = jnp.int32(rep_index)
+        words = _stream_sketch_words(self.store, self.cfg, rep,
+                                     self._words_fns, self.store.n)
+        win = self._win_fn()(words, rep)
+        nw = int(win.gid.shape[0])
+        C = self._chunk_rows(nw)
+        pad = (-nw) % C
+        gid = jnp.pad(win.gid, ((0, pad), (0, 0)), constant_values=-1)
+        valid = jnp.pad(win.valid, ((0, pad), (0, 0)))
+        bucket = jnp.pad(win.bucket, ((0, pad), (0, 0)),
+                         constant_values=np.uint32(0xFFFFFFFF))
+        probs = ()
+        if refresh_below > 0:
+            if refresh_probs is None:
+                refresh_probs = jnp.full((nw,), refresh_fraction,
+                                         jnp.float32)
+            probs = (jnp.asarray(refresh_probs, jnp.float32),)
+        chunk_fn = self._bind_chunk(C, nw, new_from, refresh_below,
+                                    refresh_fraction)
+        per_chunk = []
+        for c0 in range(0, nw, C):
+            gid_c = gid[c0:c0 + C]
+            block = self.store.gather(
+                np.asarray(jax.device_get(gid_c))).dense
+            state, cnt = chunk_fn(state, block, gid_c,
+                                  valid[c0:c0 + C], bucket[c0:c0 + C],
+                                  rep, jnp.int32(c0), *probs)
+            per_chunk.append(cnt)
+        counters = {k: jnp.concatenate([jnp.ravel(c[k]) for c in per_chunk])
+                    for k in per_chunk[0]}
+        return state, counters
+
+    # -- the exact blocked sweep ---------------------------------------- #
+    def _run_allpairs(self, state, new_from: int):
+        cfg = self.cfg
+        n = self.store.n
+        block = min(cfg.allpairs_block, max(n, 1))
+        key = (block, new_from)
+        block_fn = self._block_fns.get(key)
+        if block_fn is None:
+            measure_fn = self.measure_fn
+            r1 = cfg.r1
+
+            @functools.partial(jax.jit, donate_argnums=0)
+            def block_step(state, fa, fb, a0, b0):
+                ids_a = a0 + jnp.arange(block, dtype=jnp.int32)
+                ids_b = b0 + jnp.arange(block, dtype=jnp.int32)
+                sims = measure_fn(PointFeatures(dense=fa),
+                                  PointFeatures(dense=fb))
+                aa = jnp.broadcast_to(ids_a[:, None], (block, block))
+                bb = jnp.broadcast_to(ids_b[None, :], (block, block))
+                keep = (aa < bb) & (bb < n)
+                if new_from > 0:
+                    keep &= bb >= jnp.int32(new_from)
+                if r1 is not None:
+                    keep &= sims > r1
+                return acc_lib.accumulate(state, aa, bb, sims, keep)
+
+            block_fn = self._block_fns.setdefault(key, block_step)
+        # same clamped block ids as AllPairsSource (rows past n re-read
+        # row n-1; the keep mask discards them) — sequential blocks give
+        # near-perfect page locality
+        for a0 in range(0, n, block):
+            fa = self.store.gather(
+                np.minimum(np.arange(a0, a0 + block), n - 1)).dense
+            for b0 in range(a0, n, block):
+                if new_from > 0 and b0 + block <= new_from:
+                    continue
+                fb = self.store.gather(
+                    np.minimum(np.arange(b0, b0 + block), n - 1)).dense
+                state = block_fn(state, fa, fb, jnp.int32(a0),
+                                 jnp.int32(b0))
+        comps = n * (n - 1) // 2 - new_from * (new_from - 1) // 2
+        return state, {"comparisons": comps}
+
+    def extend(self, new_features: PointFeatures) -> None:
+        self.store.append(new_features)
+        self._win_fns = {}          # shapes changed; rebind lazily
+        self._chunk_fns = {}
+        self._block_fns = {}
 
 
 class _MeshBackend:
@@ -323,15 +664,13 @@ class _MeshBackend:
     EMIT_CAPACITY_FACTOR = 2.0
     FETCH_CAPACITY_FACTOR = 2.0
 
-    def __init__(self, features: PointFeatures, cfg: StarsConfig, mesh):
+    def __init__(self, store: FeatureStore, cfg: StarsConfig, mesh):
         windowed = ("lsh-stars", "sorting-stars",
                     "lsh-allpairs", "sorting-allpairs")
         if cfg.source_name not in windowed:
             raise NotImplementedError(
                 f"mesh backend supports the windowed repetition sources "
                 f"{windowed}, got {cfg.source_name!r}")
-        if features.dense is None:
-            raise ValueError("mesh backend requires dense features")
         if cfg.measure not in ("cosine", "dot"):
             raise NotImplementedError(
                 "mesh backend scores cosine/dot (the tera-scale setting)")
@@ -341,8 +680,25 @@ class _MeshBackend:
         self.p = mesh.shape[self.axis]
         self.measure_fn = pairwise_similarity(cfg.measure,
                                               alpha=cfg.mixture_alpha)
-        self._n = int(features.dense.shape[0])
-        self._place_features(jnp.asarray(features.dense))
+        if not isinstance(store, FeatureStore):
+            # direct construction with raw features (tests, tools) — the
+            # GraphBuilder path always hands a store
+            store = ResidentFeatureStore(as_point_features(store))
+        self.store = store
+        self._paged = isinstance(store, PagedFeatureStore)
+        self._n = store.n
+        self._d = store.d
+        if self._paged:
+            # features stay on HOST; the sketch streams pool-sized row
+            # chunks through the store and the scoring-phase fetch gathers
+            # each shard's window rows the same way (no resident table)
+            self.dense = None
+            self._words_fns: Dict = {}   # chunk-rows -> streamed sketch jit
+        else:
+            self._place_features(jnp.asarray(store.features.dense))
+            # single copy: the store's checkpoint/extend views alias the
+            # padded sharded table instead of keeping the original alive
+            store._rebind(PointFeatures(dense=self.dense), self._n)
         self._sketches: Dict = {}   # n -> sketch_fn (mask-independent)
         self._offsets: Dict = {}    # n -> offset_fn (window shift per rep)
         self._fetch_tables: Dict = {}   # n -> row-sharded fetch table
@@ -405,81 +761,50 @@ class _MeshBackend:
     def _bind(self, new_from: int, refresh_below: int = 0,
               refresh_fraction: float = 1.0):
         if self._n not in self._sketches:
-            self._sketches[self._n] = self._bind_sketch()
+            self._sketches[self._n] = (self._bind_keys() if self._paged
+                                       else self._bind_sketch())
         if self._n not in self._offsets:
             self._offsets[self._n] = self._bind_offset()
-        if self._n not in self._fetch_tables:
+        if not self._paged and self._n not in self._fetch_tables:
             self._fetch_tables[self._n] = self._build_fetch_table()
         key = (self._n, new_from, refresh_below, refresh_fraction)
         if key not in self._bound:
             self._bound[key] = self._bind_score(new_from, refresh_below,
                                                 refresh_fraction)
         return (self._sketches[self._n], self._offsets[self._n],
-                self._fetch_tables[self._n], self._bound[key])
+                self._fetch_tables.get(self._n), self._bound[key])
 
     def _bind_sketch(self):
         """The per-shard sketch into BIT-PACKED sort keys.
 
-        The sort key is the big-endian field stream (hash fields, top
-        ``TIEBREAK_BITS`` of the random tiebreak, zero pad, gid) packed to
-        ``ceil(bits/32)`` words (``sorter.pack_bit_fields``) — the wire
-        carries only the bits the order actually uses instead of one full
-        int32 word per hash word plus a payload word.  The trailing gid
-        field doubles as the sort payload AND the tiebreak-of-last-resort
-        (``distributed_window_blocks`` ``payload_bits`` mode), matching the
-        single-device stable sort's ascending-gid tie resolution; its width
-        ``int(n).bit_length()`` keeps the all-ones sentinel value out of
-        the real gid range.  Pad rows carry all-ones words: they sort
-        strictly after every real key (real keys differ in the gid field
-        at least) and decode to gid -1.
-        """
-        from repro.core.stars import TIEBREAK_BITS
-        from repro.distributed.sorter import pack_bit_fields
+        Sketch + the shared ``_sketch_keys`` packing program, fused in one
+        jit over the resident sharded table (see ``_sketch_keys`` for the
+        key layout and the pad-row sentinel rule)."""
         cfg = self.cfg
         n = self._n
-        gid_bits = int(n).bit_length()
 
         @jax.jit
         def sketch_phase(x, rep):
-            from repro.core.stars import _rep_keys
             rep_seed = jnp.asarray(rep, jnp.uint32) ^ jnp.uint32(cfg.seed)
-            k_tie, _, _, _ = _rep_keys(cfg, rep)
             words = lsh_lib.sketch(PointFeatures(dense=x), cfg.family,
                                    rep_seed=rep_seed)
-            n_pad = words.shape[0]
-            gids = jnp.arange(n_pad, dtype=jnp.int32)
-            real = gids < n
-            # the SAME (n,) tiebreak draw as the single-device path, looked
-            # up per gid (pad rows get all-ones keys and gid -1: they sort
-            # to the tail and never enter the permutation)
-            tb = jax.random.bits(k_tie, (n,), jnp.uint32)
-            tb = jnp.where(real, tb[jnp.minimum(gids, n - 1)],
-                           jnp.uint32(0xFFFFFFFF))
-            if cfg.mode == "lsh":
-                bucket = lsh_lib.bucket_key(words, cfg.family)
-                # full-width leading field: key word 0 IS the bucket id,
-                # which distributed_window_blocks(bucket_word=0) relies on
-                fields, widths = [bucket], [32]
-            elif cfg.family.kind in ("simhash", "mixture"):
-                bucket = jnp.zeros((n_pad,), jnp.uint32)
-                m = words.shape[1]
-                fields = [words[:, j].astype(jnp.uint32) for j in range(m)]
-                widths = [1] * m                 # one BIT per hash word
-            else:
-                bucket = jnp.zeros((n_pad,), jnp.uint32)
-                m = words.shape[1]
-                fields = [words[:, j] for j in range(m)]
-                widths = [32] * m                # full-width lexicographic
-            tie = tb >> jnp.uint32(32 - TIEBREAK_BITS)
-            pad = (-(sum(widths) + TIEBREAK_BITS + gid_bits)) % 32
-            fields += [tie, jnp.zeros((n_pad,), jnp.uint32),
-                       gids.astype(jnp.uint32)]
-            widths += [TIEBREAK_BITS, pad, gid_bits]
-            keys = pack_bit_fields(fields, widths)
-            keys = jnp.where(real[:, None], keys, jnp.uint32(0xFFFFFFFF))
-            return keys, jnp.where(real, gids, -1), bucket
+            return _sketch_keys(cfg, n, words, rep)
 
         return sketch_phase
+
+    def _bind_keys(self):
+        """Paged variant of ``_bind_sketch``: the words arrive already
+        computed (streamed through the store in pool-sized chunks,
+        ``_stream_sketch_words``); only the packing runs here.  Same
+        integer program on bit-equal words -> identical sort keys."""
+        cfg = self.cfg
+        n = self._n
+
+        @jax.jit
+        def keys_phase(words, rep):
+            return _sketch_keys(cfg, n, words, rep)
+
+        return keys_phase
 
     def _bind_offset(self):
         """Tiny per-repetition program: the window grid's slot offset.
@@ -547,7 +872,7 @@ class _MeshBackend:
         cfg = self.cfg
         n = self._n
         w = cfg.window
-        d = int(self.dense.shape[1])
+        d = int(self._d)
         p = self.p
         nw, rps, _ = win_lib.shard_row_layout(cfg.mode, n, w, self.p)
         axis = self.axis
@@ -598,7 +923,14 @@ class _MeshBackend:
         from repro.distributed.sorter import distributed_window_blocks
         sketch_fn = self._sketches[self._n]
         offset_fn = self._offsets[self._n]
-        keys, gids, _bucket = sketch_fn(self.dense, rep)
+        if self._paged:
+            words = _stream_sketch_words(self.store, self.cfg, rep,
+                                         self._words_fns,
+                                         self._pad_rows(self._n))
+            words = jax.device_put(words, self._feature_sharding)
+            keys, gids, _bucket = sketch_fn(words, rep)
+        else:
+            keys, gids, _bucket = sketch_fn(self.dense, rep)
         _, _, total_slots = win_lib.shard_row_layout(
             self.cfg.mode, self._n, self.cfg.window, self.p)
         return distributed_window_blocks(
@@ -621,6 +953,24 @@ class _MeshBackend:
                 refresh_fraction, jnp.float32)
         return (jnp.asarray(refresh_probs, jnp.float32),)
 
+    def _fetch_rows_paged(self, blk_gid):
+        """Owner-keyed fetch without a device-resident table.
+
+        The slot gids come back to the host and the paged store serves the
+        rows (metered as ``feature_page_*`` traffic instead of all_to_all
+        volume); the block goes back row-sharded.  Invalid slots (gid -1)
+        read ZERO rows with ok False — exactly the contract
+        ``fetch_rows_all_to_all`` applies to dropped/invalid slots, so the
+        scoring program is unchanged.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        gids = np.asarray(jax.device_get(blk_gid))
+        rows = jax.device_put(self.store.gather(gids).dense,
+                              self._feature_sharding)
+        ok = jax.device_put(jnp.asarray(gids >= 0),
+                            NamedSharding(self.mesh, P(self.axis)))
+        return rows, ok
+
     def run_round(self, state, rep_index: int, new_from: int,
                   refresh_below: int = 0, refresh_fraction: float = 1.0,
                   refresh_probs=None):
@@ -630,9 +980,13 @@ class _MeshBackend:
             new_from, refresh_below, refresh_fraction)
         rep = jnp.int32(rep_index)
         blk_gid, blk_bucket, drop_sort = self._sort_round(rep)
-        rows, rows_ok, drop_fetch = fetch_rows_all_to_all(
-            fetch_table, blk_gid, mesh=self.mesh, axis=self.axis,
-            capacity_factor=self.FETCH_CAPACITY_FACTOR)
+        if self._paged:
+            rows, rows_ok = self._fetch_rows_paged(blk_gid)
+            drop_fetch = jnp.zeros((1,), jnp.int32)
+        else:
+            rows, rows_ok, drop_fetch = fetch_rows_all_to_all(
+                fetch_table, blk_gid, mesh=self.mesh, axis=self.axis,
+                capacity_factor=self.FETCH_CAPACITY_FACTOR)
         probs = self._probs_arg(refresh_below, refresh_fraction,
                                 refresh_probs)
         (src, dst, wts, emit, comparisons, emitted, pref_ops,
@@ -671,6 +1025,18 @@ class _MeshBackend:
         """
         from repro.distributed.stars_dist import (accumulate_all_to_all,
                                                   fetch_rows_all_to_all)
+        if self._paged:
+            # the fetch isn't an exchange here (the store serves rows from
+            # host), so there is nothing to coalesce; two sequential
+            # rounds are the same fold order-equivalence the resident
+            # pair relies on
+            state, counters_a = self.run_round(
+                state, rep_index, new_from, refresh_below, refresh_fraction,
+                refresh_probs[0])
+            state, counters_b = self.run_round(
+                state, rep_index + 1, new_from, refresh_below,
+                refresh_fraction, refresh_probs[1])
+            return state, counters_a, counters_b
         _, _, fetch_table, score_fn = self._bind(
             new_from, refresh_below, refresh_fraction)
         rep_a, rep_b = jnp.int32(rep_index), jnp.int32(rep_index + 1)
@@ -702,19 +1068,23 @@ class _MeshBackend:
         return state, counters_a, counters_b
 
     def extend(self, new_features: PointFeatures) -> None:
-        if new_features.dense is None:
-            raise ValueError("mesh backend requires dense features")
-        old_n = self._n
-        new_rows = jnp.asarray(new_features.dense, self.dense.dtype)
-        self._n = old_n + int(new_rows.shape[0])
-        pad = self._pad_rows(self._n) - self._n          # pad-and-reshard
+        if self._paged:
+            self.store.append(new_features)
+            self._n = self.store.n
+        else:
+            old_n = self._n
+            new_rows = jnp.asarray(new_features.dense, self.dense.dtype)
+            self._n = old_n + int(new_rows.shape[0])
+            pad = self._pad_rows(self._n) - self._n      # pad-and-reshard
 
-        @functools.partial(jax.jit, out_shardings=self._feature_sharding)
-        def repad(old, new):
-            table = jnp.concatenate([old[:old_n], new], axis=0)
-            return jnp.pad(table, ((0, pad), (0, 0)))
+            @functools.partial(jax.jit,
+                               out_shardings=self._feature_sharding)
+            def repad(old, new):
+                table = jnp.concatenate([old[:old_n], new], axis=0)
+                return jnp.pad(table, ((0, pad), (0, 0)))
 
-        self.dense = repad(self.dense, new_rows)
+            self.dense = repad(self.dense, new_rows)
+            self.store._rebind(PointFeatures(dense=self.dense), self._n)
         self._sketches = {}         # shapes changed; rebind lazily
         self._offsets = {}
         self._fetch_tables = {}
@@ -818,12 +1188,32 @@ class GraphBuilder:
                 f"sample zero windows and repair nothing")
         self.cfg = cfg
         self._learned_apply = learned_apply
+        store = as_feature_store(features, cfg)
+        self._store = store
+        paged = isinstance(store, PagedFeatureStore)
         if mesh is not None:
-            self._backend = _MeshBackend(as_point_features(features), cfg,
-                                         mesh)
+            # validate the store/backend contract HERE, naming the
+            # offending constructor argument — not deep inside a backend
+            # phase where the caller can't see which input was wrong
+            if store.d is None:
+                raise ValueError(
+                    "mesh backend requires dense features: the features= "
+                    "argument carries no dense block (set-only features "
+                    "run on the single-device 'resident' store; supported "
+                    "feature stores on a mesh: 'resident' and 'paged', "
+                    "both dense-only)")
+            if paged and cfg.hamming_prefilter_bits > 0:
+                raise NotImplementedError(
+                    "cfg.feature_store='paged' does not support the "
+                    "Hamming prefilter on a mesh (the packed prefilter "
+                    "words ride the resident fetch table); unset "
+                    "hamming_prefilter_bits or use feature_store="
+                    "'resident'")
+            self._backend = _MeshBackend(store, cfg, mesh)
+        elif paged:
+            self._backend = _PagedBackend(store, cfg, learned_apply)
         else:
-            self._backend = _SingleDeviceBackend(as_point_features(features),
-                                                 cfg, learned_apply)
+            self._backend = _SingleDeviceBackend(store, cfg, learned_apply)
         self._reps_done = 0
         self._counters: List[Dict] = []
         self._stats_base: Dict[str, int] = {}
@@ -855,11 +1245,33 @@ class GraphBuilder:
         # double-allocates the dominant device structure.
         self._state: Optional[acc_lib.EdgeAccumulator] = None
 
+    def _validate_extend(self, nf: PointFeatures) -> None:
+        """Surface store/backend contract violations up front, naming the
+        offending argument — not from deep inside a backend phase."""
+        store = self._store
+        if nf.dense is None and store.d is not None:
+            raise ValueError(
+                f"extend(new_features=...): no dense block, but the "
+                f"session's {self.cfg.feature_store!r} feature store holds "
+                f"a dense (n, {store.d}) table")
+        if (nf.dense is not None and store.dtype is not None
+                and nf.dense.dtype != store.dtype):
+            raise ValueError(
+                f"extend(new_features=...): dense dtype {nf.dense.dtype} "
+                f"does not match the session's feature store dtype "
+                f"{store.dtype} (append never silently casts — the casted "
+                f"rows would score differently than the originals)")
+
     # ------------------------------------------------------------------ #
     @property
     def n(self) -> int:
         """Number of points currently in the session."""
         return self._backend.n
+
+    @property
+    def feature_store(self) -> FeatureStore:
+        """The session's FeatureStore (resident or paged)."""
+        return self._store
 
     @property
     def reps_done(self) -> int:
@@ -946,8 +1358,23 @@ class GraphBuilder:
                                  "new-vs-all sweep per extension")
         else:
             reps = self.cfg.r if reps is None else reps
+        # wrap WITHOUT device placement: jnp.asarray would silently
+        # downcast a float64 host array before the dtype check below
+        # could see it
+        if isinstance(new_features, PointFeatures):
+            nf = new_features
+        elif isinstance(new_features, (jax.Array, np.ndarray)):
+            nf = PointFeatures(dense=new_features)
+        else:
+            nf = PointFeatures(dense=np.asarray(new_features))
+        if nf.n == 0:
+            # nothing to score — and the staleness watermark must NOT
+            # advance (old_n == n here, so advancing would mark every
+            # point "old" without having run the rounds that cover it)
+            return self
+        self._validate_extend(nf)
         old_n = self.n
-        self._backend.extend(as_point_features(new_features))
+        self._backend.extend(nf)
         self._refresh_below = old_n
         self._run_rounds(reps, new_from=old_n, progress=progress)
         # the automatic decaying-rescore policy ('allpairs' is exact per

@@ -50,6 +50,7 @@ from repro.core.spanner import Graph
 from repro.graph import accumulator as acc_lib
 from repro.kernels import ops as kernel_ops
 from repro.similarity.measures import PointFeatures
+from repro.similarity.store import masked_take
 
 # Random sort-tiebreak resolution, in bits.  The tiebreak only has to
 # randomize the relative order of equal-sketch points; 20 bits make a
@@ -128,6 +129,17 @@ class StarsConfig:
     # (tests/test_mesh_parity.py exercises both).  Single-device builds
     # never ship weights, so the flag only affects the mesh backend.
     exact_weights: bool = True
+    # Feature-store backend (repro.similarity.store): 'resident' keeps the
+    # (n, d) table device-resident (today's semantics, the default);
+    # 'paged' keeps it in HOST memory as ``feature_page_rows``-row pages
+    # and serves gathers through a device LRU page pool bounded by
+    # ``feature_pool_bytes`` — so n can exceed device memory at
+    # edge-for-edge-identical output (window scoring streams in
+    # pool-sized window-row chunks; page traffic is metered under
+    # ``transfer_stats['feature_page_*']``).  Dense measures only.
+    feature_store: str = "resident"
+    feature_page_rows: int = 512
+    feature_pool_bytes: int = 64 << 20
 
     @property
     def source_name(self) -> str:
@@ -176,8 +188,8 @@ def _score_tile(measure_fn, features: PointFeatures,
                 a_gid: jax.Array, b_gid: jax.Array,
                 measure_name: str = "") -> jax.Array:
     """Similarity tile between gathered id tiles a_gid (..., A), b_gid (..., B)."""
-    fa = features.take(jnp.maximum(a_gid, 0))
-    fb = features.take(jnp.maximum(b_gid, 0))
+    fa = masked_take(features, a_gid)
+    fb = masked_take(features, b_gid)
     if measure_name in ("cosine", "dot") and fa.dense is not None:
         # Route through the fused leader_score kernel (Pallas on TPU,
         # jnp reference on CPU): normalize+matmul+mask in one VMEM pass.
@@ -377,6 +389,33 @@ def _rep_keys(cfg: StarsConfig, rep_index: jax.Array):
     return k_tie, k_shift, k_lead, k_refresh
 
 
+def _rep_window_grid(cfg: StarsConfig, words: jax.Array,
+                     k_tie: jax.Array,
+                     k_shift: jax.Array) -> win_lib.Windows:
+    """One repetition's window grid from its sketch words.
+
+    The sort-and-window half of :func:`_rep_candidates`, factored out so
+    the paged backend (core/builder.py ``_PagedBackend``) can build the
+    IDENTICAL grid from words it streamed through the host feature store
+    (the sketch projection is row-independent, so chunked words are
+    bit-equal to the one-shot sketch).
+    """
+    n = words.shape[0]
+    # keep only the top TIEBREAK_BITS: value order is identical to the
+    # mesh backend's packed 20-bit tiebreak field (builder._sketch_keys),
+    # and gid remains the final resolver of residual ties on both paths
+    tiebreak = jax.random.bits(k_tie, (n,), jnp.uint32) \
+        & jnp.uint32(((1 << TIEBREAK_BITS) - 1) << (32 - TIEBREAK_BITS))
+    if cfg.mode == "lsh":
+        bucket = lsh_lib.bucket_key(words, cfg.family)
+        return win_lib.lsh_windows(bucket, window=cfg.window,
+                                   tiebreak=tiebreak)
+    if cfg.mode == "sorting":
+        return win_lib.sorting_lsh_windows(
+            words, window=cfg.window, shift_key=k_shift, tiebreak=tiebreak)
+    raise ValueError(f"unknown mode {cfg.mode!r}")
+
+
 def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
                     measure_fn, prefilter, rep_index: jax.Array, *,
                     new_from: int = 0, refresh_below: int = 0,
@@ -408,21 +447,7 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
     k_tie, k_shift, k_lead, k_refresh = _rep_keys(cfg, rep_index)
 
     words = lsh_lib.sketch(features, cfg.family, rep_seed=rep_seed)
-    n = words.shape[0]
-    # keep only the top TIEBREAK_BITS: value order is identical to the
-    # mesh backend's packed 20-bit tiebreak field (builder._bind_sketch),
-    # and gid remains the final resolver of residual ties on both paths
-    tiebreak = jax.random.bits(k_tie, (n,), jnp.uint32) \
-        & jnp.uint32(((1 << TIEBREAK_BITS) - 1) << (32 - TIEBREAK_BITS))
-
-    if cfg.mode == "lsh":
-        bucket = lsh_lib.bucket_key(words, cfg.family)
-        win = win_lib.lsh_windows(bucket, window=cfg.window, tiebreak=tiebreak)
-    elif cfg.mode == "sorting":
-        win = win_lib.sorting_lsh_windows(
-            words, window=cfg.window, shift_key=k_shift, tiebreak=tiebreak)
-    else:
-        raise ValueError(f"unknown mode {cfg.mode!r}")
+    win = _rep_window_grid(cfg, words, k_tie, k_shift)
 
     return _score_windows(cfg, features, measure_fn, prefilter, win, k_lead,
                           new_from=new_from, refresh_below=refresh_below,
@@ -515,8 +540,8 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
         lead_fidx = jnp.take_along_axis(fidx, leader_slot, axis=1)
         lead_gid = jnp.take_along_axis(win.gid, leader_slot, axis=1)
         lead_bucket = jnp.take_along_axis(win.bucket, leader_slot, axis=1)
-        lead = features.take(jnp.maximum(lead_fidx, 0)).dense
-        memb = features.take(jnp.maximum(fidx, 0)).dense
+        lead = masked_take(features, lead_fidx).dense
+        memb = masked_take(features, fidx).dense
         if refresh:
             keep_win = _refresh_window_sample(
                 k_refresh, nw, refresh_fraction, row_offset, total_rows,

@@ -78,6 +78,15 @@ _BIG = jnp.int32(2**31 - 1)
 # ONLY device->host payload is the final (n,) int32 label vector —
 # ``edge_fetches`` / ``bytes`` stay untouched by any number of
 # clusterings, which is the tentpole invariant tests assert.
+# ``feature_page_*`` meters the out-of-core feature path
+# (repro.similarity.store.PagedFeatureStore): ``feature_page_bytes``
+# counts host->device page-fault traffic (faults * page bytes — the paged
+# analogue of ``all_to_all_bytes``, deterministic given shapes/seed and
+# gated in benchmarks/run.py --check), ``feature_page_faults`` /
+# ``feature_page_hits`` the pool miss/re-use split, and
+# ``feature_page_peak_bytes`` the high-water device-resident pool bytes —
+# the bounded-peak invariant (<= the configured pool budget) tests
+# assert for builds whose table exceeds device residency.
 transfer_stats: Dict[str, int] = {"edge_fetches": 0, "bytes": 0,
                                   "checkpoint_fetches": 0,
                                   "checkpoint_bytes": 0,
@@ -87,7 +96,11 @@ transfer_stats: Dict[str, int] = {"edge_fetches": 0, "bytes": 0,
                                   "delta_bytes": 0,
                                   "delta_rows": 0,
                                   "cluster_label_fetches": 0,
-                                  "cluster_label_bytes": 0}
+                                  "cluster_label_bytes": 0,
+                                  "feature_page_bytes": 0,
+                                  "feature_page_faults": 0,
+                                  "feature_page_hits": 0,
+                                  "feature_page_peak_bytes": 0}
 
 
 def reset_transfer_stats() -> None:

@@ -7,6 +7,13 @@ from repro.similarity.measures import (
     pairwise_similarity,
 )
 from repro.similarity.learned import LearnedSimilarity, TwoTowerConfig
+from repro.similarity.store import (
+    FeatureStore,
+    PagedFeatureStore,
+    ResidentFeatureStore,
+    make_feature_store,
+    masked_take,
+)
 
 __all__ = [
     "PointFeatures",
@@ -17,4 +24,9 @@ __all__ = [
     "pairwise_similarity",
     "LearnedSimilarity",
     "TwoTowerConfig",
+    "FeatureStore",
+    "PagedFeatureStore",
+    "ResidentFeatureStore",
+    "make_feature_store",
+    "masked_take",
 ]

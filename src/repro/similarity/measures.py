@@ -64,7 +64,11 @@ class PointFeatures:
         """Append another batch of points (GraphBuilder.extend).
 
         Both batches must carry the same feature blocks with matching
-        trailing shapes; appended points get the next gids.
+        trailing shapes AND dtypes; appended points get the next gids.  A
+        dtype mismatch raises rather than silently casting: the casted
+        rows would score differently than the caller's originals while
+        the emitted gids silently refer to them (GraphBuilder.extend
+        surfaces this with the offending argument named).
         """
         def cat(x, y, name):
             if (x is None) != (y is None):
@@ -75,7 +79,10 @@ class PointFeatures:
             if x.shape[1:] != y.shape[1:]:
                 raise ValueError(f"{name} trailing shapes differ: "
                                  f"{x.shape[1:]} vs {y.shape[1:]}")
-            return jnp.concatenate([x, y.astype(x.dtype)], axis=0)
+            if x.dtype != y.dtype:
+                raise ValueError(f"{name} dtypes differ: {x.dtype} vs "
+                                 f"{y.dtype} (concat never silently casts)")
+            return jnp.concatenate([x, y], axis=0)
         return PointFeatures(
             dense=cat(self.dense, other.dense, "dense"),
             set_idx=cat(self.set_idx, other.set_idx, "set_idx"),

@@ -1,0 +1,325 @@
+"""FeatureStore: the one interface every feature gather goes through.
+
+The paper's claim is *tera-scale* graph building, but a device-resident
+(n, d) table caps n at device memory.  This module makes feature access a
+pluggable layer with two backends behind one protocol:
+
+  * :class:`ResidentFeatureStore` — today's device array (dense and/or set
+    blocks), bit-exact, the default.  Zero overhead: ``gather`` is
+    ``PointFeatures.take``.
+  * :class:`PagedFeatureStore` — the feature table lives in HOST memory as
+    fixed-size row pages; ``gather`` faults the needed pages into a bounded
+    device-resident LRU page pool and serves gathers from it.  Peak
+    device-resident FEATURE bytes are bounded by ``pool_bytes`` no matter
+    how large n grows (degree slabs, sketch words and window grids stay
+    device-pinned — they are O(n) summaries, not O(n * d) features).  Page
+    traffic is metered in ``graph.accumulator.transfer_stats`` under
+    ``feature_page_bytes`` / ``feature_page_faults`` / ``feature_page_hits``
+    / ``feature_page_peak_bytes``, next to the all_to_all accounting.
+
+The store interface is also where a REMOTE backend will slot in for the
+multi-process ``jax.distributed`` follow-up: the mesh fetch path already
+speaks owner-keyed row requests, and ``gather(idx)`` is exactly that
+request shape.
+
+The -1-sentinel gather contract lives here, in ONE place
+(:func:`masked_take`): candidate index grids use -1 for empty/padding
+slots, gathers must stay in-bounds for them, and callers always mask the
+gathered rows out downstream — so WHAT a sentinel slot reads is
+irrelevant as long as it is a real in-range row (resident clamps to row
+0) or all-zeros (paged, matching the mesh fetch's zero-fill for
+invalid slots; tests/test_mesh_parity.py proves outputs and counters
+identical under either fill).
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import accumulator as acc_lib
+from repro.similarity.measures import PointFeatures
+
+
+def masked_take(features: PointFeatures, idx: jax.Array) -> PointFeatures:
+    """Gather rows for a -1-sentinel index grid (THE clamp idiom).
+
+    Sentinel slots (idx < 0) clamp to row 0 so the gather stays in-bounds;
+    every consumer masks those slots out of scores/emits downstream
+    (window validity masks, leader_ok, keep masks).  Used by all of
+    core/stars.py's leader/member/prefilter gathers — keep the contract
+    here rather than re-spelling ``take(maximum(idx, 0))`` per call site.
+    """
+    return features.take(jnp.maximum(idx, 0))
+
+
+class FeatureStore:
+    """Protocol base for feature access (see module docstring).
+
+    Implementations provide:
+      n:                 number of (logical) points.
+      d:                 dense feature width, or None (no dense block).
+      dtype:             dense dtype, or None.
+      gather(idx):       rows at ``idx`` (any shape, -1 = sentinel) as a
+                         PointFeatures whose blocks have shape
+                         ``idx.shape + (...,)``.  Sentinel rows follow the
+                         :func:`masked_take` contract (arbitrary-but-real
+                         or zero rows; callers mask).
+      append(rows):      append a PointFeatures batch; must RAISE on a
+                         dtype mismatch, never silently cast (the gids a
+                         build emitted would silently refer to degraded
+                         rows otherwise).
+      checkpoint_view(): the logical (n, ...) PointFeatures view for
+                         checkpoint/parity use (may be a HOST view for
+                         out-of-core stores).
+    """
+
+    n: int
+    d: Optional[int]
+    dtype = None
+
+    def gather(self, idx) -> PointFeatures:
+        raise NotImplementedError
+
+    def append(self, rows: PointFeatures) -> None:
+        raise NotImplementedError
+
+    def checkpoint_view(self) -> PointFeatures:
+        raise NotImplementedError
+
+
+class ResidentFeatureStore(FeatureStore):
+    """The device-resident store: today's semantics, bit-exact, default.
+
+    Wraps a PointFeatures (dense and/or set blocks).  The mesh backend
+    rebinds the store to its padded row-sharded table (``_rebind``) so
+    there is exactly ONE copy of the features; ``n`` stays the logical
+    point count and ``checkpoint_view`` trims the padding.
+    """
+
+    def __init__(self, features: PointFeatures, n: Optional[int] = None):
+        self._features = features
+        self._n = features.n if n is None else int(n)
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def d(self) -> Optional[int]:
+        dense = self._features.dense
+        return None if dense is None else int(dense.shape[1])
+
+    @property
+    def dtype(self):
+        dense = self._features.dense
+        return None if dense is None else dense.dtype
+
+    @property
+    def features(self) -> PointFeatures:
+        """The backing PointFeatures (may carry mesh padding rows past n)."""
+        return self._features
+
+    def gather(self, idx) -> PointFeatures:
+        return masked_take(self._features, jnp.asarray(idx))
+
+    def append(self, rows: PointFeatures) -> None:
+        if self._features.n != self._n:
+            raise ValueError(
+                "append on a padded (mesh-rebound) resident store: the "
+                "mesh backend owns the repad (use _rebind)")
+        self._features = self._features.concat(rows)
+        self._n = self._features.n
+
+    def _rebind(self, features: PointFeatures, n: int) -> None:
+        """Point the store at a (possibly padded/resharded) table — the
+        mesh backend's single-copy handshake after place/extend."""
+        self._features = features
+        self._n = int(n)
+
+    def checkpoint_view(self) -> PointFeatures:
+        f = self._features
+        if f.n == self._n:
+            return f
+        s = lambda x: None if x is None else x[:self._n]
+        return PointFeatures(dense=s(f.dense), set_idx=s(f.set_idx),
+                             set_w=s(f.set_w), set_mask=s(f.set_mask))
+
+
+class PagedFeatureStore(FeatureStore):
+    """Out-of-core dense features: host row pages + a bounded LRU pool.
+
+    The (n, d) table lives in host memory, padded to a ``page_rows``
+    multiple.  ``gather`` runs HOST-side: it computes the set of pages the
+    index grid touches, faults missing pages into a device-resident LRU
+    pool bounded by ``pool_bytes`` (evicting least-recently-used pages),
+    and scatters the gathered rows into the output block.  An index grid
+    touching more pages than the pool holds is served in pool-sized page
+    groups — peak device-resident feature bytes NEVER exceed the budget,
+    at the price of extra faults (re-streaming).  Sentinel slots (idx < 0)
+    read all-zero rows, exactly like the mesh fetch's invalid-slot
+    zero-fill; callers mask them.
+
+    Metering (``graph.accumulator.transfer_stats``):
+      feature_page_bytes:      host->device bytes faulted (faults * page
+                               bytes) — the paged analogue of
+                               ``all_to_all_bytes``.
+      feature_page_faults/hits: pool misses / re-uses per page touch.
+      feature_page_peak_bytes: high-water device-resident pool bytes —
+                               the bounded-peak claim, asserted <=
+                               ``pool_bytes`` in tests.
+    """
+
+    def __init__(self, dense, *, page_rows: int = 512,
+                 pool_bytes: int = 64 << 20):
+        if page_rows < 1:
+            raise ValueError(f"page_rows must be >= 1: {page_rows}")
+        dense = np.asarray(dense)
+        if dense.ndim != 2:
+            raise ValueError(f"paged store needs an (n, d) dense table, "
+                             f"got shape {dense.shape}")
+        self._n = int(dense.shape[0])
+        self._d = int(dense.shape[1])
+        self.page_rows = int(page_rows)
+        self.pool_bytes = int(pool_bytes)
+        self.page_bytes = self.page_rows * self._d * dense.dtype.itemsize
+        if self.page_bytes > self.pool_bytes:
+            raise ValueError(
+                f"one page ({self.page_rows} rows x {self._d} cols = "
+                f"{self.page_bytes} B) exceeds pool_bytes={self.pool_bytes}"
+                f" — lower StarsConfig.feature_page_rows or raise "
+                f"feature_pool_bytes")
+        self.pool_pages = max(1, self.pool_bytes // self.page_bytes)
+        self._host = self._padded(dense)
+        # page id -> device page; insertion order IS recency (LRU)
+        self._pages: "collections.OrderedDict[int, jax.Array]" = \
+            collections.OrderedDict()
+
+    def _padded(self, dense: np.ndarray) -> np.ndarray:
+        pad = (-dense.shape[0]) % self.page_rows
+        if pad:
+            dense = np.concatenate(
+                [dense, np.zeros((pad, self._d), dense.dtype)])
+        return np.ascontiguousarray(dense)
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def d(self) -> int:
+        return self._d
+
+    @property
+    def dtype(self):
+        return self._host.dtype
+
+    @property
+    def resident_bytes(self) -> int:
+        """Current device-resident pool bytes (always <= pool_bytes)."""
+        return len(self._pages) * self.page_bytes
+
+    # -- the pool -------------------------------------------------------- #
+    def _touch(self, page: int) -> None:
+        """Fault or re-use one page; evict LRU past the budget.
+
+        Callers touch at most ``pool_pages`` DISTINCT pages between
+        evictions (``gather`` groups its page set), and a touched page
+        moves to the recent end — so the evicted LRU front is never a page
+        of the current group.
+        """
+        stats = acc_lib.transfer_stats
+        if page in self._pages:
+            self._pages.move_to_end(page)
+            stats["feature_page_hits"] += 1
+            return
+        while len(self._pages) >= self.pool_pages:  # evict BEFORE insert:
+            self._pages.popitem(last=False)         # never over budget
+        r0 = page * self.page_rows
+        self._pages[page] = jnp.asarray(self._host[r0:r0 + self.page_rows])
+        stats["feature_page_faults"] += 1
+        stats["feature_page_bytes"] += self.page_bytes
+        stats["feature_page_peak_bytes"] = max(
+            stats["feature_page_peak_bytes"], self.resident_bytes)
+
+    def gather(self, idx) -> PointFeatures:
+        idx = np.asarray(jax.device_get(idx))
+        shape = idx.shape
+        flat = idx.reshape(-1).astype(np.int64)
+        out = jnp.zeros((flat.size, self._d), self._host.dtype)
+        valid = np.flatnonzero(flat >= 0)
+        if valid.size:
+            rows = flat[valid]
+            if rows.max() >= self._n:
+                raise IndexError(f"gather index {int(rows.max())} out of "
+                                 f"range for {self._n} rows")
+            pages = rows // self.page_rows
+            needed = np.unique(pages)
+            for g0 in range(0, needed.size, self.pool_pages):
+                group = needed[g0:g0 + self.pool_pages]
+                for page in group:
+                    self._touch(int(page))
+                tbl = jnp.concatenate([self._pages[int(p)] for p in group])
+                # rows of this group, located at (rank in group, row in page)
+                rank = np.searchsorted(group, pages)
+                in_group = (rank < group.size)
+                in_group &= group[np.minimum(rank, group.size - 1)] == pages
+                sel = valid[in_group]
+                loc = (rank[in_group] * self.page_rows
+                       + rows[in_group] % self.page_rows)
+                out = out.at[jnp.asarray(sel)].set(
+                    tbl[jnp.asarray(loc)])
+        return PointFeatures(dense=out.reshape(shape + (self._d,)))
+
+    def append(self, rows: PointFeatures) -> None:
+        if rows.dense is None:
+            raise ValueError("paged store append: new rows carry no dense "
+                             "block (the paged store is dense-only)")
+        new = np.asarray(jax.device_get(rows.dense))
+        if new.ndim != 2 or new.shape[1] != self._d:
+            raise ValueError(f"paged store append: shape {new.shape} vs "
+                             f"(*, {self._d})")
+        if new.dtype != self._host.dtype:
+            raise ValueError(
+                f"paged store append: dense dtype {new.dtype} does not "
+                f"match the store's {self._host.dtype} (append never "
+                f"silently casts)")
+        self._host = self._padded(
+            np.concatenate([self._host[:self._n], new]))
+        self._n += int(new.shape[0])
+        # drop cached pages: the old tail page changed and page ids past it
+        # shifted meaning; appends are rare, so a cold pool is fine
+        self._pages.clear()
+
+    def checkpoint_view(self) -> PointFeatures:
+        """HOST-backed logical view (numpy; fine under jnp ops, but do not
+        feed it to a device program expecting resident features)."""
+        return PointFeatures(dense=self._host[:self._n])
+
+
+def make_feature_store(features: PointFeatures, kind: str = "resident", *,
+                       page_rows: int = 512,
+                       pool_bytes: int = 64 << 20) -> FeatureStore:
+    """Build the store ``StarsConfig.feature_store`` names.
+
+    ``kind='resident'`` wraps the features as-is; ``kind='paged'`` moves
+    the dense block to host pages (dense-only — set blocks would need
+    their own page format).
+    """
+    if kind == "resident":
+        return ResidentFeatureStore(features)
+    if kind == "paged":
+        if features.dense is None:
+            raise ValueError(
+                "cfg.feature_store='paged' requires dense features: the "
+                "features= argument carries no dense block (supported "
+                "stores: 'resident' for dense and/or set blocks, 'paged' "
+                "for dense-only out-of-core tables)")
+        return PagedFeatureStore(features.dense, page_rows=page_rows,
+                                 pool_bytes=pool_bytes)
+    raise ValueError(f"unknown feature store {kind!r}; supported: "
+                     f"'resident', 'paged'")

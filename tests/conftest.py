@@ -7,6 +7,30 @@ import numpy as np
 import pytest
 
 
+def pytest_runtest_protocol(item, nextitem):
+    """One automatic rerun for tests marked ``flaky_subprocess``.
+
+    These tests fork multiple forced-device-count subprocesses; under
+    host contention a child occasionally gets OOM-killed or times out in
+    ways unrelated to the code under test.  A single retry distinguishes
+    contention (passes clean the second time) from a real regression
+    (fails twice and is reported normally).
+    """
+    if item.get_closest_marker("flaky_subprocess") is None:
+        return None
+    from _pytest import runner as _runner
+    item.ihook.pytest_runtest_logstart(nodeid=item.nodeid,
+                                       location=item.location)
+    reports = _runner.runtestprotocol(item, nextitem=nextitem, log=False)
+    if any(r.failed for r in reports):
+        reports = _runner.runtestprotocol(item, nextitem=nextitem, log=False)
+    for r in reports:
+        item.ihook.pytest_runtest_logreport(report=r)
+    item.ihook.pytest_runtest_logfinish(nodeid=item.nodeid,
+                                        location=item.location)
+    return True
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.RandomState(0)

@@ -60,6 +60,7 @@ _COMMON = """
 """
 
 
+@pytest.mark.flaky_subprocess
 @pytest.mark.parametrize("devices", [1, 2, 4])
 def test_mesh_build_edge_for_edge_equals_single_device(devices):
     """add_reps + finalize on the mesh == the single-device build, for all
@@ -182,6 +183,7 @@ def test_mesh_bf16_wire_weights_recall_within_one_percent():
     assert rec["bf16"] > rec["exact"] - 0.01, rec
 
 
+@pytest.mark.flaky_subprocess
 @pytest.mark.parametrize("devices", [1, 2, 4])
 def test_mesh_extend_and_refresh_edge_for_edge_equals_single_device(devices):
     """Incremental sessions on the mesh — extend() (pad-and-reshard +
@@ -509,6 +511,7 @@ def test_mesh_long_session_refresh_bounds_staleness():
     assert rec["refresh"] > rec["none"] + 0.02, rec
 
 
+@pytest.mark.flaky_subprocess
 def test_mesh_checkpoint_restore_bit_exact_across_reshard():
     """A checkpoint holds the UNPADDED (n, k) slab image: restoring it on
     a different mesh size (p=4 -> p=2) or a single device and finishing
