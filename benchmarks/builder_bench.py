@@ -627,12 +627,128 @@ def paged_build(ds: str = "mnist", algo: str = "sorting_stars",
     }
 
 
+def learned_build(ds: str = "mnist", algo: str = "sorting_stars",
+                  r: int = 4, frac: float = 0.2, refresh: int = 2,
+                  embed_dim: int = 16, cache_slots: int = 1 << 20,
+                  page_rows: int = 64, pool_pages: int = 12) -> dict:
+    """Learned-measure builds: the two-phase Measure economics (ISSUE 10).
+
+    One extend+refresh stream (build (1-frac), extend the rest, refresh)
+    run three ways over the SAME two-tower params:
+
+      * cache off, resident  — every comparison pays the pair head
+        (``expensive_comparisons == comparisons``),
+      * cache on, resident   — the pair-score cache skips re-visits
+        (overlapping repetitions + refresh rounds), so
+        ``expensive_comparisons`` lands strictly below ``comparisons``
+        while the edge set stays IDENTICAL (asserted, and pinned by
+        tests/test_measure.py),
+      * cache off, paged     — the cached tower embeddings page through
+        the store's LRU pool; edge-for-edge equal again (asserted), with
+        the embedding wire traffic metered under ``embed_page_bytes`` /
+        ``embed_page_faults``.
+
+    Gated fields (benchmarks/run.py --check): the ``*_s`` walls at
+    CHECK_MAX_RATIO, and ``expensive_comparisons`` / ``embed_page_bytes``
+    at CHECK_MAX_BYTES_RATIO — both are deterministic given shapes, seed
+    and pool/cache geometry, so growth means the embedding or pair-score
+    caching regressed (re-paying the model / re-paging state) even while
+    every parity test still passes.  The derived
+    ``expensive_per_edge_on/off`` columns are the paper's headline
+    economics: model evaluations per delivered edge.
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.similarity import (LearnedMeasure, LearnedSimilarity,
+                                  PointFeatures, TwoTowerConfig)
+
+    feats, _ = dataset(ds)
+    dense = np.asarray(feats.dense)
+    n, d = dense.shape
+    n0 = int(n * (1.0 - frac))
+    tcfg = TwoTowerConfig(in_dim=d, embed_dim=embed_dim, tower_hidden=32,
+                          head_hidden=32, use_set_features=False)
+    model = LearnedSimilarity(tcfg)
+    measure = LearnedMeasure(model, model.init(jax.random.key(0)))
+
+    cfg = dataclasses.replace(algo_config(algo, ds, r=r), measure="learned")
+    cfg_on = dataclasses.replace(cfg, pair_cache_slots=cache_slots)
+    pool_bytes = pool_pages * page_rows * d * dense.dtype.itemsize
+    cfg_paged = dataclasses.replace(cfg, feature_store="paged",
+                                    feature_page_rows=page_rows,
+                                    feature_pool_bytes=pool_bytes)
+
+    def stream(cfg_use, resident: bool):
+        raw = ((lambda x: PointFeatures(dense=jnp.asarray(x)))
+               if resident else (lambda x: np.ascontiguousarray(x)))
+        t0 = time.time()
+        b = GraphBuilder(raw(dense[:n0]), cfg_use, measure=measure)
+        b.add_reps(r)
+        b.extend(raw(dense[n0:]))
+        b.refresh_reps(refresh)
+        g = b.finalize()
+        return g, time.time() - t0
+
+    g_off, t_off = stream(cfg, resident=True)
+    g_on, t_on = stream(cfg_on, resident=True)
+    acc_lib.reset_transfer_stats()
+    g_paged, t_paged = stream(cfg_paged, resident=False)
+    ts = dict(acc_lib.transfer_stats)
+
+    e_off = {(int(s), int(d_)) for s, d_ in zip(g_off.src, g_off.dst)}
+    e_on = {(int(s), int(d_)) for s, d_ in zip(g_on.src, g_on.dst)}
+    e_paged = {(int(s), int(d_)) for s, d_ in zip(g_paged.src, g_paged.dst)}
+    assert e_on == e_off, "pair cache changed the learned edge set"
+    assert e_paged == e_off, "paged learned build diverged from resident"
+    s_on, s_off = g_on.stats, g_off.stats
+    assert s_on["comparisons"] == s_off["comparisons"]
+    assert s_on["cache_hits"] + s_on["cache_misses"] == s_on["comparisons"]
+    assert s_off["expensive_comparisons"] == s_off["comparisons"]
+    assert s_on["expensive_comparisons"] < s_on["comparisons"]
+
+    ne = max(1, g_on.num_edges)
+    tag = f"[{ds}/{algo}/r{r}/E{embed_dim}]"
+    emit(f"learned_cache_off_s{tag}", t_off * 1e6 / r, f"{t_off:.3f}s")
+    emit(f"learned_cache_on_s{tag}", t_on * 1e6 / r, f"{t_on:.3f}s")
+    emit(f"learned_paged_s{tag}", t_paged * 1e6 / r, f"{t_paged:.3f}s")
+    emit(f"learned_expensive_comparisons{tag}", 0.0,
+         s_on["expensive_comparisons"])
+    emit(f"learned_cache_hit_rate{tag}", 0.0,
+         f"{s_on['cache_hits'] / max(1, s_on['comparisons']):.4f}")
+    emit(f"learned_embed_page_bytes{tag}", 0.0,
+         ts.get("embed_page_bytes", 0))
+    return {
+        "row": f"learned_build[{ds}/{algo}/r{r}/E{embed_dim}]",
+        "dataset": ds, "algo": algo, "r": r, "refresh": refresh,
+        "embed_dim": embed_dim, "cache_slots": int(cache_slots),
+        "cache_off_s": t_off, "cache_on_s": t_on, "paged_s": t_paged,
+        "edge_for_edge": True,
+        "comparisons": int(s_on["comparisons"]),
+        "expensive_comparisons": int(s_on["expensive_comparisons"]),
+        "cache_hits": int(s_on["cache_hits"]),
+        "cache_misses": int(s_on["cache_misses"]),
+        "cache_evictions": int(s_on["cache_evictions"]),
+        "embed_rows": int(s_on["embed_rows"]),
+        "expensive_per_edge_on":
+            float(s_on["expensive_comparisons"]) / ne,
+        "expensive_per_edge_off":
+            float(s_off["expensive_comparisons"]) / ne,
+        "embed_page_bytes": int(ts.get("embed_page_bytes", 0)),
+        "embed_page_faults": int(ts.get("embed_page_faults", 0)),
+        "embed_page_hits": int(ts.get("embed_page_hits", 0)),
+    }
+
+
 def builder_table() -> None:
     rows = [incremental_vs_rebuild("mnist", "sorting_stars", r=10),
             incremental_vs_rebuild("mnist", "lsh_stars", r=10),
             extend_stream("mnist", "sorting_stars", batches=5, r=4),
             delta_finalize("mnist", "sorting_stars", r=10, n_new=1),
             paged_build("mnist", "sorting_stars", r=6),
+            learned_build("mnist", "sorting_stars", r=4),
             mesh_vs_single("mnist", "sorting_stars", r=6, devices=4),
             sharded_scoring("mnist", "sorting_stars", r=4, devices=4),
             mesh_clustering("mnist", "sorting_stars", r=6, devices=4)]

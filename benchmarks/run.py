@@ -21,7 +21,11 @@ wire volume of zero-gather mesh clustering — growth means the label
 rounds started shipping more than labels) and any ``*feature_page_bytes*``
 field (the paged FeatureStore's host->device page traffic — growth means
 out-of-core gathers stopped batching or the chunking regressed while
-every parity test still passes).  Rows are matched by their
+every parity test still passes), any ``*expensive_comparisons*`` field
+(learned-measure model evaluations, i.e. pair-score-cache misses — growth
+means tiles re-pay the pair head for pairs the cache should remember) and
+any ``*embed_page_bytes*`` field (the cached tower embeddings' page
+traffic through the paged store's LRU pool).  Rows are matched by their
 ``row`` key; new rows and new fields pass silently (they have no baseline
 yet); other machine-independent fields (comparisons, raw bytes, counts)
 are reported but never gate — wall time and wire width are the two things
@@ -111,6 +115,20 @@ def check() -> int:
                 # counts and exchange capacities are deterministic given
                 # shapes/seed/p, so it gates at the wire-width ratio —
                 # growth means label rounds ship more than labels
+                limit, unit = CHECK_MAX_BYTES_RATIO, "B"
+            elif "expensive_comparisons" in key:
+                # learned-measure model evaluations (pair-cache misses):
+                # deterministic given shapes/seed/cache geometry, so the
+                # tight ratio applies — growth means the pair-score cache
+                # or the precomputed-embedding phase regressed and tiles
+                # re-pay the model while every parity test still passes
+                limit, unit = CHECK_MAX_BYTES_RATIO, "evals"
+            elif "embed_page_bytes" in key:
+                # paged learned builds: host->device traffic of the cached
+                # tower embeddings through the store's LRU pool —
+                # deterministic like feature_page_bytes; growth means
+                # embeddings stopped riding the page pool (re-streamed or
+                # re-computed per gather)
                 limit, unit = CHECK_MAX_BYTES_RATIO, "B"
             elif "feature_page_bytes" in key:
                 # paged-FeatureStore host->device traffic: faults x page

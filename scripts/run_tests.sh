@@ -31,6 +31,13 @@
 #                                   #   parity, pool-bounded out-of-core
 #                                   #   builds, store edge cases — its
 #                                   #   mesh cases are also marked dist)
+#   scripts/run_tests.sh learned    # learned-measure tests only
+#                                   #   (-m learned; the two-phase
+#                                   #   embed/score Measure contract,
+#                                   #   pair-score cache accounting, and
+#                                   #   resident/paged/opaque learned
+#                                   #   build parity — its mesh cases are
+#                                   #   also marked dist and run there)
 #   scripts/run_tests.sh long       # long-session streaming tests only
 #                                   #   (-m long; the extend()/refresh
 #                                   #   staleness suite — minutes, kept
@@ -59,11 +66,15 @@ case "${1:-}" in
     shift
     exec python -m pytest -q -m "dist and not long" tests/test_mesh_parity.py \
       tests/test_distributed.py tests/test_service.py tests/test_cluster.py \
-      tests/test_store.py "$@"
+      tests/test_store.py tests/test_measure.py "$@"
     ;;
   paged)
     shift
     exec python -m pytest -q -m paged "$@"
+    ;;
+  learned)
+    shift
+    exec python -m pytest -q -m learned "$@"
     ;;
   cluster)
     shift

@@ -71,7 +71,9 @@ from repro.core import lsh as lsh_lib
 from repro.core.spanner import Graph
 from repro.core.stars import StarsConfig, _prefilter_sketch, _rep_candidates
 from repro.graph import accumulator as acc_lib
-from repro.similarity.measures import (PointFeatures, pairwise_similarity)
+from repro.similarity import pair_cache as pc_lib
+from repro.similarity.measure import Measure, make_measure
+from repro.similarity.measures import PointFeatures
 from repro.similarity.store import (FeatureStore, PagedFeatureStore,
                                     ResidentFeatureStore, make_feature_store)
 
@@ -114,37 +116,83 @@ class RepetitionSource:
     program: sketch with a fresh hash draw, sort+window, score leader tiles,
     fold the masked candidate stream into the slabs — all in one jit program
     with the slab state donated.
+
+    Scoring goes through a :class:`repro.similarity.measure.Measure`:
+    ``measure_state``, when bound, is the per-point state table the
+    measure's ``precompute`` produced (cached tower embeddings), so tiles
+    only pay the pair head; ``cache_slots`` > 0 additionally threads a
+    :class:`repro.similarity.pair_cache.PairCache` through the round —
+    the bound program consumes the candidate stream's ``cmp`` lane mask,
+    swaps cached scores in on hits, and re-derives the emit mask
+    (``cmp & (w > r1)``, exactly the in-stream formula), so cache-on
+    builds stay edge-for-edge equal to cache-off while
+    ``expensive_comparisons`` (= misses) drops on re-visited pairs.
     """
 
     def __init__(self, cfg: StarsConfig,
-                 learned_apply: Optional[Callable] = None):
+                 measure: Optional[Measure] = None):
         self.cfg = cfg
-        self.measure_fn = pairwise_similarity(
-            cfg.measure, alpha=cfg.mixture_alpha, learned_apply=learned_apply)
+        self.measure = (measure if measure is not None else
+                        make_measure(cfg.measure, alpha=cfg.mixture_alpha))
 
     def bind(self, features: PointFeatures, new_from: int,
              refresh_below: int = 0,
-             refresh_fraction: float = 1.0) -> Callable:
+             refresh_fraction: float = 1.0,
+             measure_state: Optional[jax.Array] = None,
+             cache_slots: int = 0) -> Callable:
         cfg = self.cfg
+        measure = self.measure
         prefilter = (
             _prefilter_sketch(features, cfg.hamming_prefilter_bits, cfg.seed)
             if cfg.hamming_prefilter_bits > 0 else None)
 
-        @functools.partial(jax.jit, donate_argnums=0)
-        def round_step(state, rep_index, probs):
-            out = _rep_candidates(cfg, features, self.measure_fn, prefilter,
+        if cache_slots <= 0:
+            @functools.partial(jax.jit, donate_argnums=0)
+            def round_step(state, rep_index, probs):
+                out = _rep_candidates(cfg, features, measure, prefilter,
+                                      rep_index, new_from=new_from,
+                                      refresh_below=refresh_below,
+                                      refresh_fraction=refresh_fraction,
+                                      refresh_probs=probs,
+                                      state=measure_state)
+                state = acc_lib.accumulate(state, out["src"], out["dst"],
+                                           out["w"], out["emit"])
+                return state, {k: out[k] for k in
+                               ("comparisons", "emitted", "prefilter_ops",
+                                "scored_windows")}
+
+            return lambda state, rep, probs=None: round_step(
+                state, jnp.int32(rep), probs)
+
+        r1 = cfg.r1
+
+        @functools.partial(jax.jit, donate_argnums=(0, 3))
+        def round_step_cached(state, rep_index, probs, cache):
+            out = _rep_candidates(cfg, features, measure, prefilter,
                                   rep_index, new_from=new_from,
                                   refresh_below=refresh_below,
                                   refresh_fraction=refresh_fraction,
-                                  refresh_probs=probs)
+                                  refresh_probs=probs, state=measure_state)
+            w, cache, hits, misses, evictions = pc_lib.lookup_insert(
+                cache, out["src"], out["dst"], out["w"], out["cmp"])
+            # hits return the bit-identical score the tile recomputed (see
+            # pair_cache.py's correctness contract), so re-deriving the
+            # emit mask from the post-cache weights reproduces the
+            # in-stream emit lanes exactly
+            emit = out["cmp"] & (w > r1) if r1 is not None else out["cmp"]
             state = acc_lib.accumulate(state, out["src"], out["dst"],
-                                       out["w"], out["emit"])
-            return state, {k: out[k] for k in
-                           ("comparisons", "emitted", "prefilter_ops",
-                            "scored_windows")}
+                                       w, emit)
+            counters = {"comparisons": out["comparisons"],
+                        "emitted": jnp.sum(emit).astype(jnp.int32),
+                        "prefilter_ops": out["prefilter_ops"],
+                        "scored_windows": out["scored_windows"],
+                        "expensive_comparisons": misses,
+                        "cache_hits": hits, "cache_misses": misses,
+                        "cache_evictions": evictions}
+            return state, counters, cache
 
-        return lambda state, rep, probs=None: round_step(
-            state, jnp.int32(rep), probs)
+        return lambda state, rep, probs=None, cache=None: round_step_cached(
+            state, jnp.int32(rep), probs, cache)
 
 
 class AllPairsSource:
@@ -159,20 +207,26 @@ class AllPairsSource:
     """
 
     def __init__(self, cfg: StarsConfig,
-                 learned_apply: Optional[Callable] = None):
+                 measure: Optional[Measure] = None):
         self.cfg = cfg
-        self.measure_fn = pairwise_similarity(
-            cfg.measure, alpha=cfg.mixture_alpha, learned_apply=learned_apply)
+        self.measure = (measure if measure is not None else
+                        make_measure(cfg.measure, alpha=cfg.mixture_alpha))
 
     def bind(self, features: PointFeatures, new_from: int,
              refresh_below: int = 0,
-             refresh_fraction: float = 1.0) -> Callable:
+             refresh_fraction: float = 1.0,
+             measure_state: Optional[jax.Array] = None,
+             cache_slots: int = 0) -> Callable:
         if refresh_below > 0:
             # unreachable through the session (refresh_reps rejects the
             # exact source before binding), kept as a structural guard
             raise ValueError("the exact 'allpairs' source has no sampling "
                              "staleness to refresh")
+        if cache_slots > 0:
+            raise ValueError("the exact 'allpairs' sweep scores every pair "
+                             "once — a pair-score cache cannot hit")
         cfg = self.cfg
+        measure = self.measure
         n = features.n
         block = min(cfg.allpairs_block, max(n, 1))
         r1 = cfg.r1
@@ -181,9 +235,15 @@ class AllPairsSource:
         def block_step(state, a0, b0):
             ids_a = a0 + jnp.arange(block, dtype=jnp.int32)
             ids_b = b0 + jnp.arange(block, dtype=jnp.int32)
-            fa = features.take(jnp.minimum(ids_a, n - 1))
-            fb = features.take(jnp.minimum(ids_b, n - 1))
-            sims = self.measure_fn(fa, fb)
+            clamp_a = jnp.minimum(ids_a, n - 1)
+            clamp_b = jnp.minimum(ids_b, n - 1)
+            fa = features.take(clamp_a)
+            fb = features.take(clamp_b)
+            if measure_state is not None:
+                sims = measure(fa, fb, measure_state[clamp_a],
+                               measure_state[clamp_b])
+            else:
+                sims = measure(fa, fb)
             aa = jnp.broadcast_to(ids_a[:, None], (block, block))
             bb = jnp.broadcast_to(ids_b[None, :], (block, block))
             keep = (aa < bb) & (bb < n)
@@ -225,16 +285,29 @@ class _SingleDeviceBackend:
 
     Features ride in a :class:`ResidentFeatureStore`; the round programs
     close over the store's PointFeatures directly (bit-exact, zero
-    indirection on the hot path)."""
+    indirection on the hot path).  A stateful Measure's per-point state
+    (the cached tower embeddings) is computed once per build/extend
+    (``ensure_measure_state``) and attached to the store as a device
+    table; ``cfg.pair_cache_slots`` > 0 additionally threads a
+    device-resident pair-score cache through the windowed round programs
+    (expensive measures only)."""
 
     def __init__(self, store: ResidentFeatureStore, cfg: StarsConfig,
-                 learned_apply: Optional[Callable]):
+                 measure: Optional[Measure] = None):
         name = cfg.source_name
         if name not in CANDIDATE_SOURCES:
             raise ValueError(f"unknown candidate source {name!r}; "
                              f"known: {sorted(CANDIDATE_SOURCES)}")
         self.store = store
-        self.source = CANDIDATE_SOURCES[name](cfg, learned_apply)
+        self.measure = (measure if measure is not None else
+                        make_measure(cfg.measure, alpha=cfg.mixture_alpha))
+        self.source = CANDIDATE_SOURCES[name](cfg, self.measure)
+        self._pair_cache = (
+            pc_lib.create(cfg.pair_cache_slots)
+            if (cfg.pair_cache_slots > 0 and self.measure.expensive
+                and isinstance(self.source, RepetitionSource)) else None)
+        self._embedded = 0          # rows whose measure state is current
+        self._embed_fn = None
         # (new_from, refresh_below, refresh_fraction) -> compiled round
         # program; cleared on extend() (shapes change)
         self._bound: Dict = {}
@@ -259,17 +332,50 @@ class _SingleDeviceBackend:
     def trim(self, state: acc_lib.EdgeAccumulator) -> acc_lib.EdgeAccumulator:
         return state                # rows are never padded on one device
 
+    def ensure_measure_state(self) -> int:
+        """Run the measure's precompute over rows not yet embedded (all of
+        them on the first build, only the appended tail after an extend);
+        returns how many rows were embedded (0 for stateless measures)."""
+        if self.measure.state_width is None:
+            return 0
+        n = self.store.n
+        new = n - self._embedded
+        if new <= 0:
+            return 0
+        if self._embed_fn is None:
+            self._embed_fn = jax.jit(self.measure.precompute)
+        feats = self.features
+        if self._embedded == 0:
+            self.store.attach_state(self._embed_fn(feats))
+        else:
+            tail = PointFeatures(dense=feats.dense[self._embedded:n])
+            self.store.append_state(self._embed_fn(tail))
+        self._embedded = n
+        return new
+
     def run_round(self, state, rep_index: int, new_from: int,
                   refresh_below: int = 0, refresh_fraction: float = 1.0,
                   refresh_probs=None):
+        self.ensure_measure_state()
         key = (new_from, refresh_below, refresh_fraction)
         if key not in self._bound:
+            mstate = (self.store.state_table
+                      if self.measure.state_width is not None else None)
             self._bound[key] = self.source.bind(
-                self.features, new_from, refresh_below, refresh_fraction)
+                self.features, new_from, refresh_below, refresh_fraction,
+                measure_state=mstate,
+                cache_slots=(self._pair_cache.slots
+                             if self._pair_cache is not None else 0))
+        if self._pair_cache is not None:
+            state, counters, self._pair_cache = self._bound[key](
+                state, rep_index, refresh_probs, self._pair_cache)
+            return state, counters
         return self._bound[key](state, rep_index, refresh_probs)
 
     def extend(self, new_features: PointFeatures) -> None:
         self.store.append(new_features)
+        # the pair cache survives extends unrejected: gids are append-only
+        # stable, so cached (lo, hi) -> score entries stay correct
         self._bound = {}            # shapes changed; rebind lazily
 
     def cluster_mesh(self):
@@ -378,6 +484,38 @@ def _stream_sketch_words(store: PagedFeatureStore, cfg: StarsConfig, rep,
     return words[:n_rows]
 
 
+def _stream_embed_rows(store: PagedFeatureStore, measure: Measure,
+                       lo: int, hi: int, embed_fns: Dict) -> np.ndarray:
+    """Measure-state rows ``[lo, hi)`` streamed through a paged store.
+
+    The paged analogue of the resident one-shot ``precompute``: feature
+    rows stream through the page pool in pool-sized chunks, each chunk is
+    embedded on device, and the (hi - lo, E) state block lands on HOST
+    (the store pages it back in under ``transfer_stats['embed_page_*']``).
+    Chunks are padded to a fixed shape (sentinel -1 gathers zero rows, as
+    in ``_stream_sketch_words``) so one jit program serves every chunk —
+    and row-blocked embedding is bitwise equal to the resident one-shot
+    embed, the same row-independence the streamed sketch relies on.
+    """
+    count = hi - lo
+    chunk = max(store.page_rows,
+                min(store.pool_pages * store.page_rows, count))
+    fn = embed_fns.get(chunk)
+    if fn is None:
+        fn = embed_fns.setdefault(chunk, jax.jit(
+            lambda x: measure.precompute(PointFeatures(dense=x))))
+    idx = np.arange(lo, hi, dtype=np.int64)
+    parts = []
+    for c0 in range(0, count, chunk):
+        blk = idx[c0:c0 + chunk]
+        if blk.size < chunk:
+            blk = np.concatenate(
+                [blk, np.full(chunk - blk.size, -1, np.int64)])
+        parts.append(np.asarray(jax.device_get(fn(store.gather(blk).dense))))
+    rows = np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+    return rows[:count]
+
+
 class _PagedBackend:
     """Single-process build over a host-paged feature table: ``n`` bounded
     by HOST memory, peak device-resident *feature* bytes bounded by the
@@ -410,7 +548,7 @@ class _PagedBackend:
     """
 
     def __init__(self, store: PagedFeatureStore, cfg: StarsConfig,
-                 learned_apply: Optional[Callable]):
+                 measure: Optional[Measure] = None):
         windowed = ("lsh-stars", "sorting-stars",
                     "lsh-allpairs", "sorting-allpairs")
         if cfg.source_name not in windowed + ("allpairs",):
@@ -425,9 +563,10 @@ class _PagedBackend:
                 "'resident'")
         self.store = store
         self.cfg = cfg
-        self.measure_fn = pairwise_similarity(
-            cfg.measure, alpha=cfg.mixture_alpha,
-            learned_apply=learned_apply)
+        self.measure = (measure if measure is not None else
+                        make_measure(cfg.measure, alpha=cfg.mixture_alpha))
+        self._embedded = 0           # rows whose measure state is current
+        self._embed_fns: Dict = {}   # chunk-rows -> streamed embed jit
         self._words_fns: Dict = {}   # chunk-rows -> streamed sketch jit
         self._win_fns: Dict = {}     # n -> jitted grid builder
         self._chunk_fns: Dict = {}   # (C, nw, masks...) -> scoring chunk jit
@@ -456,11 +595,33 @@ class _PagedBackend:
             self._cluster_mesh = jax.make_mesh((1,), ("data",))
         return self._cluster_mesh, "data"
 
+    def ensure_measure_state(self) -> int:
+        """Stream-embed rows not yet covered by the store's state table
+        (all rows on the first build, the appended tail after an extend);
+        returns how many rows were embedded (0 for stateless measures)."""
+        if self.measure.state_width is None:
+            return 0
+        n = self.store.n
+        new = n - self._embedded
+        if new <= 0:
+            return 0
+        rows = _stream_embed_rows(self.store, self.measure,
+                                  self._embedded, n, self._embed_fns)
+        if self._embedded == 0:
+            self.store.attach_state(rows)
+        else:
+            self.store.append_state(rows)
+        self._embedded = n
+        return new
+
     # -- windowed repetitions ------------------------------------------- #
     def _chunk_rows(self, nw: int) -> int:
         """Window rows per scoring chunk: the largest count whose gathered
-        (C * window, d) member block fits the page-pool budget."""
-        row_bytes = self.cfg.window * self.store.d * self.store.dtype.itemsize
+        (C * window, d [+ E state]) member block fits the page-pool
+        budget (a stateful measure's chunks gather state rows alongside
+        the feature rows, through the same pool)."""
+        width = self.store.d + (self.measure.state_width or 0)
+        row_bytes = self.cfg.window * width * self.store.dtype.itemsize
         return int(max(1, min(nw, self.store.pool_bytes // max(row_bytes, 1))))
 
     def _win_fn(self):
@@ -488,13 +649,16 @@ class _PagedBackend:
         from repro.core.stars import _rep_keys, _score_windows
         cfg = self.cfg
         w = cfg.window
-        measure_fn = self.measure_fn
+        measure_fn = self.measure
+        has_state = self.measure.state_width is not None
         has_probs = refresh_below > 0
 
         @functools.partial(jax.jit, donate_argnums=0)
         def chunk_step(state, block, gid_c, valid_c, bucket_c, rep, row0,
                        *rest):
-            probs = rest[0] if has_probs else None
+            rest = list(rest)
+            mstate = (rest.pop(0).reshape(C * w, -1) if has_state else None)
+            probs = rest.pop(0) if has_probs else None
             win = win_lib.Windows(gid=gid_c, valid=valid_c, bucket=bucket_c)
             feats = PointFeatures(dense=block.reshape(C * w, -1))
             member_index = jnp.arange(C * w, dtype=jnp.int32).reshape(C, w)
@@ -506,7 +670,7 @@ class _PagedBackend:
                                  k_refresh=k_refresh, row_offset=row0,
                                  total_rows=nw, stride=1,
                                  member_index=member_index,
-                                 refresh_probs=probs)
+                                 refresh_probs=probs, state=mstate)
             state = acc_lib.accumulate(state, out["src"], out["dst"],
                                        out["w"], out["emit"])
             return state, {k: out[k] for k in
@@ -518,6 +682,7 @@ class _PagedBackend:
     def run_round(self, state, rep_index: int, new_from: int,
                   refresh_below: int = 0, refresh_fraction: float = 1.0,
                   refresh_probs=None):
+        self.ensure_measure_state()
         if self.cfg.source_name == "allpairs":
             if refresh_below > 0:
                 raise ValueError("the exact 'allpairs' source has no "
@@ -542,14 +707,17 @@ class _PagedBackend:
             probs = (jnp.asarray(refresh_probs, jnp.float32),)
         chunk_fn = self._bind_chunk(C, nw, new_from, refresh_below,
                                     refresh_fraction)
+        has_state = self.measure.state_width is not None
         per_chunk = []
         for c0 in range(0, nw, C):
             gid_c = gid[c0:c0 + C]
-            block = self.store.gather(
-                np.asarray(jax.device_get(gid_c))).dense
+            gid_np = np.asarray(jax.device_get(gid_c))
+            block = self.store.gather(gid_np).dense
+            extra = ((self.store.gather_state(gid_np),)
+                     if has_state else ())
             state, cnt = chunk_fn(state, block, gid_c,
                                   valid[c0:c0 + C], bucket[c0:c0 + C],
-                                  rep, jnp.int32(c0), *probs)
+                                  rep, jnp.int32(c0), *extra, *probs)
             per_chunk.append(cnt)
         counters = {k: jnp.concatenate([jnp.ravel(c[k]) for c in per_chunk])
                     for k in per_chunk[0]}
@@ -561,17 +729,23 @@ class _PagedBackend:
         n = self.store.n
         block = min(cfg.allpairs_block, max(n, 1))
         key = (block, new_from)
+        has_state = self.measure.state_width is not None
         block_fn = self._block_fns.get(key)
         if block_fn is None:
-            measure_fn = self.measure_fn
+            measure_fn = self.measure
             r1 = cfg.r1
 
             @functools.partial(jax.jit, donate_argnums=0)
-            def block_step(state, fa, fb, a0, b0):
+            def block_step(state, fa, fb, a0, b0, *rest):
                 ids_a = a0 + jnp.arange(block, dtype=jnp.int32)
                 ids_b = b0 + jnp.arange(block, dtype=jnp.int32)
-                sims = measure_fn(PointFeatures(dense=fa),
-                                  PointFeatures(dense=fb))
+                if has_state:
+                    sims = measure_fn(PointFeatures(dense=fa),
+                                      PointFeatures(dense=fb),
+                                      rest[0], rest[1])
+                else:
+                    sims = measure_fn(PointFeatures(dense=fa),
+                                      PointFeatures(dense=fb))
                 aa = jnp.broadcast_to(ids_a[:, None], (block, block))
                 bb = jnp.broadcast_to(ids_b[None, :], (block, block))
                 keep = (aa < bb) & (bb < n)
@@ -586,15 +760,17 @@ class _PagedBackend:
         # row n-1; the keep mask discards them) — sequential blocks give
         # near-perfect page locality
         for a0 in range(0, n, block):
-            fa = self.store.gather(
-                np.minimum(np.arange(a0, a0 + block), n - 1)).dense
+            ia = np.minimum(np.arange(a0, a0 + block), n - 1)
+            fa = self.store.gather(ia).dense
+            sa = (self.store.gather_state(ia),) if has_state else ()
             for b0 in range(a0, n, block):
                 if new_from > 0 and b0 + block <= new_from:
                     continue
-                fb = self.store.gather(
-                    np.minimum(np.arange(b0, b0 + block), n - 1)).dense
+                ib = np.minimum(np.arange(b0, b0 + block), n - 1)
+                fb = self.store.gather(ib).dense
+                sb = (self.store.gather_state(ib),) if has_state else ()
                 state = block_fn(state, fa, fb, jnp.int32(a0),
-                                 jnp.int32(b0))
+                                 jnp.int32(b0), *sa, *sb)
         comps = n * (n - 1) // 2 - new_from * (new_from - 1) // 2
         return state, {"comparisons": comps}
 
@@ -664,22 +840,41 @@ class _MeshBackend:
     EMIT_CAPACITY_FACTOR = 2.0
     FETCH_CAPACITY_FACTOR = 2.0
 
-    def __init__(self, store: FeatureStore, cfg: StarsConfig, mesh):
+    def __init__(self, store: FeatureStore, cfg: StarsConfig, mesh,
+                 measure: Optional[Measure] = None):
         windowed = ("lsh-stars", "sorting-stars",
                     "lsh-allpairs", "sorting-allpairs")
         if cfg.source_name not in windowed:
             raise NotImplementedError(
                 f"mesh backend supports the windowed repetition sources "
                 f"{windowed}, got {cfg.source_name!r}")
-        if cfg.measure not in ("cosine", "dot"):
+        if cfg.measure not in ("cosine", "dot", "learned"):
             raise NotImplementedError(
-                "mesh backend scores cosine/dot (the tera-scale setting)")
+                "mesh backend scores cosine/dot or a state-complete "
+                "learned measure (the tera-scale settings)")
         self.cfg = cfg
         self.mesh = mesh
         self.axis = "data"
         self.p = mesh.shape[self.axis]
-        self.measure_fn = pairwise_similarity(cfg.measure,
-                                              alpha=cfg.mixture_alpha)
+        self.measure = (measure if measure is not None else
+                        make_measure(cfg.measure, alpha=cfg.mixture_alpha))
+        if cfg.measure == "learned":
+            # the scoring fetch ships ONE row-sharded table per slot; a
+            # learned measure rides it as its E-float embedding rows (the
+            # wire diet), which requires the pair head to need nothing but
+            # the embeddings
+            if not self.measure.state_complete:
+                raise NotImplementedError(
+                    "mesh learned scoring ships tower embeddings instead "
+                    "of feature rows, so the measure must be "
+                    "state-complete (TwoTowerConfig.pair_features in "
+                    "('embed', 'none')); pair_features='raw' needs the "
+                    "raw feature rows at every tile")
+            if cfg.hamming_prefilter_bits > 0:
+                raise NotImplementedError(
+                    "mesh learned scoring does not combine with the "
+                    "Hamming prefilter (the prefilter words ride the "
+                    "feature fetch table the wire diet replaces)")
         if not isinstance(store, FeatureStore):
             # direct construction with raw features (tests, tools) — the
             # GraphBuilder path always hands a store
@@ -703,6 +898,10 @@ class _MeshBackend:
         self._offsets: Dict = {}    # n -> offset_fn (window shift per rep)
         self._fetch_tables: Dict = {}   # n -> row-sharded fetch table
         self._bound: Dict = {}      # (n, new_from, refresh...) -> score_fn
+        self._state_tab = None      # padded row-sharded measure state
+        self._embedded = 0          # rows whose measure state is current
+        self._embed_fn = None
+        self._embed_fns: Dict = {}  # paged: chunk-rows -> streamed embed
 
     # -- padded row layout ---------------------------------------------- #
     @property
@@ -757,9 +956,53 @@ class _MeshBackend:
                                        w=state.w[:self._n],
                                        ver=state.ver[:self._n])
 
+    # -- measure state (cached embeddings) ------------------------------ #
+    def ensure_measure_state(self) -> int:
+        """Embed rows not yet covered by the measure-state table.
+
+        Resident: the new rows are embedded in one jit batch and the
+        padded row-sharded state table rebuilt around the UNTOUCHED old
+        embeddings (extend never re-embeds, so old scores stay bitwise
+        stable).  Paged: rows stream through the host store exactly like
+        the single-process paged backend (``_stream_embed_rows``), and the
+        scoring fetch later pages them back in under ``embed_page_*``.
+        Returns how many rows were embedded (0 for stateless measures).
+        """
+        if self.measure.state_width is None:
+            return 0
+        n = self._n
+        new = n - self._embedded
+        if new <= 0:
+            return 0
+        if self._paged:
+            rows = _stream_embed_rows(self.store, self.measure,
+                                      self._embedded, n, self._embed_fns)
+            if self._embedded == 0:
+                self.store.attach_state(rows)
+            else:
+                self.store.append_state(rows)
+        else:
+            if self._embed_fn is None:
+                self._embed_fn = jax.jit(
+                    lambda x: self.measure.precompute(
+                        PointFeatures(dense=x)))
+            new_rows = self._embed_fn(self.dense[self._embedded:n])
+            tab = (new_rows if self._state_tab is None else
+                   jnp.concatenate([self._state_tab[:self._embedded],
+                                    new_rows], axis=0))
+            pad = self._pad_rows(n) - n
+            if pad:
+                tab = jnp.pad(tab, ((0, pad), (0, 0)))
+            self._state_tab = jax.device_put(tab, self._feature_sharding)
+            self._fetch_tables = {}     # the fetch table IS the state
+        self._embedded = n
+        return new
+
     # -- the per-repetition programs ------------------------------------ #
     def _bind(self, new_from: int, refresh_below: int = 0,
               refresh_fraction: float = 1.0):
+        if self.measure.state_width is not None and self._embedded < self._n:
+            self.ensure_measure_state()
         if self._n not in self._sketches:
             self._sketches[self._n] = (self._bind_keys() if self._paged
                                        else self._bind_sketch())
@@ -833,8 +1076,13 @@ class _MeshBackend:
         """The row-sharded table the scoring-phase fetch serves rows from:
         the padded feature table, with the packed Hamming-prefilter words
         bitcast alongside as extra float32 columns when the prefilter is
-        armed (ONE exchange covers both)."""
+        armed (ONE exchange covers both).  A state-complete learned
+        measure serves its (n_pad, E) embedding table INSTEAD — the
+        embedding wire diet: when E < d the owner-keyed fetch ships
+        proportionally fewer ``all_to_all_bytes``."""
         from repro.core.stars import _prefilter_sketch
+        if self.measure.state_width is not None:
+            return self._state_tab
         if self.cfg.hamming_prefilter_bits <= 0:
             return self.dense
         if self.dense.dtype != jnp.float32:
@@ -876,7 +1124,8 @@ class _MeshBackend:
         p = self.p
         nw, rps, _ = win_lib.shard_row_layout(cfg.mode, n, w, self.p)
         axis = self.axis
-        measure_fn = self.measure_fn
+        measure_fn = self.measure
+        stateful = self.measure.state_width is not None
         use_pref = cfg.hamming_prefilter_bits > 0
         # refresh rounds carry a replicated per-global-row keep-probability
         # vector (the age-weighted sample, GraphBuilder._refresh_probs)
@@ -893,9 +1142,16 @@ class _MeshBackend:
             gid_grid = jnp.where(ok_blk, gid_blk, -1).reshape(rps, w)
             win = win_lib.Windows(gid=gid_grid, valid=gid_grid >= 0,
                                   bucket=bucket_blk.reshape(rps, w))
-            feats = PointFeatures(dense=tab_blk[:, :d])
-            pref = (jax.lax.bitcast_convert_type(tab_blk[:, d:], jnp.uint32)
-                    if use_pref else None)
+            if stateful:
+                # wire-diet block: the fetched rows ARE the E-float
+                # embeddings; no feature rows, no prefilter words
+                feats, mstate, pref = None, tab_blk, None
+            else:
+                feats = PointFeatures(dense=tab_blk[:, :d])
+                mstate = None
+                pref = (jax.lax.bitcast_convert_type(tab_blk[:, d:],
+                                                     jnp.uint32)
+                        if use_pref else None)
             _, _, k_lead, k_refresh = _rep_keys(cfg, rep)
             member_index = jnp.arange(rps * w, dtype=jnp.int32).reshape(
                 rps, w)
@@ -906,7 +1162,7 @@ class _MeshBackend:
                                  k_refresh=k_refresh, row_offset=row0,
                                  total_rows=nw, stride=p,
                                  member_index=member_index,
-                                 refresh_probs=probs)
+                                 refresh_probs=probs, state=mstate)
             return (out["src"], out["dst"], out["w"], out["emit"],
                     out["comparisons"], out["emitted"],
                     out["prefilter_ops"], out["scored_windows"][None])
@@ -961,12 +1217,15 @@ class _MeshBackend:
         volume); the block goes back row-sharded.  Invalid slots (gid -1)
         read ZERO rows with ok False — exactly the contract
         ``fetch_rows_all_to_all`` applies to dropped/invalid slots, so the
-        scoring program is unchanged.
+        scoring program is unchanged.  A state-complete learned measure
+        serves its E-float embedding rows instead (``embed_page_*``).
         """
         from jax.sharding import NamedSharding, PartitionSpec as P
         gids = np.asarray(jax.device_get(blk_gid))
-        rows = jax.device_put(self.store.gather(gids).dense,
-                              self._feature_sharding)
+        host_rows = (self.store.gather_state(gids)
+                     if self.measure.state_width is not None
+                     else self.store.gather(gids).dense)
+        rows = jax.device_put(host_rows, self._feature_sharding)
         ok = jax.device_put(jnp.asarray(gids >= 0),
                             NamedSharding(self.mesh, P(self.axis)))
         return rows, ok
@@ -1156,6 +1415,11 @@ class BuilderCheckpoint:
     # delta checkpoints only: the SlabDelta chain since the base_seq full
     # checkpoint, consecutive seqs (base_seq+1, ..., base_seq+len(chain))
     delta_chain: Optional[tuple] = None
+    # Measure.fingerprint() of the session's similarity measure (a sha256
+    # over learned tower params/config; None for unkeyed measures).
+    # restore() refuses a mismatch: resuming under different tower params
+    # would silently mix differently-scored edges into the same slabs.
+    measure_fingerprint: Optional[str] = None
 
 
 class GraphBuilder:
@@ -1167,7 +1431,13 @@ class GraphBuilder:
                 source, ``cfg.degree_cap`` sizes the slabs.
       mesh:     optional jax Mesh — shards features and slabs over 'data'
                 (the former build_graph_distributed backend).
-      learned_apply: two-tower apply fn for measure='learned'.
+      measure:  for ``cfg.measure='learned'``: a
+                :class:`repro.similarity.measure.LearnedMeasure` (two-phase
+                embed/score — enables the embedding cache, the mesh wire
+                diet and the checkpoint fingerprint) or any Measure.
+      learned_apply: LEGACY two-tower apply fn for measure='learned'; the
+                bare ``(fa, fb) -> sims`` closure is wrapped as an
+                ``OpaqueLearnedMeasure`` (every tile pays the full model).
 
     Methods: ``add_reps`` / ``extend`` / ``refresh_reps`` / ``checkpoint``
     / ``restore`` / ``finalize``; all state mutation is in-place on the
@@ -1175,7 +1445,12 @@ class GraphBuilder:
     """
 
     def __init__(self, features: FeaturesLike, cfg: StarsConfig, *,
-                 mesh=None, learned_apply: Optional[Callable] = None):
+                 mesh=None, learned_apply: Optional[Callable] = None,
+                 measure: Optional[Measure] = None):
+        if measure is not None and learned_apply is not None:
+            raise ValueError(
+                "pass either measure= or the legacy learned_apply=, not "
+                "both (they would name two different scoring functions)")
         if cfg.refresh_rate < 0:
             raise ValueError(f"refresh_rate must be >= 0: {cfg.refresh_rate}")
         if cfg.refresh_rate > 0 and not cfg.refresh_fraction > 0:
@@ -1188,9 +1463,32 @@ class GraphBuilder:
                 f"sample zero windows and repair nothing")
         self.cfg = cfg
         self._learned_apply = learned_apply
+        self._measure = make_measure(
+            cfg.measure, alpha=cfg.mixture_alpha,
+            learned=measure if measure is not None else learned_apply)
+        self._cache_on = cfg.pair_cache_slots > 0
+        self._embed_rows = 0
         store = as_feature_store(features, cfg)
         self._store = store
         paged = isinstance(store, PagedFeatureStore)
+        if self._cache_on:
+            # the pair-score cache is single-device, device-resident,
+            # windowed-source state — reject the combinations it cannot
+            # serve up front, naming the config knob
+            if not self._measure.expensive:
+                raise ValueError(
+                    f"pair_cache_slots={cfg.pair_cache_slots} only pays "
+                    f"for an expensive (learned) measure; "
+                    f"measure={cfg.measure!r} is closed-form")
+            if mesh is not None or paged:
+                raise NotImplementedError(
+                    "the pair-score cache is device-resident single-device "
+                    "state; it does not combine with mesh= or "
+                    "feature_store='paged' (set pair_cache_slots=0)")
+            if cfg.source_name == "allpairs":
+                raise ValueError(
+                    "the exact 'allpairs' sweep scores every pair once — "
+                    "a pair cache cannot hit (set pair_cache_slots=0)")
         if mesh is not None:
             # validate the store/backend contract HERE, naming the
             # offending constructor argument — not deep inside a backend
@@ -1209,11 +1507,12 @@ class GraphBuilder:
                     "words ride the resident fetch table); unset "
                     "hamming_prefilter_bits or use feature_store="
                     "'resident'")
-            self._backend = _MeshBackend(store, cfg, mesh)
+            self._backend = _MeshBackend(store, cfg, mesh,
+                                         measure=self._measure)
         elif paged:
-            self._backend = _PagedBackend(store, cfg, learned_apply)
+            self._backend = _PagedBackend(store, cfg, self._measure)
         else:
-            self._backend = _SingleDeviceBackend(store, cfg, learned_apply)
+            self._backend = _SingleDeviceBackend(store, cfg, self._measure)
         self._reps_done = 0
         self._counters: List[Dict] = []
         self._stats_base: Dict[str, int] = {}
@@ -1272,6 +1571,11 @@ class GraphBuilder:
     def feature_store(self) -> FeatureStore:
         """The session's FeatureStore (resident or paged)."""
         return self._store
+
+    @property
+    def measure(self) -> Measure:
+        """The session's similarity Measure (two-phase contract)."""
+        return self._measure
 
     @property
     def reps_done(self) -> int:
@@ -1444,6 +1748,9 @@ class GraphBuilder:
     def _run_rounds(self, reps: int, new_from: int, *,
                     refresh_below: int = 0, refresh_fraction: float = 1.0,
                     progress: Optional[Callable[[int], None]] = None) -> None:
+        # embed once per build/extend, BEFORE any round binds: only rows
+        # the preceding extend() appended are new (stats['embed_rows'])
+        self._embed_rows += self._backend.ensure_measure_state()
         self._grow(self.n, self._reps_done + reps)
         refresh = refresh_below > 0
         pair_fn = getattr(self._backend, "run_round_pair", None)
@@ -1553,6 +1860,14 @@ class GraphBuilder:
         totals["reps"] = self._reps_done
         totals["refresh_reps"] = self._refresh_reps
         totals.setdefault("refresh_comparisons", 0)
+        if self._measure.expensive and not self._cache_on:
+            # without the pair cache every counted comparison pays the
+            # model; mirrored (not summed) so roll-ups can't double-count
+            totals["expensive_comparisons"] = totals.get("comparisons", 0)
+        if self._measure.state_width is not None:
+            # rows this session ran precompute over (a restored session
+            # re-embeds everything: measure state is not checkpointed)
+            totals["embed_rows"] = self._embed_rows
         return totals
 
     def _roll_up_counters(self) -> Dict[str, int]:
@@ -1746,7 +2061,8 @@ class GraphBuilder:
                              else self._refresh_age.copy()),
                 ver=self._shipped_ver[:self.n].copy(),
                 base_seq=self._last_full_seq,
-                delta_chain=tuple(self._delta_log))
+                delta_chain=tuple(self._delta_log),
+                measure_fingerprint=self._measure.fingerprint())
         nbr, w, ver_dev = acc_lib.to_host(
             self._backend.trim(self._ensure_state()))
         logical = self._ver_base + np.asarray(ver_dev, np.int64)
@@ -1765,14 +2081,22 @@ class GraphBuilder:
             refresh_credit=self._refresh_credit,
             refresh_age=(None if self._refresh_age is None
                          else self._refresh_age.copy()),
-            ver=logical, base_seq=self._delta_seq)
+            ver=logical, base_seq=self._delta_seq,
+            measure_fingerprint=self._measure.fingerprint())
 
     @classmethod
     def restore(cls, features: FeaturesLike, cfg: StarsConfig,
                 ckpt: BuilderCheckpoint, *, base: Optional[
                     BuilderCheckpoint] = None, mesh=None,
-                learned_apply: Optional[Callable] = None) -> "GraphBuilder":
+                learned_apply: Optional[Callable] = None,
+                measure: Optional[Measure] = None) -> "GraphBuilder":
         """Resume a session from a checkpoint (same features + config).
+
+        The measure must match too: ``ckpt.measure_fingerprint`` (a sha256
+        over learned tower params/config) is compared against the restoring
+        session's measure and a mismatch raises — resuming under different
+        tower params would silently mix differently-scored edges into the
+        checkpointed slabs.
 
         A DELTA checkpoint (``ckpt.delta_chain`` set) additionally needs
         ``base=`` — the full checkpoint it chains from — and restores by
@@ -1810,7 +2134,16 @@ class GraphBuilder:
             ver = ckpt.ver
         else:
             nbr, w, ver = ckpt.nbr, ckpt.w, ckpt.ver
-        builder = cls(features, cfg, mesh=mesh, learned_apply=learned_apply)
+        builder = cls(features, cfg, mesh=mesh, learned_apply=learned_apply,
+                      measure=measure)
+        fp_ckpt = getattr(ckpt, "measure_fingerprint", None)
+        fp_now = builder._measure.fingerprint()
+        if fp_ckpt != fp_now:
+            raise ValueError(
+                "checkpoint was built under a different similarity "
+                "measure (tower params/config fingerprint "
+                f"{fp_ckpt!r} vs {fp_now!r}) — resuming would mix "
+                "differently-scored edges into the same slabs")
         if builder.n != ckpt.n:
             raise ValueError(f"checkpoint holds {ckpt.n} points, features "
                              f"have {builder.n}")

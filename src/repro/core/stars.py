@@ -140,6 +140,24 @@ class StarsConfig:
     feature_store: str = "resident"
     feature_page_rows: int = 512
     feature_pool_bytes: int = 64 << 20
+    # Pair-score cache slots (similarity/pair_cache.py): > 0 arms a
+    # device-resident hash-slot cache keyed by (gid_lo, gid_hi) so refresh
+    # rounds and overlapping repetitions never re-pay an EXPENSIVE
+    # measure's pair head for an already-scored pair.  Only meaningful for
+    # expensive (learned) measures on the resident windowed backend; the
+    # ``expensive_comparisons`` stat then counts cache misses instead of
+    # every unmasked lane.  0 disables the cache.
+    pair_cache_slots: int = 0
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= self.mixture_alpha <= 1.0:
+            raise ValueError(
+                f"StarsConfig.mixture_alpha={self.mixture_alpha!r}: the "
+                "mixture weight must lie in [0, 1]")
+        if self.pair_cache_slots < 0:
+            raise ValueError(
+                f"StarsConfig.pair_cache_slots={self.pair_cache_slots!r}: "
+                "must be >= 0 (0 disables the pair-score cache)")
 
     @property
     def source_name(self) -> str:
@@ -184,13 +202,31 @@ def _prefilter_sketch(features: PointFeatures, bits: int,
     return lsh_lib.pack_bits(lsh_lib.simhash_bits(features.dense, proj))
 
 
-def _score_tile(measure_fn, features: PointFeatures,
+def _score_tile(measure_fn, features: Optional[PointFeatures],
                 a_gid: jax.Array, b_gid: jax.Array,
-                measure_name: str = "") -> jax.Array:
-    """Similarity tile between gathered id tiles a_gid (..., A), b_gid (..., B)."""
-    fa = masked_take(features, a_gid)
-    fb = masked_take(features, b_gid)
-    if measure_name in ("cosine", "dot") and fa.dense is not None:
+                measure_name: str = "",
+                state: Optional[jax.Array] = None) -> jax.Array:
+    """Similarity tile between gathered id tiles a_gid (..., A), b_gid (..., B).
+
+    ``state``, when given, is the per-point Measure state table (the
+    cached tower embeddings of a learned measure); the same clamp-gather
+    as ``masked_take`` hands the gathered state tiles to the measure so
+    only the pair head runs per pair.  ``features`` may then be None for
+    state-complete measures (the mesh wire-diet path fetches only the E
+    state columns).  ``measure_fn`` may be a ``similarity.measure.Measure``
+    or a legacy 2-arg ``(fa, fb) -> sims`` closure — the latter is only
+    ever called with ``state is None``.
+    """
+    sa = sb = None
+    if state is not None:
+        sa = jnp.take(state, jnp.maximum(a_gid, 0), axis=0)
+        sb = jnp.take(state, jnp.maximum(b_gid, 0), axis=0)
+    fa = fb = None
+    if features is not None:
+        fa = masked_take(features, a_gid)
+        fb = masked_take(features, b_gid)
+    if measure_name in ("cosine", "dot") and fa is not None \
+            and fa.dense is not None:
         # Route through the fused leader_score kernel (Pallas on TPU,
         # jnp reference on CPU): normalize+matmul+mask in one VMEM pass.
         ok_a = jnp.ones(fa.dense.shape[:-1], bool)
@@ -198,6 +234,8 @@ def _score_tile(measure_fn, features: PointFeatures,
         return kernel_ops.leader_score(
             fa.dense, fb.dense, ok_a, ok_b,
             normalized=measure_name == "cosine")
+    if sa is not None:
+        return measure_fn(fa, fb, sa, sb)
     return measure_fn(fa, fb)
 
 
@@ -261,7 +299,8 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
                    row_offset=0, total_rows: Optional[int] = None,
                    stride: int = 1,
                    member_index: Optional[jax.Array] = None,
-                   refresh_probs: Optional[jax.Array] = None):
+                   refresh_probs: Optional[jax.Array] = None,
+                   state: Optional[jax.Array] = None):
     """Stars 1 scoring: every member compares to its bucket's leader only.
 
     O(n) comparisons per repetition — the paper's quadratic->linear win.
@@ -348,7 +387,7 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
         a = head_fidx.reshape(-1, 1)
         b = fidx_c.reshape(-1, 1)
         sims = _score_tile(measure_fn, features, a, b,
-                           measure_name=cfg.measure)[:, 0, 0]
+                           measure_name=cfg.measure, state=state)[:, 0, 0]
         sims = sims.reshape(gid_c.shape).astype(jnp.float32)
         comparisons = jnp.sum(mask).astype(jnp.int32)
         emit = mask
@@ -358,16 +397,17 @@ def _rep_lsh_stars(cfg: StarsConfig, features: PointFeatures, measure_fn,
         # tera-scale emit counts never overflow a device integer
         emitted = jnp.sum(emit).astype(jnp.int32)
         return (head_gid.reshape(-1), gid_c.reshape(-1),
-                sims.reshape(-1), emit.reshape(-1), comparisons, emitted,
-                pref_ops)
+                sims.reshape(-1), emit.reshape(-1), mask.reshape(-1),
+                comparisons, emitted, pref_ops)
 
     operands = (resh(gid), resh(valid), resh(bucket), resh(fidx))
     if refresh:
         operands += (resh(keep_win),)
     outs = jax.lax.map(score_chunk, operands)
-    src, dst, wts, emit, comp_chunks, emit_chunks, pref_chunks = outs
-    src, dst, wts, emit = (x.reshape(-1) for x in (src, dst, wts, emit))
-    return dict(src=src, dst=dst, w=wts, emit=emit,
+    src, dst, wts, emit, cmp, comp_chunks, emit_chunks, pref_chunks = outs
+    src, dst, wts, emit, cmp = (
+        x.reshape(-1) for x in (src, dst, wts, emit, cmp))
+    return dict(src=src, dst=dst, w=wts, emit=emit, cmp=cmp,
                 emitted=emit_chunks,
                 comparisons=comp_chunks, prefilter_ops=pref_chunks,
                 scored_windows=_scored_rows(nw, row_offset, total_rows,
@@ -420,7 +460,8 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
                     measure_fn, prefilter, rep_index: jax.Array, *,
                     new_from: int = 0, refresh_below: int = 0,
                     refresh_fraction: float = 1.0,
-                    refresh_probs: Optional[jax.Array] = None):
+                    refresh_probs: Optional[jax.Array] = None,
+                    state: Optional[jax.Array] = None):
     """One repetition: sketch, window, score; returns the candidate stream.
 
     Returns dict with the full fixed-shape 'src','dst','w' stream plus its
@@ -452,10 +493,11 @@ def _rep_candidates(cfg: StarsConfig, features: PointFeatures,
     return _score_windows(cfg, features, measure_fn, prefilter, win, k_lead,
                           new_from=new_from, refresh_below=refresh_below,
                           refresh_fraction=refresh_fraction,
-                          k_refresh=k_refresh, refresh_probs=refresh_probs)
+                          k_refresh=k_refresh, refresh_probs=refresh_probs,
+                          state=state)
 
 
-def _score_windows(cfg: StarsConfig, features: PointFeatures,
+def _score_windows(cfg: StarsConfig, features: Optional[PointFeatures],
                    measure_fn, prefilter, win: win_lib.Windows,
                    k_lead: jax.Array, *, new_from: int = 0,
                    refresh_below: int = 0, refresh_fraction: float = 1.0,
@@ -463,8 +505,16 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
                    row_offset=0, total_rows: Optional[int] = None,
                    stride: int = 1,
                    member_index: Optional[jax.Array] = None,
-                   refresh_probs: Optional[jax.Array] = None):
+                   refresh_probs: Optional[jax.Array] = None,
+                   state: Optional[jax.Array] = None):
     """Score one repetition's windows into a masked candidate stream.
+
+    ``state`` is the per-point Measure state table (see ``_score_tile``);
+    with a state-complete measure ``features`` may be None — the mesh
+    wire-diet fetch then only ships state columns.  The generic (chunked)
+    paths additionally return ``cmp``, the flat per-lane comparison mask
+    (exactly the lanes ``comparisons`` sums), which the pair-score cache
+    consumes in the bound round program.
 
     The scoring half of :func:`_rep_candidates`, factored out so the mesh
     backend (core/builder.py ``_MeshBackend``) can feed it windows built
@@ -520,7 +570,7 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
                               k_refresh=k_refresh, row_offset=row_offset,
                               total_rows=total_rows, stride=stride,
                               member_index=member_index,
-                              refresh_probs=refresh_probs)
+                              refresh_probs=refresh_probs, state=state)
     if cfg.scoring == "stars":
         leader_slot, leader_ok = win_lib.sample_leaders(
             win, s=cfg.leaders, key=k_lead,
@@ -534,7 +584,8 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
     s = leader_slot.shape[1]
     refresh = refresh_below > 0
 
-    if (cfg.measure in ("cosine", "dot") and features.dense is not None
+    if (cfg.measure in ("cosine", "dot") and features is not None
+            and features.dense is not None
             and cfg.hamming_prefilter_bits <= 0):
         fidx = win.gid if member_index is None else member_index
         lead_fidx = jnp.take_along_axis(fidx, leader_slot, axis=1)
@@ -617,7 +668,7 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
                 prefilter[jnp.maximum(fidx_c, 0)])
             mask &= ham <= cfg.hamming_prefilter_max
         sims = _score_tile(measure_fn, features, lead_fidx, fidx_c,
-                           measure_name=cfg.measure)
+                           measure_name=cfg.measure, state=state)
         # Per-chunk int32 counts; summed on host as Python ints so tera-scale
         # comparison/emit counts never overflow a device integer.
         comparisons = jnp.sum(mask).astype(jnp.int32)
@@ -629,6 +680,7 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
         dst = jnp.broadcast_to(gid_c[:, None, :], sims.shape)
         return (src.reshape(-1), dst.reshape(-1),
                 sims.reshape(-1).astype(jnp.float32), emit.reshape(-1),
+                jnp.broadcast_to(mask, sims.shape).reshape(-1),
                 comparisons, emitted, pref_ops)
 
     operands = (resh(gid), resh(valid), resh(bucket_w), resh(fidx),
@@ -636,10 +688,11 @@ def _score_windows(cfg: StarsConfig, features: PointFeatures,
     if refresh:
         operands += (resh(keep_win),)
     outs = jax.lax.map(score_chunk, operands)
-    src, dst, wts, emit, comp_chunks, emit_chunks, pref_chunks = outs
+    src, dst, wts, emit, cmp, comp_chunks, emit_chunks, pref_chunks = outs
 
-    src, dst, wts, emit = (x.reshape(-1) for x in (src, dst, wts, emit))
-    return dict(src=src, dst=dst, w=wts, emit=emit,
+    src, dst, wts, emit, cmp = (
+        x.reshape(-1) for x in (src, dst, wts, emit, cmp))
+    return dict(src=src, dst=dst, w=wts, emit=emit, cmp=cmp,
                 emitted=emit_chunks,
                 comparisons=comp_chunks, prefilter_ops=pref_chunks,
                 scored_windows=_scored_rows(nw, row_offset, total_rows,

@@ -87,6 +87,11 @@ _BIG = jnp.int32(2**31 - 1)
 # ``feature_page_peak_bytes`` the high-water device-resident pool bytes —
 # the bounded-peak invariant (<= the configured pool budget) tests
 # assert for builds whose table exceeds device residency.
+# ``embed_page_*`` is the same metering for measure-STATE pages (the
+# cached tower embeddings of a learned measure, similarity/measure.py):
+# state pages share the one LRU pool with feature pages, so
+# ``feature_page_peak_bytes`` is the combined high-water while the
+# fault/byte traffic splits by kind.
 transfer_stats: Dict[str, int] = {"edge_fetches": 0, "bytes": 0,
                                   "checkpoint_fetches": 0,
                                   "checkpoint_bytes": 0,
@@ -100,7 +105,10 @@ transfer_stats: Dict[str, int] = {"edge_fetches": 0, "bytes": 0,
                                   "feature_page_bytes": 0,
                                   "feature_page_faults": 0,
                                   "feature_page_hits": 0,
-                                  "feature_page_peak_bytes": 0}
+                                  "feature_page_peak_bytes": 0,
+                                  "embed_page_bytes": 0,
+                                  "embed_page_faults": 0,
+                                  "embed_page_hits": 0}
 
 
 def reset_transfer_stats() -> None:

@@ -188,8 +188,10 @@ class ServeSession:
             "clusterings_served": 0, "cluster_label_bytes": 0,
             "rejections": 0, "queue_depth_hwm": 0,
             # paged-feature-store sessions: page traffic the session's
-            # absorbs drove (zero on resident stores)
+            # absorbs drove (zero on resident stores); embed_page_* is the
+            # measure-state (cached embeddings) share of that traffic
             "feature_page_bytes": 0, "feature_page_faults": 0,
+            "embed_page_bytes": 0, "embed_page_faults": 0,
         }
 
     # -- submission (any thread) ---------------------------------------- #
@@ -289,17 +291,17 @@ class ServeSession:
         for f in feats[1:]:
             merged = merged.concat(f)
         first_gid = self.builder.n
-        page_before = (acc_lib.transfer_stats["feature_page_bytes"],
-                       acc_lib.transfer_stats["feature_page_faults"])
+        page_keys = ("feature_page_bytes", "feature_page_faults",
+                     "embed_page_bytes", "embed_page_faults")
+        page_before = {k: acc_lib.transfer_stats[k] for k in page_keys}
         self.builder.extend(merged, reps=self.config.reps_per_absorb)
         with self._lock:
             self._stats["absorb_rounds"] += 1
             self._stats["extends_absorbed"] += len(batch)
             self._stats["points_absorbed"] += merged.n
-            self._stats["feature_page_bytes"] += (
-                acc_lib.transfer_stats["feature_page_bytes"] - page_before[0])
-            self._stats["feature_page_faults"] += (
-                acc_lib.transfer_stats["feature_page_faults"] - page_before[1])
+            for k in page_keys:
+                self._stats[k] += (acc_lib.transfer_stats[k]
+                                   - page_before[k])
         gid = first_gid
         for (_, _, ticket), f in zip(batch, feats):
             ticket._resolve({"first_gid": gid, "count": f.n})

@@ -7,6 +7,15 @@ from repro.similarity.measures import (
     pairwise_similarity,
 )
 from repro.similarity.learned import LearnedSimilarity, TwoTowerConfig
+from repro.similarity.measure import (
+    MEASURES,
+    CheapMeasure,
+    LearnedMeasure,
+    Measure,
+    OpaqueLearnedMeasure,
+    make_measure,
+)
+from repro.similarity.pair_cache import PairCache
 from repro.similarity.store import (
     FeatureStore,
     PagedFeatureStore,
@@ -24,6 +33,13 @@ __all__ = [
     "pairwise_similarity",
     "LearnedSimilarity",
     "TwoTowerConfig",
+    "MEASURES",
+    "CheapMeasure",
+    "LearnedMeasure",
+    "Measure",
+    "OpaqueLearnedMeasure",
+    "make_measure",
+    "PairCache",
     "FeatureStore",
     "PagedFeatureStore",
     "ResidentFeatureStore",

@@ -32,11 +32,29 @@ from repro.similarity.measures import (
 
 @dataclasses.dataclass(frozen=True)
 class TwoTowerConfig:
+    """Two-tower model shape.
+
+    ``pair_features`` picks the hand-crafted pairwise features fed to the
+    head next to the Hadamard product:
+
+      * ``"raw"``   — cosine of the raw dense rows (+ Jaccard of the sets
+        when ``use_set_features``); the paper's Appendix D.3 head, but it
+        needs the ORIGINAL features at scoring time, so cached-embedding
+        scoring still has to ship/gather raw rows.
+      * ``"embed"`` — cosine of the two tower embeddings; computable from
+        the cached per-point state alone, which makes the measure
+        "state-complete": the mesh backend can ship E floats per row
+        instead of d (the embedding-wire diet).
+      * ``"none"``  — no pairwise features (pure Hadamard head); also
+        state-complete.
+    """
+
     in_dim: int
     tower_hidden: int = 100
     embed_dim: int = 32
     head_hidden: int = 100
     use_set_features: bool = True
+    pair_features: str = "raw"
     dtype: Any = jnp.float32
 
 
@@ -66,8 +84,17 @@ class LearnedSimilarity:
     """Two-tower + Hadamard-product pairwise similarity model."""
 
     def __init__(self, cfg: TwoTowerConfig):
+        if cfg.pair_features not in ("raw", "embed", "none"):
+            raise ValueError(
+                f"TwoTowerConfig.pair_features={cfg.pair_features!r}: "
+                "expected 'raw', 'embed' or 'none'")
         self.cfg = cfg
-        self._n_pair_feats = 1 + (1 if cfg.use_set_features else 0)
+        if cfg.pair_features == "raw":
+            self._n_pair_feats = 1 + (1 if cfg.use_set_features else 0)
+        elif cfg.pair_features == "embed":
+            self._n_pair_feats = 1
+        else:
+            self._n_pair_feats = 0
 
     def init(self, key: jax.Array) -> Dict[str, jax.Array]:
         cfg = self.cfg
@@ -99,16 +126,33 @@ class LearnedSimilarity:
         x = jnp.concatenate([had, pair_feats], axis=-1)
         return _mlp_apply(params, "head", x, n_layers=3)[..., 0]
 
+    def pair_feats_from(self, fa, fb, emb_a: jax.Array,
+                        emb_b: jax.Array) -> jax.Array:
+        """Hand-crafted (..., A, B, F) pairwise features per ``cfg.pair_features``.
+
+        For ``"embed"`` / ``"none"`` the raw features are never touched
+        (``fa`` / ``fb`` may be None) — the property the mesh wire diet
+        relies on.
+        """
+        mode = self.cfg.pair_features
+        if mode == "raw":
+            feats = [cosine_pairwise(fa.dense, fb.dense)[..., None]]
+            if self.cfg.use_set_features:
+                feats.append(jaccard_pairwise(
+                    fa.set_idx, fa.set_w, fa.set_mask,
+                    fb.set_idx, fb.set_w, fb.set_mask)[..., None])
+            return jnp.concatenate(feats, axis=-1)
+        if mode == "embed":
+            return cosine_pairwise(emb_a, emb_b)[..., None]
+        batch = jnp.broadcast_shapes(emb_a.shape[:-2], emb_b.shape[:-2])
+        return jnp.zeros(batch + (emb_a.shape[-2], emb_b.shape[-2], 0),
+                         self.cfg.dtype)
+
     def pairwise(self, params, fa: PointFeatures, fb: PointFeatures) -> jax.Array:
         """Full batched pairwise scores (used as a Stars similarity measure)."""
         emb_a = self.embed(params, fa.dense)
         emb_b = self.embed(params, fb.dense)
-        feats = [cosine_pairwise(fa.dense, fb.dense)[..., None]]
-        if self.cfg.use_set_features:
-            feats.append(jaccard_pairwise(
-                fa.set_idx, fa.set_w, fa.set_mask,
-                fb.set_idx, fb.set_w, fb.set_mask)[..., None])
-        pair_feats = jnp.concatenate(feats, axis=-1)
+        pair_feats = self.pair_feats_from(fa, fb, emb_a, emb_b)
         return self.pair_score_from_embed(params, emb_a, emb_b, pair_feats)
 
     def loss(self, params, fa: PointFeatures, fb: PointFeatures,

@@ -1,0 +1,212 @@
+"""Similarity as a first-class layer: the two-phase Measure contract.
+
+The paper's headline economics (10-1000x fewer *expensive* comparisons
+for learned models, after Grale) hinge on splitting a similarity measure
+into two phases:
+
+  * ``precompute(features) -> per-point state``  — runs ONCE per point
+    per build/extend.  Identity (no state) for the closed-form measures
+    (dot/cosine/angular/jaccard/mixture); the two-tower ``embed`` for the
+    learned measure.
+  * ``score_tile(fa, fb, state_a, state_b) -> sims``  — runs once per
+    candidate tile.  Cheap measures ignore the state; the learned measure
+    only pays the small pair head on the cached embeddings.
+
+``Measure`` objects replace the bare ``(fa, fb) -> sims`` closures from
+``pairwise_similarity`` everywhere a builder scores tiles
+(core/stars.py ``_score_tile`` / ``_score_windows``, the allpairs sweep,
+and every backend in core/builder.py).  The registry ``MEASURES`` maps
+``StarsConfig.measure`` names to factories; ``make_measure`` is the one
+constructor call sites use.
+
+Three properties drive backend behavior:
+
+  * ``expensive``       — a tile evaluation runs a model; such scoring
+    is metered separately as ``expensive_comparisons`` (the paper's
+    metric) and is what the pair-score cache (similarity/pair_cache.py)
+    can skip.
+  * ``state_width``     — columns of the per-point state table (``None``
+    == stateless).  Stateful measures get their state stored alongside
+    features in the FeatureStore (resident: device table; paged: the
+    same LRU page pool, metered under ``transfer_stats['embed_page_*']``).
+  * ``state_complete``  — ``score_tile`` needs ONLY the state, no raw
+    features.  This is the mesh wire diet: the owner-keyed scoring fetch
+    ships E-float embeddings instead of d-float feature rows.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.similarity.measures import (PointFeatures, angular_pairwise,
+                                       cosine_pairwise, dot_pairwise,
+                                       jaccard_pairwise, mixture_pairwise)
+
+
+class Measure:
+    """Base contract: see the module docstring for the two phases."""
+
+    name: str = "?"
+    expensive: bool = False
+    state_width: Optional[int] = None
+    state_complete: bool = False
+
+    def fingerprint(self) -> Optional[str]:
+        """Stable digest of the measure's parameters, or None if unkeyed.
+
+        ``BuilderCheckpoint`` records it so ``GraphBuilder.restore`` can
+        reject a session resumed under different tower params instead of
+        silently emitting differently-scored edges.
+        """
+        return None
+
+    def precompute(self, features: PointFeatures) -> Optional[jax.Array]:
+        """Per-point state table (n, state_width), or None if stateless."""
+        return None
+
+    def score_tile(self, fa: Optional[PointFeatures],
+                   fb: Optional[PointFeatures],
+                   state_a: Optional[jax.Array] = None,
+                   state_b: Optional[jax.Array] = None) -> jax.Array:
+        raise NotImplementedError
+
+    def __call__(self, fa, fb, state_a=None, state_b=None) -> jax.Array:
+        return self.score_tile(fa, fb, state_a, state_b)
+
+
+class CheapMeasure(Measure):
+    """Stateless closed-form measure: score is a function of the rows."""
+
+    def __init__(self, name: str,
+                 fn: Callable[[PointFeatures, PointFeatures], jax.Array]):
+        self.name = name
+        self._fn = fn
+
+    def score_tile(self, fa, fb, state_a=None, state_b=None):
+        return self._fn(fa, fb)
+
+
+class OpaqueLearnedMeasure(Measure):
+    """Legacy ``learned_apply`` closure wrapped as a Measure.
+
+    No precompute, no state, no fingerprint: every tile pays the full
+    model, exactly the pre-Measure behavior.  Kept so callers holding a
+    bare ``(fa, fb) -> sims`` callable keep working; pass a
+    ``LearnedMeasure`` instead to get the embedding cache, the mesh wire
+    diet and the checkpoint fingerprint.
+    """
+
+    name = "learned"
+    expensive = True
+
+    def __init__(self, fn: Callable[[PointFeatures, PointFeatures], jax.Array]):
+        self._fn = fn
+
+    def score_tile(self, fa, fb, state_a=None, state_b=None):
+        return self._fn(fa, fb)
+
+
+def params_fingerprint(cfg: Any, params: Any) -> str:
+    """sha256 over a model config repr and every param leaf's raw bytes."""
+    h = hashlib.sha256()
+    h.update(repr(cfg).encode())
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    h.update(repr(treedef).encode())
+    for leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+class LearnedMeasure(Measure):
+    """Two-tower learned similarity with a cached embed phase.
+
+    ``precompute`` runs the tower once per point (the expensive half of
+    the model); ``score_tile`` then only pays the pair head on the cached
+    embeddings.  With ``TwoTowerConfig.pair_features`` in
+    ``("embed", "none")`` the tile needs no raw features at all
+    (``state_complete``), which lets the mesh backend ship E floats per
+    fetched row instead of d.
+
+    When called without state (legacy paths, the allpairs sweep) it
+    computes the embeddings inline — same scores, no cache.
+    """
+
+    name = "learned"
+    expensive = True
+
+    def __init__(self, model: Any, params: Any):
+        self.model = model
+        self.params = params
+        self.state_width = int(model.cfg.embed_dim)
+        self.state_complete = model.cfg.pair_features in ("embed", "none")
+
+    def fingerprint(self) -> str:
+        return params_fingerprint(self.model.cfg, self.params)
+
+    def precompute(self, features: PointFeatures) -> jax.Array:
+        return self.model.embed(self.params, features.dense)
+
+    def score_tile(self, fa, fb, state_a=None, state_b=None):
+        if state_a is None or state_b is None:
+            return self.model.pairwise(self.params, fa, fb)
+        pair_feats = self.model.pair_feats_from(fa, fb, state_a, state_b)
+        return self.model.pair_score_from_embed(
+            self.params, state_a, state_b, pair_feats)
+
+
+def _learned_factory(*, learned: Any = None, **_: Any) -> Measure:
+    if learned is None:
+        raise ValueError(
+            "measure='learned' requires a LearnedMeasure (or a legacy "
+            "learned_apply callable)")
+    if isinstance(learned, Measure):
+        return learned
+    return OpaqueLearnedMeasure(learned)
+
+
+# StarsConfig.measure name -> Measure factory.  Factories take keyword
+# args (alpha for mixture, learned for the learned measure) and ignore
+# the rest, so ``make_measure`` can pass everything through uniformly.
+MEASURES: Dict[str, Callable[..., Measure]] = {
+    "dot": lambda **kw: CheapMeasure(
+        "dot", lambda fa, fb: dot_pairwise(fa.dense, fb.dense)),
+    "cosine": lambda **kw: CheapMeasure(
+        "cosine", lambda fa, fb: cosine_pairwise(fa.dense, fb.dense)),
+    "angular": lambda **kw: CheapMeasure(
+        "angular", lambda fa, fb: angular_pairwise(fa.dense, fb.dense)),
+    "jaccard": lambda **kw: CheapMeasure(
+        "jaccard", lambda fa, fb: jaccard_pairwise(
+            fa.set_idx, fa.set_w, fa.set_mask,
+            fb.set_idx, fb.set_w, fb.set_mask)),
+    "mixture": lambda alpha=0.5, **kw: CheapMeasure(
+        "mixture", functools.partial(mixture_pairwise, alpha=alpha)),
+    "learned": _learned_factory,
+}
+
+
+def make_measure(measure: str, *, alpha: float = 0.5,
+                 learned: Any = None) -> Measure:
+    """Build a Measure by registry name.
+
+    ``learned`` may be a ``LearnedMeasure``, any ``Measure`` instance, or
+    a legacy ``(fa, fb) -> sims`` callable; passing it with a non-learned
+    name raises (mirroring ``pairwise_similarity``'s contract) instead of
+    silently scoring with a different function than the caller supplied.
+    """
+    if learned is not None and measure != "learned":
+        raise ValueError(
+            f"a learned measure/apply was passed with measure={measure!r}; "
+            "only measure='learned' consumes it")
+    try:
+        factory = MEASURES[measure]
+    except KeyError:
+        raise ValueError(f"unknown similarity measure: {measure!r}") from None
+    return factory(alpha=alpha, learned=learned)

@@ -109,6 +109,29 @@ def angular_pairwise(a: jax.Array, b: jax.Array) -> jax.Array:
     return 1.0 - jnp.arccos(c) / jnp.pi
 
 
+# Cap on the broadcast (..., A, B, Na, Nb) match intermediate of
+# jaccard_pairwise, in elements.  Above it the A axis is chunked so huge
+# set-measure tiles don't materialize an O(A*B*nnz_a*nnz_b) temporary in
+# one piece.  Chunking is bit-identical: every output element reduces the
+# exact same values over the exact same (-1, -2) axes regardless of how
+# the A axis is split.  Module-level so tests can monkeypatch it tiny.
+_JACCARD_MAX_BLOCK_ELEMS = 1 << 22
+
+
+def _jaccard_block(idx_a, wa, mask_a, idx_b, wb, mask_b) -> jax.Array:
+    """One unchunked Jaccard block (weights already masked to zero)."""
+    # match[..., i, j, u, v] = idx_a[..., i, u] == idx_b[..., j, v] (both valid)
+    eq = (idx_a[..., :, None, :, None] == idx_b[..., None, :, None, :])
+    eq = eq & mask_a[..., :, None, :, None] & mask_b[..., None, :, None, :]
+    # Intersection weight: sum over matched elements of min(wa, wb).
+    pair_min = jnp.minimum(wa[..., :, None, :, None], wb[..., None, :, None, :])
+    inter = jnp.sum(jnp.where(eq, pair_min, 0.0), axis=(-1, -2))
+    tot_a = jnp.sum(wa, axis=-1)[..., :, None]
+    tot_b = jnp.sum(wb, axis=-1)[..., None, :]
+    union = tot_a + tot_b - inter
+    return jnp.where(union > 0, inter / jnp.maximum(union, 1e-12), 0.0)
+
+
 def jaccard_pairwise(
     idx_a: jax.Array, w_a: jax.Array, mask_a: jax.Array,
     idx_b: jax.Array, w_b: jax.Array, mask_b: jax.Array,
@@ -120,22 +143,31 @@ def jaccard_pairwise(
 
     Computed via a broadcast index-equality match: each pair costs
     O(nnz_a * nnz_b) VPU ops, which is cheap for the small set sizes used
-    in practice (co-purchase lists, token sets).
+    in practice (co-purchase lists, token sets).  The broadcast temporary
+    is capped at ``_JACCARD_MAX_BLOCK_ELEMS`` by chunking the A axis; the
+    per-pair reductions never cross chunks, so the output is bit-identical
+    to the unchunked form.
 
     Shapes: idx_a (..., A, Na); idx_b (..., B, Nb) -> (..., A, B).
     """
     wa = jnp.where(mask_a, w_a, 0.0)
     wb = jnp.where(mask_b, w_b, 0.0)
-    # match[..., i, j, u, v] = idx_a[..., i, u] == idx_b[..., j, v] (both valid)
-    eq = (idx_a[..., :, None, :, None] == idx_b[..., None, :, None, :])
-    eq = eq & mask_a[..., :, None, :, None] & mask_b[..., None, :, None, :]
-    # Intersection weight: sum over matched elements of min(wa, wb).
-    pair_min = jnp.minimum(wa[..., :, None, :, None], wb[..., None, :, None, :])
-    inter = jnp.sum(jnp.where(eq, pair_min, 0.0), axis=(-1, -2))
-    tot_a = jnp.sum(wa, axis=-1)[..., :, None]
-    tot_b = jnp.sum(wb, axis=-1)[..., None, :]
-    union = tot_a + tot_b - inter
-    return jnp.where(union > 0, inter / jnp.maximum(union, 1e-12), 0.0)
+    a_rows = idx_a.shape[-2]
+    # Broadcast-intermediate elements contributed by ONE A row.
+    batch = 1
+    for dim in jnp.broadcast_shapes(idx_a.shape[:-2], idx_b.shape[:-2]):
+        batch *= int(dim)
+    per_row = batch * idx_b.shape[-2] * idx_a.shape[-1] * idx_b.shape[-1]
+    rows = max(1, _JACCARD_MAX_BLOCK_ELEMS // max(1, per_row))
+    if rows >= a_rows:
+        return _jaccard_block(idx_a, wa, mask_a, idx_b, wb, mask_b)
+    blocks = []
+    for lo in range(0, a_rows, rows):
+        hi = min(lo + rows, a_rows)
+        blocks.append(_jaccard_block(
+            idx_a[..., lo:hi, :], wa[..., lo:hi, :], mask_a[..., lo:hi, :],
+            idx_b, wb, mask_b))
+    return jnp.concatenate(blocks, axis=-2)
 
 
 def mixture_pairwise(fa: PointFeatures, fb: PointFeatures,
@@ -155,7 +187,17 @@ def pairwise_similarity(measure: str, *, alpha: float = 0.5,
     """Build a batched pairwise similarity function by name.
 
     Returns fn(features_a, features_b) -> (..., A, B) similarity block.
+
+    This is the legacy closure factory; similarity/measure.py wraps the
+    same functions as first-class ``Measure`` objects (registry
+    ``MEASURES``) with a precompute phase — new call sites should go
+    through ``make_measure``.
     """
+    if learned_apply is not None and measure != "learned":
+        raise ValueError(
+            f"learned_apply passed with measure={measure!r}; only "
+            "measure='learned' consumes it (silently ignoring it would "
+            "score with a different function than the caller supplied)")
     if measure == "dot":
         return lambda fa, fb: dot_pairwise(fa.dense, fb.dense)
     if measure == "cosine":

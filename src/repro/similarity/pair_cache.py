@@ -1,0 +1,112 @@
+"""Device-resident pair-score cache for expensive (learned) measures.
+
+Stars re-visits pairs: overlapping repetitions put the same (leader,
+member) pair in multiple windows, and refresh rounds re-score old-old
+pairs on purpose.  For closed-form measures that re-scoring is nearly
+free; for a learned measure every tile evaluation runs the pair head, so
+re-visits re-pay the model.  This cache remembers the score of every
+pair it has seen in a fixed-size hash-slot table keyed by
+``(gid_lo, gid_hi)`` so a re-visit costs one gather instead of a model
+evaluation *in the accounting*: the tile still computes all lanes (the
+same philosophy as the ``comparisons`` counter, which counts unmasked
+lanes even though the tile computes every lane), but the
+``expensive_comparisons`` counter — the paper's metric — only counts
+cache misses, and the cached value is what gets accumulated.
+
+Correctness contract (what makes cache-on == cache-off edge-for-edge):
+
+  * symmetric measures score bitwise-symmetrically (float multiply
+    commutes; reduction orders are fixed by the einsum), so keying on
+    the unordered pair is safe;
+  * the per-row model ops (matmul + bias + relu) are bitwise identical
+    across tile shapes on the XLA CPU backend — the same row-blocking
+    assumption the streamed sketch and paged scoring already rely on —
+    so a hit returns bit-exactly the score the tile would have computed;
+  * a slot collision simply evicts (scores are recomputable), never
+    corrupts: inserts write whole rows, so key and value always agree
+    even when several lanes of one batch hash to the same slot.
+
+A pair that appears twice in ONE lookup batch counts as two misses
+(both lanes see the pre-insert table) — a deliberate, conservative
+overcount; the duplicate writes carry bit-identical values.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Empty-slot sentinel: real gids are int32 >= 0, so a key word of
+# 0xFFFFFFFF can never match a live pair.
+_EMPTY = jnp.uint32(0xFFFFFFFF)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PairCache:
+    """Hash-slot table: (slots, 3) uint32 rows = (gid_lo, gid_hi, score bits)."""
+
+    table: jax.Array
+
+    @property
+    def slots(self) -> int:
+        return int(self.table.shape[0])
+
+
+def create(slots: int) -> PairCache:
+    """A cache with at least ``slots`` slots (rounded up to a power of two)."""
+    if slots <= 0:
+        raise ValueError(f"pair cache needs slots > 0, got {slots}")
+    size = 1 << max(1, int(slots - 1).bit_length())
+    return PairCache(table=jnp.full((size, 3), _EMPTY, jnp.uint32))
+
+
+def _hash_slot(lo: jax.Array, hi: jax.Array, size: int) -> jax.Array:
+    """murmur3-fmix-style mix of the two key words -> slot index."""
+    h = lo ^ (hi * jnp.uint32(0x9E3779B9))
+    h = (h ^ (h >> 16)) * jnp.uint32(0x85EBCA6B)
+    h = (h ^ (h >> 13)) * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return (h & jnp.uint32(size - 1)).astype(jnp.int32)
+
+
+def lookup_insert(cache: PairCache, src: jax.Array, dst: jax.Array,
+                  w: jax.Array, cmp: jax.Array):
+    """One batched lookup + insert over a flat candidate stream.
+
+    Args:
+      cache: current table.
+      src/dst: (N,) int32 gids (order-insensitive; keyed as lo/hi).
+      dst may repeat src's pairs — duplicates are handled (see module doc).
+      w: (N,) float32 freshly computed scores.
+      cmp: (N,) bool — lanes that are real comparisons (the same mask the
+        ``comparisons`` counter sums); masked lanes neither hit nor insert.
+
+    Returns ``(w_out, cache', hits, misses, evictions)`` where ``w_out``
+    takes the cached score on hits and ``w`` elsewhere, and the counters
+    are int32 scalars (``misses`` is the round's expensive-comparison
+    count; ``evictions`` counts live entries overwritten by a colliding
+    insert).
+    """
+    lo = jnp.minimum(src, dst).astype(jnp.uint32)
+    hi = jnp.maximum(src, dst).astype(jnp.uint32)
+    size = cache.slots
+    slot = _hash_slot(lo, hi, size)
+    row = cache.table[slot]
+    match = (row[:, 0] == lo) & (row[:, 1] == hi)
+    hit = cmp & match
+    cached_w = jax.lax.bitcast_convert_type(row[:, 2], w.dtype)
+    w_out = jnp.where(hit, cached_w, w)
+    miss = cmp & ~match
+    evict = miss & (row[:, 0] != _EMPTY)
+    # Whole-row scatter: non-inserting lanes are routed past the table and
+    # dropped, inserting lanes write (lo, hi, bits) atomically per row.
+    tgt = jnp.where(miss, slot, size)
+    vals = jnp.stack(
+        [lo, hi, jax.lax.bitcast_convert_type(w, jnp.uint32)], axis=-1)
+    table = cache.table.at[tgt].set(vals, mode="drop")
+    as_count = lambda m: jnp.sum(m.astype(jnp.int32))
+    return (w_out, PairCache(table=table),
+            as_count(hit), as_count(miss), as_count(evict))

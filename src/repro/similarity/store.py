@@ -76,11 +76,22 @@ class FeatureStore:
       checkpoint_view(): the logical (n, ...) PointFeatures view for
                          checkpoint/parity use (may be a HOST view for
                          out-of-core stores).
+
+    Stateful measures (similarity/measure.py) additionally store their
+    per-point state table (the cached tower embeddings of a learned
+    measure) ALONGSIDE the features, through the same store:
+      attach_state(tab):  install the (n, state_width) table.
+      gather_state(idx):  state rows at ``idx`` (-1 sentinel -> clamped or
+                          zero rows, same contract as ``gather``).
+      append_state(rows): state rows for freshly appended points
+                          (GraphBuilder.extend recomputes ONLY those).
+      state_width:        columns of the attached table, or None.
     """
 
     n: int
     d: Optional[int]
     dtype = None
+    state_width: Optional[int] = None
 
     def gather(self, idx) -> PointFeatures:
         raise NotImplementedError
@@ -89,6 +100,15 @@ class FeatureStore:
         raise NotImplementedError
 
     def checkpoint_view(self) -> PointFeatures:
+        raise NotImplementedError
+
+    def attach_state(self, table) -> None:
+        raise NotImplementedError
+
+    def gather_state(self, idx) -> jax.Array:
+        raise NotImplementedError
+
+    def append_state(self, rows) -> None:
         raise NotImplementedError
 
 
@@ -104,6 +124,7 @@ class ResidentFeatureStore(FeatureStore):
     def __init__(self, features: PointFeatures, n: Optional[int] = None):
         self._features = features
         self._n = features.n if n is None else int(n)
+        self._state: Optional[jax.Array] = None
 
     @property
     def n(self) -> int:
@@ -141,6 +162,29 @@ class ResidentFeatureStore(FeatureStore):
         self._features = features
         self._n = int(n)
 
+    # -- measure state ---------------------------------------------------- #
+    @property
+    def state_width(self) -> Optional[int]:
+        return None if self._state is None else int(self._state.shape[1])
+
+    @property
+    def state_table(self) -> Optional[jax.Array]:
+        """The device-resident (n, state_width) table, or None."""
+        return self._state
+
+    def attach_state(self, table) -> None:
+        self._state = jnp.asarray(table)
+
+    def gather_state(self, idx) -> jax.Array:
+        return jnp.take(self._state, jnp.maximum(jnp.asarray(idx), 0),
+                        axis=0)
+
+    def append_state(self, rows) -> None:
+        if self._state is None:
+            raise ValueError("append_state before attach_state")
+        self._state = jnp.concatenate(
+            [self._state, jnp.asarray(rows)], axis=0)
+
     def checkpoint_view(self) -> PointFeatures:
         f = self._features
         if f.n == self._n:
@@ -172,6 +216,14 @@ class PagedFeatureStore(FeatureStore):
       feature_page_peak_bytes: high-water device-resident pool bytes —
                                the bounded-peak claim, asserted <=
                                ``pool_bytes`` in tests.
+
+    Measure state (``attach_state`` — the cached tower embeddings of a
+    learned measure) pages through the SAME LRU pool under
+    ``("state", page)`` keys: one ``pool_bytes`` budget bounds features
+    plus embeddings together (eviction is byte-accurate across the two
+    page sizes), state traffic is metered separately under
+    ``embed_page_bytes`` / ``embed_page_faults`` / ``embed_page_hits``,
+    and ``feature_page_peak_bytes`` tracks the combined pool high-water.
     """
 
     def __init__(self, dense, *, page_rows: int = 512,
@@ -195,15 +247,23 @@ class PagedFeatureStore(FeatureStore):
                 f"feature_pool_bytes")
         self.pool_pages = max(1, self.pool_bytes // self.page_bytes)
         self._host = self._padded(dense)
-        # page id -> device page; insertion order IS recency (LRU)
-        self._pages: "collections.OrderedDict[int, jax.Array]" = \
+        # (kind, page id) -> device page; insertion order IS recency (LRU).
+        # kind is "feat" (feature pages) or "state" (measure-state pages);
+        # both share the one pool_bytes budget.
+        self._pages: "collections.OrderedDict[tuple, jax.Array]" = \
             collections.OrderedDict()
+        self._res_bytes = 0
+        self._state_host: Optional[np.ndarray] = None
+        self._state_page_bytes = 0
+        self._state_pool_pages = 0
 
-    def _padded(self, dense: np.ndarray) -> np.ndarray:
+    def _padded(self, dense: np.ndarray, width: Optional[int] = None
+                ) -> np.ndarray:
+        width = self._d if width is None else width
         pad = (-dense.shape[0]) % self.page_rows
         if pad:
             dense = np.concatenate(
-                [dense, np.zeros((pad, self._d), dense.dtype)])
+                [dense, np.zeros((pad, width), dense.dtype)])
         return np.ascontiguousarray(dense)
 
     @property
@@ -220,37 +280,50 @@ class PagedFeatureStore(FeatureStore):
 
     @property
     def resident_bytes(self) -> int:
-        """Current device-resident pool bytes (always <= pool_bytes)."""
-        return len(self._pages) * self.page_bytes
+        """Current device-resident pool bytes (always <= pool_bytes),
+        feature and state pages combined."""
+        return self._res_bytes
 
     # -- the pool -------------------------------------------------------- #
-    def _touch(self, page: int) -> None:
-        """Fault or re-use one page; evict LRU past the budget.
+    def _touch(self, kind: str, page: int) -> None:
+        """Fault or re-use one page; evict LRU until the new page fits.
 
-        Callers touch at most ``pool_pages`` DISTINCT pages between
-        evictions (``gather`` groups its page set), and a touched page
-        moves to the recent end — so the evicted LRU front is never a page
-        of the current group.
+        Callers touch at most a pool's worth of DISTINCT pages between
+        evictions (gathers group their page set by the per-kind pool
+        capacity), and a touched page moves to the recent end — so the
+        evicted LRU front is never a page of the current group.  Eviction
+        is byte-accurate: feature and state pages have different sizes
+        but drain from the one LRU order until the incoming page fits.
         """
         stats = acc_lib.transfer_stats
-        if page in self._pages:
-            self._pages.move_to_end(page)
-            stats["feature_page_hits"] += 1
+        prefix = "feature_page" if kind == "feat" else "embed_page"
+        key = (kind, page)
+        if key in self._pages:
+            self._pages.move_to_end(key)
+            stats[prefix + "_hits"] += 1
             return
-        while len(self._pages) >= self.pool_pages:  # evict BEFORE insert:
-            self._pages.popitem(last=False)         # never over budget
+        host, pbytes = (self._host, self.page_bytes) if kind == "feat" \
+            else (self._state_host, self._state_page_bytes)
+        while self._pages and self._res_bytes + pbytes > self.pool_bytes:
+            old_kind, _ = next(iter(self._pages))     # evict BEFORE insert:
+            self._pages.popitem(last=False)           # never over budget
+            self._res_bytes -= self.page_bytes if old_kind == "feat" \
+                else self._state_page_bytes
         r0 = page * self.page_rows
-        self._pages[page] = jnp.asarray(self._host[r0:r0 + self.page_rows])
-        stats["feature_page_faults"] += 1
-        stats["feature_page_bytes"] += self.page_bytes
+        self._pages[key] = jnp.asarray(host[r0:r0 + self.page_rows])
+        self._res_bytes += pbytes
+        stats[prefix + "_faults"] += 1
+        stats[prefix + "_bytes"] += pbytes
         stats["feature_page_peak_bytes"] = max(
-            stats["feature_page_peak_bytes"], self.resident_bytes)
+            stats["feature_page_peak_bytes"], self._res_bytes)
 
-    def gather(self, idx) -> PointFeatures:
+    def _gather_table(self, idx, kind: str, width: int, dtype,
+                      group_pages: int) -> jax.Array:
+        """Shared host-side page-group gather (see ``gather``)."""
         idx = np.asarray(jax.device_get(idx))
         shape = idx.shape
         flat = idx.reshape(-1).astype(np.int64)
-        out = jnp.zeros((flat.size, self._d), self._host.dtype)
+        out = jnp.zeros((flat.size, width), dtype)
         valid = np.flatnonzero(flat >= 0)
         if valid.size:
             rows = flat[valid]
@@ -259,11 +332,12 @@ class PagedFeatureStore(FeatureStore):
                                  f"range for {self._n} rows")
             pages = rows // self.page_rows
             needed = np.unique(pages)
-            for g0 in range(0, needed.size, self.pool_pages):
-                group = needed[g0:g0 + self.pool_pages]
+            for g0 in range(0, needed.size, group_pages):
+                group = needed[g0:g0 + group_pages]
                 for page in group:
-                    self._touch(int(page))
-                tbl = jnp.concatenate([self._pages[int(p)] for p in group])
+                    self._touch(kind, int(page))
+                tbl = jnp.concatenate(
+                    [self._pages[(kind, int(p))] for p in group])
                 # rows of this group, located at (rank in group, row in page)
                 rank = np.searchsorted(group, pages)
                 in_group = (rank < group.size)
@@ -273,7 +347,11 @@ class PagedFeatureStore(FeatureStore):
                        + rows[in_group] % self.page_rows)
                 out = out.at[jnp.asarray(sel)].set(
                     tbl[jnp.asarray(loc)])
-        return PointFeatures(dense=out.reshape(shape + (self._d,)))
+        return out.reshape(shape + (width,))
+
+    def gather(self, idx) -> PointFeatures:
+        return PointFeatures(dense=self._gather_table(
+            idx, "feat", self._d, self._host.dtype, self.pool_pages))
 
     def append(self, rows: PointFeatures) -> None:
         if rows.dense is None:
@@ -294,11 +372,61 @@ class PagedFeatureStore(FeatureStore):
         # drop cached pages: the old tail page changed and page ids past it
         # shifted meaning; appends are rare, so a cold pool is fine
         self._pages.clear()
+        self._res_bytes = 0
 
     def checkpoint_view(self) -> PointFeatures:
         """HOST-backed logical view (numpy; fine under jnp ops, but do not
         feed it to a device program expecting resident features)."""
         return PointFeatures(dense=self._host[:self._n])
+
+    # -- measure state ---------------------------------------------------- #
+    @property
+    def state_width(self) -> Optional[int]:
+        return None if self._state_host is None \
+            else int(self._state_host.shape[1])
+
+    def attach_state(self, table) -> None:
+        tab = np.asarray(jax.device_get(table))
+        if tab.ndim != 2 or tab.shape[0] != self._n:
+            raise ValueError(f"attach_state: shape {tab.shape} vs "
+                             f"({self._n}, state_width)")
+        width = int(tab.shape[1])
+        self._state_page_bytes = self.page_rows * width * tab.dtype.itemsize
+        if self._state_page_bytes > self.pool_bytes:
+            raise ValueError(
+                f"one state page ({self.page_rows} rows x {width} cols = "
+                f"{self._state_page_bytes} B) exceeds pool_bytes="
+                f"{self.pool_bytes}")
+        self._state_pool_pages = max(
+            1, self.pool_bytes // self._state_page_bytes)
+        self._state_host = self._padded(tab, width)
+        # state pages replace any previously attached table's pages
+        self._pages = collections.OrderedDict(
+            (k, v) for k, v in self._pages.items() if k[0] == "feat")
+        self._res_bytes = sum(
+            self.page_bytes for k in self._pages)
+
+    def gather_state(self, idx) -> jax.Array:
+        if self._state_host is None:
+            raise ValueError("gather_state before attach_state")
+        return self._gather_table(
+            idx, "state", int(self._state_host.shape[1]),
+            self._state_host.dtype, self._state_pool_pages)
+
+    def append_state(self, rows) -> None:
+        if self._state_host is None:
+            raise ValueError("append_state before attach_state")
+        new = np.asarray(jax.device_get(rows))
+        width = int(self._state_host.shape[1])
+        if new.ndim != 2 or new.shape[1] != width:
+            raise ValueError(f"append_state: shape {new.shape} vs "
+                             f"(*, {width})")
+        # note: called AFTER append() bumped self._n to include the new rows
+        self._state_host = self._padded(np.concatenate(
+            [self._state_host[:self._n - new.shape[0]],
+             new.astype(self._state_host.dtype)]), width)
+        self._pages.clear()
+        self._res_bytes = 0
 
 
 def make_feature_store(features: PointFeatures, kind: str = "resident", *,
